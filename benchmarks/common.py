@@ -1,0 +1,51 @@
+"""Shared helpers for the paper-figure benchmark suite."""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core import policies, sim
+from repro.core.dram import DDR3_1600
+
+QUICK_MIXES = ["moti1", "mix3"]
+FULL_MIXES = [f"mix{i}" for i in range(1, 13)]
+QUICK_CONFIGS = ["config1", "config3", "config4", "config7", "config10"]
+FULL_CONFIGS = [f"config{i}" for i in range(1, 11)]
+
+BASE_PARAMS = sim.SimParams(n_inputs=3, max_epochs=1500)
+
+
+def mixes(quick: bool) -> List[str]:
+    return QUICK_MIXES if quick else FULL_MIXES
+
+
+def configs(quick: bool) -> List[str]:
+    return QUICK_CONFIGS if quick else FULL_CONFIGS
+
+
+def mean_over_mixes(config: str, policy_name: str, quick: bool = True,
+                    params: Optional[sim.SimParams] = None,
+                    dram=DDR3_1600, policy=None) -> Dict[str, float]:
+    """Mean (ipc, dmr, brs) over the mix set — one paper bar."""
+    pol = policy or policies.get(policy_name)
+    rows = []
+    for mix in mixes(quick):
+        r = sim.run_cached(config, mix, pol, params or BASE_PARAMS,
+                           dram=dram)
+        rows.append(r.summary())
+    return {k: float(np.mean([r[k] for r in rows])) for k in rows[0]}
+
+
+def emit(name: str, t0: float, derived: Dict[str, float]) -> str:
+    """'name,us_per_call,derived' CSV row (harness contract)."""
+    us = (time.time() - t0) * 1e6
+    dv = ";".join(f"{k}={v:.4g}" for k, v in derived.items())
+    row = f"{name},{us:.0f},{dv}"
+    print(row, flush=True)
+    return row
+
+
+def speedup(ipc: float, base_ipc: float) -> float:
+    return ipc / max(base_ipc, 1e-9)

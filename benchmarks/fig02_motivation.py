@@ -1,0 +1,29 @@
+"""Fig. 2 — the three key motivational challenges (paper §III)."""
+import time
+
+from .common import emit, mean_over_mixes
+
+
+def run(quick: bool = True):
+    rows = []
+    cfg = "config1"
+    base = mean_over_mixes(cfg, "fifo-nb", quick)
+    # 2a: bandwidth allocation + core bypass
+    for pol in ("fifo-nb", "fifo-cs", "arp-nb", "arp-cs"):
+        t0 = time.time()
+        r = mean_over_mixes(cfg, pol, quick)
+        rows.append(emit(f"fig02a/{pol}", t0,
+                         {"speedup": r["ipc"] / base["ipc"], **r}))
+    # 2b: shared vs private reuse predictors
+    for pol in ("arp-cas", "arp-cs-as"):
+        t0 = time.time()
+        r = mean_over_mixes(cfg, pol, quick)
+        rows.append(emit(f"fig02b/{pol}", t0,
+                         {"speedup": r["ipc"] / base["ipc"], **r}))
+    # 2c: deadline awareness on top of reuse awareness
+    for pol in ("arp-cs-as", "arp-cs-as-d"):
+        t0 = time.time()
+        r = mean_over_mixes(cfg, pol, quick)
+        rows.append(emit(f"fig02c/{pol}", t0,
+                         {"speedup": r["ipc"] / base["ipc"], **r}))
+    return rows

@@ -1,0 +1,26 @@
+"""Fig. 5 — K-means feature separability: silhouette scores + 2-D PCA."""
+import time
+
+import numpy as np
+
+from repro.core import sim
+from repro.core.kmeans import pca_2d
+from .common import BASE_PARAMS, emit
+
+
+def run(quick: bool = True):
+    rows = []
+    model = sim.load_lern("config3", "full", BASE_PARAMS.subsample_target)
+    for li, lc in enumerate(model.layers):
+        if lc.features_ri.shape[0] < 16:
+            continue
+        t0 = time.time()
+        proj = pca_2d(lc.features_ri.astype(np.float64))
+        spread = float(np.linalg.norm(proj.std(0)))
+        rows.append(emit(f"fig05/config3-layer{li}", t0,
+                         {"silhouette": lc.silhouette_ri,
+                          "pca_spread": spread,
+                          "n_points": lc.features_ri.shape[0]}))
+        if quick and li >= 6:
+            break
+    return rows

@@ -1,0 +1,24 @@
+"""Fig. 6 — per-layer % of accesses in each RI / RC cluster (config3)."""
+import time
+
+from repro.core import sim
+from repro.core.lern import cluster_distribution
+from .common import BASE_PARAMS, emit
+
+
+def run(quick: bool = True):
+    rows = []
+    t0 = time.time()
+    model = sim.load_lern("config3", "full", BASE_PARAMS.subsample_target)
+    tr = sim.load_trace("config3", BASE_PARAMS.subsample_target)
+    dist = cluster_distribution(model, tr)
+    ri_names = ["immediate", "near", "far", "remote", "noreuse"]
+    rc_names = ["cold", "light", "moderate", "hot", "noreuse"]
+    n = dist["ri"].shape[0] if not quick else min(6, dist["ri"].shape[0])
+    for li in range(n):
+        rows.append(emit(
+            f"fig06/config3-layer{li}", t0,
+            {**{f"ri_{k}": v for k, v in zip(ri_names, dist["ri"][li])},
+             **{f"rc_{k}": v for k, v in zip(rc_names, dist["rc"][li])}}))
+        t0 = time.time()
+    return rows

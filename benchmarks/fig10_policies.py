@@ -1,0 +1,27 @@
+"""Fig. 10a — all policies on Config-1; 10b — per-mix breakdown."""
+import time
+
+from repro.core import policies, sim
+from .common import BASE_PARAMS, emit, mean_over_mixes, mixes
+
+POLICIES_10A = ["fifo-nb", "fifo-cs", "arp-nb", "arp-cs", "arp-cas",
+                "arp-cs-as", "arp-as", "arp-as-d", "arp-al", "arp-al-d",
+                "arp-cs-as-d", "hydra"]
+
+
+def run(quick: bool = True):
+    rows = []
+    base = mean_over_mixes("config1", "fifo-nb", quick)
+    for pol in POLICIES_10A:
+        t0 = time.time()
+        r = mean_over_mixes("config1", pol, quick)
+        rows.append(emit(f"fig10a/{pol}", t0,
+                         {"speedup": r["ipc"] / base["ipc"], **r}))
+    # 10b: HyDRA vs deadline-aware SHIP per mix
+    for mix in mixes(quick):
+        for pol in ("fifo-nb", "arp-cs-as-d", "hydra"):
+            t0 = time.time()
+            r = sim.run_cached("config1", mix, policies.get(pol),
+                               BASE_PARAMS)
+            rows.append(emit(f"fig10b/{mix}/{pol}", t0, r.summary()))
+    return rows

@@ -1,0 +1,23 @@
+"""Fig. 11 — epoch-wise accel LLC access rate vs per-epoch requirement."""
+import time
+
+import numpy as np
+
+from repro.core import policies, sim
+from .common import BASE_PARAMS, emit
+
+
+def run(quick: bool = True):
+    t0 = time.time()
+    r = sim.run_cached("config1", "mix4", policies.get("hydra"), BASE_PARAMS)
+    rate = np.array(r.history["accel_rate"])
+    req = np.array(r.history["requirement"])
+    active = rate > 0
+    return [emit("fig11/config1-mix4", t0, {
+        "epochs": r.epochs,
+        "rate_mean": float(rate[active].mean()) if active.any() else 0.0,
+        "rate_cv": float(rate[active].std() / max(rate[active].mean(), 1))
+        if active.any() else 0.0,
+        "req_mean": float(req[req > 0].mean()) if (req > 0).any() else 0.0,
+        "epochs_below_req": float(((rate < req) & active).mean()),
+    })]

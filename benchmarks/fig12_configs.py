@@ -1,0 +1,19 @@
+"""Fig. 12/13 — HyDRA vs baselines (incl. DPCP, FLASH) across configs."""
+import time
+
+from .common import configs, emit, mean_over_mixes
+
+POLICIES = ["fifo-nb", "arp-nb", "arp-as-d", "arp-cs-as-d", "hydra",
+            "arp-al-d", "dpcp", "flash"]
+
+
+def run(quick: bool = True):
+    rows = []
+    for cfg in configs(quick):
+        base = mean_over_mixes(cfg, "fifo-nb", quick)
+        for pol in POLICIES:
+            t0 = time.time()
+            r = mean_over_mixes(cfg, pol, quick)
+            rows.append(emit(f"fig12/{cfg}/{pol}", t0,
+                             {"speedup": r["ipc"] / base["ipc"], **r}))
+    return rows

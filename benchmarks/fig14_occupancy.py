@@ -1,0 +1,25 @@
+"""Fig. 14 — cache lines occupied by cores vs accelerator over time."""
+import dataclasses
+import time
+
+import numpy as np
+
+from repro.core import policies, sim
+from .common import BASE_PARAMS, emit
+
+P_OCC = dataclasses.replace(BASE_PARAMS, record_occupancy=True)
+
+
+def run(quick: bool = True):
+    rows = []
+    for pol in ("fifo-nb", "arp-nb", "arp-cs-as-d", "hydra"):
+        t0 = time.time()
+        r = sim.run_cached("config1", "mix3", policies.get(pol), P_OCC)
+        occ = np.array(r.occupancy) if r.occupancy else np.zeros((1, 2))
+        rows.append(emit(f"fig14/{pol}", t0, {
+            "core_lines_max": float(occ[:, 0].max()),
+            "accel_lines_max": float(occ[:, 1].max()),
+            "core_lines_mean": float(occ[:, 0].mean()),
+            "accel_lines_mean": float(occ[:, 1].mean()),
+            "ipc": r.ipc_total, "dmr": r.dmr}))
+    return rows

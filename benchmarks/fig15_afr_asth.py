@@ -1,0 +1,20 @@
+"""Fig. 15 — probabilistic (AFRp) and threshold (ASTht-D) baselines."""
+import time
+
+from .common import emit, mean_over_mixes
+
+POLICIES = ["arp-cs-afr0.6", "arp-cs-afr0.8", "arp-cs-asth0.3-d",
+            "arp-cs-asth0.6-d", "hydra"]
+
+
+def run(quick: bool = True):
+    rows = []
+    for cfg in (["config1", "config7"] if quick
+                else ["config1", "config3", "config7", "config10"]):
+        base = mean_over_mixes(cfg, "fifo-nb", quick)
+        for pol in POLICIES:
+            t0 = time.time()
+            r = mean_over_mixes(cfg, pol, quick)
+            rows.append(emit(f"fig15/{cfg}/{pol}", t0,
+                             {"speedup": r["ipc"] / base["ipc"], **r}))
+    return rows

@@ -1,0 +1,18 @@
+"""Fig. 17 — DDR3 / DDR4 / LPDDR5 memory models (+ HyDRA-v1 tuning)."""
+import time
+
+from repro.core.dram import MODELS
+from .common import emit, mean_over_mixes
+
+
+def run(quick: bool = True):
+    rows = []
+    for dname, dram in MODELS.items():
+        base = mean_over_mixes("config1", "fifo-nb", quick, dram=dram)
+        pols = ("fifo-nb", "arp-cs-as-d", "hydra", "hydra-v1")
+        for pol in pols:
+            t0 = time.time()
+            r = mean_over_mixes("config1", pol, quick, dram=dram)
+            rows.append(emit(f"fig17/{dname}/{pol}", t0,
+                             {"speedup": r["ipc"] / base["ipc"], **r}))
+    return rows

@@ -1,0 +1,23 @@
+"""Fig. 18 — 2-way cache partitioning for the accelerator."""
+import time
+
+from repro.core import policies
+from .common import emit, mean_over_mixes
+
+WP = (0xFFFC, 0x0003)  # cores: ways 2-15, accel: ways 0-1
+
+
+def run(quick: bool = True):
+    rows = []
+    base = mean_over_mixes("config1", "fifo-nb", quick)
+    for name in ("fifo-nb", "hydra"):
+        for wp in (False, True):
+            pol = policies.get(name)
+            if wp:
+                pol = policies.with_way_partition(pol, *WP)
+            t0 = time.time()
+            r = mean_over_mixes("config1", name, quick, policy=pol)
+            tag = f"{name}-wp" if wp else name
+            rows.append(emit(f"fig18/{tag}", t0,
+                             {"speedup": r["ipc"] / base["ipc"], **r}))
+    return rows

@@ -1,0 +1,18 @@
+"""Fig. 19 — hardware-optimized L-RPT sizes/hashes (LOptv1..v4, §VI-J)."""
+import time
+
+from repro.core import policies
+from repro.core.lrpt import VARIANTS
+from .common import emit, mean_over_mixes
+
+
+def run(quick: bool = True):
+    rows = []
+    base = mean_over_mixes("config1", "fifo-nb", quick)
+    for variant in VARIANTS:
+        pol = policies.with_lrpt(policies.get("hydra"), variant)
+        t0 = time.time()
+        r = mean_over_mixes("config1", "hydra", quick, policy=pol)
+        rows.append(emit(f"fig19/{variant}", t0,
+                         {"speedup": r["ipc"] / base["ipc"], **r}))
+    return rows

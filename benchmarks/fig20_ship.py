@@ -1,0 +1,15 @@
+"""Fig. 20 — SHIP predictor-table size study (§VI-K)."""
+import time
+
+from .common import emit, mean_over_mixes
+
+
+def run(quick: bool = True):
+    rows = []
+    base = mean_over_mixes("config1", "fifo-nb", quick)
+    for pol in ("arp-cs-as", "arp-cs-as-large", "hydra"):
+        t0 = time.time()
+        r = mean_over_mixes("config1", pol, quick)
+        rows.append(emit(f"fig20/{pol}", t0,
+                         {"speedup": r["ipc"] / base["ipc"], **r}))
+    return rows

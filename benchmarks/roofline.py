@@ -1,0 +1,80 @@
+"""§Roofline reader — assembles the per-(arch x shape x mesh) roofline
+table from the dry-run JSON records (deliverable g)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import time
+
+from repro.configs import ARCHS, SHAPES
+from .common import emit
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", ".cache",
+                          "dryrun")
+DRYRUN_OPT_DIR = DRYRUN_DIR + "_opt"
+
+
+def load_records(tag: str = "singlepod", directory: str = DRYRUN_DIR):
+    recs = {}
+    for path in glob.glob(os.path.join(directory, f"*-{tag}.json")):
+        r = json.load(open(path))
+        recs[(r["arch"], r["shape"])] = r
+    return recs
+
+
+def model_flops(rec) -> float:
+    """MODEL_FLOPS: 6·N·D (train) / 2·N_active·D (per decode token) /
+    2·N_active·D (prefill fwd)."""
+    arch, shape = rec["arch"], rec["shape"]
+    sp = SHAPES[shape]
+    n_act = rec.get("active_params", ARCHS[arch].active_param_count())
+    if sp.kind == "train":
+        return 6.0 * n_act * sp.global_batch * sp.seq_len
+    if sp.kind == "prefill":
+        return 2.0 * n_act * sp.global_batch * sp.seq_len
+    return 2.0 * n_act * sp.global_batch  # one decode token per sequence
+
+
+def table(tag: str = "singlepod", directory: str = DRYRUN_DIR):
+    recs = load_records(tag, directory)
+    rows = []
+    for (arch, shape), r in sorted(recs.items()):
+        if r["status"] != "ok":
+            rows.append({"arch": arch, "shape": shape,
+                         "status": r["status"],
+                         "reason": r.get("reason", r.get("error", ""))[:60]})
+            continue
+        t = r["roofline"]
+        mf = model_flops(r)
+        hlo = r["cost"].get("flops", 0.0) or 1.0
+        rows.append({
+            "arch": arch, "shape": shape, "status": "ok",
+            "compute_s": t["compute_s"], "memory_s": t["memory_s"],
+            "collective_s": t["collective_s"], "dominant": t["dominant"],
+            "model_flops": mf, "hlo_flops": hlo,
+            "useful_ratio": mf / hlo,
+            "roofline_frac": t["compute_s"] / max(t["bound_s"], 1e-12),
+            "fallbacks": len(r.get("fallbacks", [])),
+        })
+    return rows
+
+
+def run(quick: bool = True):
+    out = []
+    variants = [("baseline", DRYRUN_DIR)]
+    if os.path.isdir(DRYRUN_OPT_DIR):
+        variants.append(("optimized", DRYRUN_OPT_DIR))
+    for label, directory in variants:
+        for row in table("singlepod", directory):
+            t0 = time.time()
+            name = f"roofline-{label}/{row['arch']}/{row['shape']}"
+            if row["status"] != "ok":
+                out.append(emit(name, t0, {"skipped": 1.0}))
+                continue
+            out.append(emit(name, t0, {
+                "compute_s": row["compute_s"], "memory_s": row["memory_s"],
+                "collective_s": row["collective_s"],
+                "useful_ratio": row["useful_ratio"],
+                "roofline_frac": row["roofline_frac"]}))
+    return out

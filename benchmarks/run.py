@@ -1,0 +1,46 @@
+"""Benchmark harness — one module per paper table/figure (deliverable d).
+
+    PYTHONPATH=src python -m benchmarks.run [--full] [--only fig12,...]
+
+Prints ``name,us_per_call,derived`` CSV rows.  Results are disk-cached
+(.cache/sim), so repeated runs are cheap.
+"""
+import argparse
+import importlib
+import sys
+import time
+
+MODULES = [
+    "fig02_motivation", "fig05_clustering", "fig06_distribution",
+    "tab_lern_accuracy", "fig10_policies", "fig11_access_rate",
+    "fig12_configs", "fig14_occupancy", "fig15_afr_asth", "fig16_llc_sweep",
+    "fig17_ddr", "fig18_waypart", "fig19_lrpt", "fig20_ship", "tab_params",
+    "roofline",
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="all 12 mixes x 10 configs (slow)")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated module subset")
+    args = ap.parse_args()
+    mods = args.only.split(",") if args.only else MODULES
+    print("name,us_per_call,derived")
+    t0 = time.time()
+    failures = 0
+    for name in mods:
+        try:
+            mod = importlib.import_module(f"benchmarks.{name}")
+            mod.run(quick=not args.full)
+        except Exception as e:  # keep the suite going; report at the end
+            failures += 1
+            print(f"{name},0,ERROR={type(e).__name__}:{e}", flush=True)
+    print(f"# total {time.time() - t0:.0f}s, {failures} module failures",
+          flush=True)
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

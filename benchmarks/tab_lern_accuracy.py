@@ -1,0 +1,17 @@
+"""§IV-D — LERN RI-prediction accuracy per accelerator config."""
+import time
+
+from repro.core import sim
+from repro.core.lern import prediction_accuracy
+from .common import BASE_PARAMS, configs, emit
+
+
+def run(quick: bool = True):
+    rows = []
+    for cfg in configs(quick):
+        t0 = time.time()
+        model = sim.load_lern(cfg, "full", BASE_PARAMS.subsample_target)
+        tr = sim.load_trace(cfg, BASE_PARAMS.subsample_target)
+        acc = prediction_accuracy(model, tr)
+        rows.append(emit(f"lern_accuracy/{cfg}", t0, {"accuracy": acc}))
+    return rows

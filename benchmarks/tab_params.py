@@ -1,0 +1,29 @@
+"""§VI-L — parameter-selection sensitivity (margins, MR_Th, beta)."""
+import dataclasses
+import time
+
+from repro.core import policies
+from repro.core.apm import APMParams
+from .common import emit, mean_over_mixes
+
+
+def run(quick: bool = True):
+    rows = []
+    hydra = policies.get("hydra")
+    sweeps = {
+        "margin_high": [0.01, 0.05, 0.07] if quick else
+                       [0.01, 0.02, 0.03, 0.04, 0.05, 0.07],
+        "mr_threshold": [0.1, 0.3, 0.7] if quick else
+                        [0.1, 0.2, 0.3, 0.5, 0.7, 0.9],
+        "beta": [0.01, 0.05, 0.1] if quick else
+                [0.01, 0.02, 0.03, 0.05, 0.07, 0.1],
+    }
+    for field, values in sweeps.items():
+        for v in values:
+            pol = dataclasses.replace(
+                hydra, name=f"hydra-{field}{v}",
+                apm=dataclasses.replace(APMParams(), **{field: v}))
+            t0 = time.time()
+            r = mean_over_mixes("config3", "hydra", quick, policy=pol)
+            rows.append(emit(f"params/{field}={v}", t0, r))
+    return rows

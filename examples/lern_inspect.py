@@ -1,0 +1,36 @@
+"""Inspect what LERN learned for an accelerator config: cluster centers,
+distributions, silhouette, and prediction accuracy (paper §IV artifacts).
+"""
+import argparse
+import sys
+
+sys.path.insert(0, "src")
+
+import numpy as np
+
+from repro.core import sim
+from repro.core.lern import cluster_distribution, prediction_accuracy
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--config", default="config3")
+    args = ap.parse_args()
+    ss = sim.SimParams().subsample_target
+    model = sim.load_lern(args.config, "full", ss)
+    tr = sim.load_trace(args.config, ss)
+    print(f"layers: {len(model.layers)}; accesses: {tr.num_accesses}")
+    print(f"prediction accuracy (§IV-D): "
+          f"{prediction_accuracy(model, tr):.3f}")
+    dist = cluster_distribution(model, tr)
+    print("mean RI distribution [Imm, Near, Far, Remote, NoReuse]:",
+          np.round(dist["ri"].mean(0), 3))
+    print("mean RC distribution [Cold, Light, Mod, Hot, NoReuse]:",
+          np.round(dist["rc"].mean(0), 3))
+    for li, lc in enumerate(model.layers[:4]):
+        print(f"layer {li} ({tr.layer_names[li]}): sil={lc.silhouette_ri:.2f}"
+              f" rc_centers={np.round(lc.rc_centers, 1)}")
+
+
+if __name__ == "__main__":
+    main()

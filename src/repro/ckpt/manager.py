@@ -1,0 +1,121 @@
+"""Fault-tolerant checkpointing: atomic saves, integrity manifest,
+auto-resume, and **elastic resharding restore**.
+
+* Atomic: write to ``step_N.tmp/`` then fsync + rename; a crash mid-save
+  never corrupts the latest checkpoint.
+* Integrity: per-leaf SHA1 in ``manifest.json``; restore verifies.
+* Elastic: leaves are saved as *full logical arrays* (gathered); restore
+  re-shards onto whatever mesh the new job brings up (different pod/data/
+  model sizes), so jobs can scale up/down across restarts.
+* Async: ``save(..., background=True)`` snapshots to host memory and
+  writes on a worker thread — the train loop is blocked only for the
+  device->host copy.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import shutil
+import threading
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._thread: Optional[threading.Thread] = None
+
+    # -- paths ---------------------------------------------------------------
+    def _step_dir(self, step: int) -> str:
+        return os.path.join(self.dir, f"step_{step:08d}")
+
+    def latest_step(self) -> Optional[int]:
+        steps = [int(d.split("_")[1]) for d in os.listdir(self.dir)
+                 if d.startswith("step_") and not d.endswith(".tmp")]
+        return max(steps) if steps else None
+
+    # -- save ----------------------------------------------------------------
+    def save(self, step: int, tree: Any, background: bool = False) -> None:
+        self.wait()  # never two writers (same-step final + async save race)
+        host = jax.tree.map(lambda a: np.asarray(a), tree)  # D2H snapshot
+        if background:
+            self._thread = threading.Thread(
+                target=self._write, args=(step, host), daemon=True)
+            self._thread.start()
+        else:
+            self._write(step, host)
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _write(self, step: int, host_tree: Any) -> None:
+        tmp = self._step_dir(step) + ".tmp"
+        final = self._step_dir(step)
+        shutil.rmtree(tmp, ignore_errors=True)
+        os.makedirs(tmp)
+        leaves, treedef = jax.tree.flatten(host_tree)
+        manifest = {"step": step, "n_leaves": len(leaves),
+                    "treedef": str(treedef), "leaves": []}
+        for i, leaf in enumerate(leaves):
+            # raw bytes + manifest dtype: np.save round-trips bfloat16
+            # (ml_dtypes) incorrectly, so serialize explicitly
+            path = os.path.join(tmp, f"leaf_{i:05d}.bin")
+            raw = np.ascontiguousarray(leaf).tobytes()
+            with open(path, "wb") as f:
+                f.write(raw)
+            sha = hashlib.sha1(raw).hexdigest()
+            manifest["leaves"].append(
+                {"i": i, "shape": list(leaf.shape), "dtype": str(leaf.dtype),
+                 "sha1": sha})
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+            f.flush()
+            os.fsync(f.fileno())
+        shutil.rmtree(final, ignore_errors=True)
+        os.rename(tmp, final)
+        self._gc()
+
+    def _gc(self) -> None:
+        steps = sorted(s for s in (self.latest_step(),) if s is not None)
+        all_steps = sorted(int(d.split("_")[1]) for d in os.listdir(self.dir)
+                           if d.startswith("step_")
+                           and not d.endswith(".tmp"))
+        for s in all_steps[:-self.keep]:
+            shutil.rmtree(self._step_dir(s), ignore_errors=True)
+
+    # -- restore ---------------------------------------------------------------
+    def restore(self, template: Any, step: Optional[int] = None,
+                shardings: Any = None) -> Any:
+        """Restore into ``template``'s structure.  ``shardings``: optional
+        pytree of NamedSharding for elastic resharding onto a new mesh."""
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        d = self._step_dir(step)
+        with open(os.path.join(d, "manifest.json")) as f:
+            manifest = json.load(f)
+        _, treedef = jax.tree.flatten(template)
+        leaves = []
+        for meta in manifest["leaves"]:
+            path = os.path.join(d, f"leaf_{meta['i']:05d}.bin")
+            with open(path, "rb") as f:
+                raw = f.read()
+            if hashlib.sha1(raw).hexdigest() != meta["sha1"]:
+                raise IOError(f"checksum mismatch in {path}")
+            dtype = jnp.dtype(meta["dtype"])
+            leaves.append(np.frombuffer(raw, dtype=dtype).reshape(
+                meta["shape"]))
+        tree = jax.tree.unflatten(treedef, leaves)
+        if shardings is not None:
+            tree = jax.tree.map(
+                lambda a, s: jax.device_put(a, s), tree, shardings)
+        return tree

@@ -1,0 +1,47 @@
+"""Off-chip memory timing models (paper Table II + §VI-H3).
+
+Fluid (epoch-granularity) model: each model has an unloaded line latency and
+a peak line service rate (lines / system cycle @ 2 GHz); queueing delay under
+utilization rho follows an M/D/1-shaped law, capped for stability.  The
+LPDDR5 model reflects its 32B bursts (2 accesses / 64B line -> lower
+effective line rate, higher effective latency) per §VI-H3.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class DramModel:
+    name: str
+    latency_cycles: float      # unloaded access latency (system cycles)
+    peak_lines_per_cycle: float
+    efficiency: float          # sustained fraction of peak
+
+    @property
+    def rate(self) -> float:
+        return self.peak_lines_per_cycle * self.efficiency
+
+    def queue_delay(self, traffic_lines: float, window_cycles: float) -> float:
+        """Extra queueing latency per access given ``traffic_lines`` served
+        in ``window_cycles`` (M/D/1 shape, capped at 25x unloaded)."""
+        cap = self.rate * window_cycles
+        rho = min(traffic_lines / max(cap, 1e-9), 0.999)
+        w = (rho / max(2.0 * (1.0 - rho), 1e-3)) / self.rate
+        return min(w, 25.0 * self.latency_cycles)
+
+    def utilization(self, traffic_lines: float, window_cycles: float) -> float:
+        return min(traffic_lines / max(self.rate * window_cycles, 1e-9), 1.0)
+
+
+# 2 GHz system clock.  DDR3-1600 single channel 64-bit: 12.8 GB/s peak
+# = 0.1 lines/cycle;  DDR4-2400: 19.2 GB/s = 0.15;  LPDDR5-5500 x16:
+# 11 GB/s with 32B bursts -> ~0.086 lines/cycle but two bursts per line.
+DDR3_1600 = DramModel("DDR3_1600_8x8", latency_cycles=100.0,
+                      peak_lines_per_cycle=0.100, efficiency=0.70)
+DDR4_2400 = DramModel("DDR4_2400_8x8", latency_cycles=90.0,
+                      peak_lines_per_cycle=0.150, efficiency=0.70)
+LPDDR5_5500 = DramModel("LPDDR5_5500_1x16_BG_BL16", latency_cycles=130.0,
+                        peak_lines_per_cycle=0.086, efficiency=0.80)
+
+MODELS = {m.name: m for m in (DDR3_1600, DDR4_2400, LPDDR5_5500)}

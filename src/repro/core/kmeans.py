@@ -1,0 +1,163 @@
+"""K-Means clustering + semantic cluster annotation (paper §IV-C).
+
+JAX Lloyd's algorithm with k-means++ init.  The distance/assignment hot loop
+can optionally run through the Pallas TPU kernel (``repro.kernels.kmeans``);
+by default the pure-jnp path is used (identical math — the kernel is
+validated against it in tests).
+
+Annotation (paper §IV-C):
+* RC clusters: rank 1-D centers ascending -> Cold(0) Light(1) Moderate(2) Hot(3)
+* RI clusters: rank centers by expected-bin index E[c] = sum_k f_k*k / sum_k f_k
+  ascending -> Immediate(0) Near(1) Far(2) Remote(3).  This realizes the
+  paper's prose rules (dominant f1 -> Immediate; f1-with-f2 -> Near; f2/f3
+  mass -> Far; f3/f4 dominant -> Remote) as a total order, which is what the
+  bypass table consumes.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class KMeansResult(NamedTuple):
+    centers: jnp.ndarray     # [K, D] (in the normalized feature space)
+    assign: jnp.ndarray      # [N] cluster index per point
+    inertia: jnp.ndarray     # [] sum of squared distances
+    n_iter: int
+
+
+def _plus_plus_init(key, x, k):
+    """k-means++ seeding (deterministic given key)."""
+    n = x.shape[0]
+    idx0 = jax.random.randint(key, (), 0, n)
+    centers = jnp.zeros((k, x.shape[1]), x.dtype).at[0].set(x[idx0])
+
+    def body(i, carry):
+        centers, key = carry
+        key, sub = jax.random.split(key)
+        d2 = jnp.min(
+            jnp.sum((x[:, None, :] - centers[None, :, :]) ** 2, -1)
+            + jnp.where(jnp.arange(centers.shape[0]) < i, 0.0, jnp.inf)[None, :],
+            axis=1)
+        p = d2 / jnp.maximum(jnp.sum(d2), 1e-12)
+        nxt = jax.random.choice(sub, n, p=p)
+        return centers.at[i].set(x[nxt]), key
+
+    centers, _ = jax.lax.fori_loop(1, k, body, (centers, key))
+    return centers
+
+
+def assign_jnp(x: jnp.ndarray, centers: jnp.ndarray) -> jnp.ndarray:
+    """Nearest-center assignment via the ||x||^2 - 2 x.c + ||c||^2 expansion
+    (MXU-friendly matmul form; same decomposition the Pallas kernel uses)."""
+    x2 = jnp.sum(x * x, -1, keepdims=True)
+    c2 = jnp.sum(centers * centers, -1)
+    d2 = x2 - 2.0 * (x @ centers.T) + c2[None, :]
+    return jnp.argmin(d2, axis=1).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "iters", "use_kernel"))
+def kmeans_fit(x: jnp.ndarray, k: int = 4, iters: int = 50, seed: int = 0,
+               use_kernel: bool = False) -> KMeansResult:
+    """Lloyd iterations with empty-cluster re-seeding to the farthest point."""
+    key = jax.random.PRNGKey(seed)
+    centers = _plus_plus_init(key, x, k)
+    if use_kernel:
+        from repro.kernels.kmeans_assign import ops as _kops
+        assign_fn = _kops.assign
+    else:
+        assign_fn = assign_jnp
+
+    def step(carry, _):
+        centers = carry
+        a = assign_fn(x, centers)
+        one_hot = jax.nn.one_hot(a, k, dtype=x.dtype)       # [N, K]
+        counts = jnp.sum(one_hot, 0)                        # [K]
+        sums = one_hot.T @ x                                # [K, D]
+        new = sums / jnp.maximum(counts, 1.0)[:, None]
+        # re-seed empty clusters at the globally farthest point
+        d2 = jnp.sum((x[:, None, :] - centers[None, :, :]) ** 2, -1)
+        far = x[jnp.argmax(jnp.min(d2, 1))]
+        new = jnp.where((counts > 0)[:, None], new, far[None, :])
+        return new, None
+
+    centers, _ = jax.lax.scan(step, centers, None, length=iters)
+    a = assign_fn(x, centers)
+    d2 = jnp.sum((x - centers[a]) ** 2, -1)
+    return KMeansResult(centers, a, jnp.sum(d2), iters)
+
+
+def normalize(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Feature normalization for K-means (per-dim min-max; the paper
+    normalizes the RI histograms before clustering)."""
+    lo = jnp.min(x, 0)
+    hi = jnp.max(x, 0)
+    return (x - lo) / jnp.maximum(hi - lo, 1e-9), lo, hi
+
+
+def annotate_rc(centers: jnp.ndarray) -> np.ndarray:
+    """Map RC cluster index -> semantic label 0..3 (Cold..Hot) by ascending
+    center value. Returns int array label_of_cluster[K]."""
+    c = np.asarray(centers).reshape(-1)
+    order = np.argsort(c)
+    label = np.empty_like(order)
+    label[order] = np.arange(c.shape[0])
+    return label
+
+
+def annotate_ri(centers_denorm: np.ndarray) -> np.ndarray:
+    """Map RI cluster index -> semantic label 0..3 (Immediate..Remote) by the
+    expected-bin index of the de-normalized histogram center."""
+    c = np.maximum(np.asarray(centers_denorm), 0.0)
+    w = c / np.maximum(c.sum(axis=1, keepdims=True), 1e-9)
+    score = w @ np.arange(c.shape[1])
+    order = np.argsort(score)
+    label = np.empty(c.shape[0], dtype=np.int64)
+    label[order] = np.arange(c.shape[0])
+    return label
+
+
+def silhouette_score(x: np.ndarray, assign: np.ndarray,
+                     max_points: int = 2000, seed: int = 0) -> float:
+    """Mean silhouette coefficient (sampled for tractability)."""
+    x = np.asarray(x, dtype=np.float64)
+    assign = np.asarray(assign)
+    n = x.shape[0]
+    if n > max_points:
+        rng = np.random.default_rng(seed)
+        idx = rng.choice(n, max_points, replace=False)
+    else:
+        idx = np.arange(n)
+    xs, as_ = x[idx], assign[idx]
+    labels = np.unique(as_)
+    if labels.shape[0] < 2:
+        return 0.0
+    d = np.sqrt(((xs[:, None, :] - xs[None, :, :]) ** 2).sum(-1))
+    s = np.zeros(xs.shape[0])
+    for i in range(xs.shape[0]):
+        own = as_[i]
+        same = (as_ == own)
+        same[i] = False
+        a = d[i][same].mean() if same.any() else 0.0
+        b = np.inf
+        for l in labels:
+            if l == own:
+                continue
+            mask = as_ == l
+            if mask.any():
+                b = min(b, d[i][mask].mean())
+        s[i] = 0.0 if max(a, b) == 0 else (b - a) / max(a, b)
+    return float(s.mean())
+
+
+def pca_2d(x: np.ndarray) -> np.ndarray:
+    """2-D PCA projection (paper Fig. 5 feature-separability view)."""
+    x = np.asarray(x, dtype=np.float64)
+    xc = x - x.mean(0)
+    cov = xc.T @ xc / max(1, x.shape[0] - 1)
+    w, v = np.linalg.eigh(cov)
+    return xc @ v[:, np.argsort(w)[::-1][:2]]

@@ -1,0 +1,165 @@
+"""LERN — clustering-based learning & prediction of accelerator reuse
+(paper §IV).  Offline pipeline:
+
+    per-layer trace -> cache-line collapse (optionally through the L-RPT
+    hash, §VI-J) -> reuse signature -> (F_RI, F_RC) features -> two
+    K-means(k=4) -> semantic annotation -> per-line (RC_cluster, RI_cluster)
+    mapping, loaded layer-by-layer into the L-RPT at runtime.
+
+Lines with a single occurrence are assigned the No-Reuse cluster (-1, -1).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from . import kmeans as km
+from .reuse import NUM_RI_BINS, RI_BIN_EDGES, reuse_signature_np, ri_histogram_np
+from .tracegen import Trace
+
+# correct-bin sets per RI cluster label for the §IV-D accuracy metric:
+# Immediate<->{bin0}, Near<->{bin0,bin1}, Far<->{bin1,bin2}, Remote<->{bin2,bin3}
+_CORRECT_BINS = {0: (0,), 1: (0, 1), 2: (1, 2), 3: (2, 3)}
+
+
+@dataclasses.dataclass
+class LayerClusters:
+    """Offline-learnt mapping for one layer."""
+    uniq: np.ndarray         # [N] unique (possibly hashed) line addresses
+    rc_cluster: np.ndarray   # [N] 0..3 or -1 (No Reuse)
+    ri_cluster: np.ndarray   # [N] 0..3 or -1
+    rc_centers: np.ndarray   # [4] de-normalized, label-ordered (Cold..Hot)
+    ri_centers: np.ndarray   # [4, 4] de-normalized, label-ordered
+    silhouette_ri: float
+    features_ri: np.ndarray  # [N, 4] (for Fig. 5 PCA plots)
+
+
+@dataclasses.dataclass
+class LernModel:
+    """Trained LERN predictor for one (ML model x accel config)."""
+    layers: List[LayerClusters]
+    hash_fn: Optional[Callable[[np.ndarray], np.ndarray]] = None
+
+    def layer_table(self, layer_idx: int) -> Dict[int, tuple]:
+        lc = self.layers[layer_idx]
+        return {int(a): (int(rc), int(ri))
+                for a, rc, ri in zip(lc.uniq, lc.rc_cluster, lc.ri_cluster)}
+
+
+def train_layer(lines: np.ndarray, seed: int = 0) -> LayerClusters:
+    """Run the LERN pipeline on one layer's line trace."""
+    sig = reuse_signature_np(lines)
+    f_ri, f_rc = ri_histogram_np(lines, sig)
+    n = sig["uniq"].shape[0]
+    rc_cluster = np.full(n, -1, dtype=np.int64)
+    ri_cluster = np.full(n, -1, dtype=np.int64)
+    multi = f_rc > 1  # single-occurrence lines -> No Reuse
+
+    sil = 0.0
+    rc_centers = np.zeros(4)
+    ri_centers = np.zeros((4, NUM_RI_BINS))
+    if multi.sum() >= 8:  # need enough points for 4 clusters
+        # --- RC clustering (1-D) -------------------------------------------
+        xrc = jnp.asarray(np.log1p(f_rc[multi]).astype(np.float32))[:, None]
+        xn, lo, hi = km.normalize(xrc)
+        res = km.kmeans_fit(xn, k=4, seed=seed)
+        label_of = km.annotate_rc(np.asarray(res.centers))
+        rc_cluster[multi] = label_of[np.asarray(res.assign)]
+        denorm = np.asarray(res.centers) * np.asarray(hi - lo) + np.asarray(lo)
+        rc_centers = np.expm1(denorm.reshape(-1))[np.argsort(label_of)]
+        # --- RI clustering (4-D histogram, normalized) ---------------------
+        xri_raw = f_ri[multi].astype(np.float32)
+        xri = xri_raw / np.maximum(xri_raw.sum(1, keepdims=True), 1e-9)
+        res = km.kmeans_fit(jnp.asarray(xri), k=4, seed=seed)
+        assign = np.asarray(res.assign)
+        # de-normalized centers: mean raw histogram of members
+        centers_d = np.stack([
+            xri_raw[assign == c].mean(0) if (assign == c).any()
+            else np.zeros(NUM_RI_BINS) for c in range(4)])
+        label_of_ri = km.annotate_ri(centers_d)
+        ri_cluster[multi] = label_of_ri[assign]
+        ri_centers = centers_d[np.argsort(label_of_ri)]
+        sil = km.silhouette_score(xri, assign)
+
+    return LayerClusters(uniq=sig["uniq"], rc_cluster=rc_cluster,
+                         ri_cluster=ri_cluster, rc_centers=rc_centers,
+                         ri_centers=ri_centers, silhouette_ri=sil,
+                         features_ri=f_ri[multi] if multi.any()
+                         else np.zeros((0, NUM_RI_BINS)))
+
+
+def train(trace: Trace, hash_fn: Optional[Callable] = None,
+          seed: int = 0) -> LernModel:
+    """Train LERN layer-by-layer on one input-set trace.
+
+    ``hash_fn`` (paper §VI-J): when the L-RPT is smaller than the address
+    space, training runs on *hashed* addresses so the predictor internalizes
+    aliasing (LOptv1..v4)."""
+    layers = []
+    for li in range(len(trace.layer_names)):
+        mask = trace.layer == li
+        lines = trace.line[mask]
+        if hash_fn is not None:
+            lines = hash_fn(lines)
+        layers.append(train_layer(lines, seed=seed + li))
+    return LernModel(layers=layers, hash_fn=hash_fn)
+
+
+def prediction_accuracy(model: LernModel, trace: Trace) -> float:
+    """§IV-D: fraction of actual reuse intervals whose bin matches the
+    cluster's correct-bin set (No-Reuse lines: correct iff truly single)."""
+    e0, e1, e2 = RI_BIN_EDGES
+    total = 0
+    correct = 0
+    for li, lc in enumerate(model.layers):
+        mask = trace.layer == li
+        lines = trace.line[mask]
+        if model.hash_fn is not None:
+            lines = model.hash_fn(lines)
+        sig = reuse_signature_np(lines)
+        ri, inv = sig["ri"], sig["inv"]
+        # map this trace's unique set onto the trained unique set
+        pos = np.searchsorted(lc.uniq, sig["uniq"])
+        pos = np.clip(pos, 0, max(0, lc.uniq.shape[0] - 1))
+        known = (lc.uniq.shape[0] > 0) & (lc.uniq[pos] == sig["uniq"])
+        ri_cl = np.where(known, lc.ri_cluster[pos], -1)[inv]
+        valid = ri >= 0  # occurrences that have an actual next-reuse
+        bins = np.where(ri <= e0, 0, np.where(ri <= e1, 1,
+                        np.where(ri <= e2, 2, 3)))
+        for lbl, ok_bins in _CORRECT_BINS.items():
+            m = valid & (ri_cl == lbl)
+            total += int(m.sum())
+            correct += int(np.isin(bins[m], ok_bins).sum())
+        # No-Reuse predictions are correct when the line truly has no reuse:
+        m = (ri_cl == -1)
+        total += int(m.sum())
+        correct += int((ri[m] < 0).sum())
+    return correct / max(1, total)
+
+
+def cluster_distribution(model: LernModel, trace: Trace) -> Dict[str, np.ndarray]:
+    """Fig. 6: per-layer % of memory *accesses* in each RI / RC cluster."""
+    n_layers = len(model.layers)
+    ri_dist = np.zeros((n_layers, 5))  # Immediate..Remote, NoReuse
+    rc_dist = np.zeros((n_layers, 5))  # Cold..Hot, NoReuse
+    for li, lc in enumerate(model.layers):
+        mask = trace.layer == li
+        lines = trace.line[mask]
+        if model.hash_fn is not None:
+            lines = model.hash_fn(lines)
+        uniq, inv, cnt = np.unique(lines, return_inverse=True,
+                                   return_counts=True)
+        pos = np.searchsorted(lc.uniq, uniq)
+        pos = np.clip(pos, 0, max(0, lc.uniq.shape[0] - 1))
+        known = (lc.uniq.shape[0] > 0) & (lc.uniq[pos] == uniq)
+        ri_cl = np.where(known, lc.ri_cluster[pos], -1)[inv]
+        rc_cl = np.where(known, lc.rc_cluster[pos], -1)[inv]
+        for k in range(4):
+            ri_dist[li, k] = (ri_cl == k).mean()
+            rc_dist[li, k] = (rc_cl == k).mean()
+        ri_dist[li, 4] = (ri_cl == -1).mean()
+        rc_dist[li, 4] = (rc_cl == -1).mean()
+    return {"ri": ri_dist, "rc": rc_dist}

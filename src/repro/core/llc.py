@@ -1,0 +1,408 @@
+"""Vectorized set-associative shared-LLC engine with bypass paths.
+
+TPU-native formulation (DESIGN.md §2a): cache content only couples accesses
+that map to the *same set*, so the epoch's event stream is regrouped into
+"rounds" — round r holds the r-th access of every set.  A `lax.scan` over
+rounds applies one dense, fully-vectorized transition to the whole [S, W]
+state per step (gather/compare/one-hot scatter — VPU-shaped work), instead
+of a serial per-event loop.  Exactness: per-set event order is preserved, so
+hits/misses/LRU/occupancy are exact.  The only relaxation is that global
+SHIP counter updates within one round are applied as a batch (serial
+interleaving order inside a round is not reproduced); tests pin the exact
+semantics against the serial Python oracle by feeding one event per round.
+
+Bypass semantics (paper Fig. 1 / §V-C):
+* accel write request chosen for bypass  -> direct to DRAM; if the line is
+  present in the LLC, the cached copy is invalidated.
+* accel read: if present, served by the LLC regardless of the bypass
+  decision; on a miss, a bypassed *response* is not filled.
+* core read response bypass: SHIP-predicted-dead fills are not inserted.
+
+Geometry note: the simulator runs a HW_SCALE=8 scaled memory system (1 MB
+LLC standing in for the paper's 8 MB; workload footprints scaled alike) so
+a full policy-evaluation sweep runs in seconds on the CPU host.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import ship as ship_mod
+from .ship import ShipParams
+
+HW_SCALE = 8  # memory-system scale factor (sizes; rates are unscaled)
+
+# accel bypass modes (static)
+A_NONE = 0   # never bypass accelerator accesses
+A_HINT = 1   # bypass iff per-event hint (LERN clusters x epoch thresholds)
+A_SHIP = 2   # bypass iff SHIP-accel predicts dead
+A_RAND = 3   # hint carries the pre-drawn random decision (AFRp)
+
+# meta bitfield
+M_VALID = 1 << 0
+M_ACCEL = 1 << 1
+M_WRITE = 1 << 2
+M_HINT = 1 << 3
+M_PREFETCH = 1 << 4
+M_DLOK = 1 << 5      # deadline switch already passed for this event
+M_SRC_SHIFT = 8      # bits 8..10: issuing core id
+
+NUM_CORES = 8
+
+
+@dataclasses.dataclass(frozen=True)
+class LLCConfig:
+    size_bytes: int = 8 * 1024 * 1024 // HW_SCALE
+    ways: int = 16
+    line_bytes: int = 64
+    tag_cycles: int = 3
+    data_cycles: int = 9
+    # static policy knobs
+    core_bypass: bool = False          # SHIP-driven core response bypass
+    accel_mode: int = A_NONE
+    shared_predictor: bool = False     # CAS: one SHIP table for both agents
+    core_way_mask: int = 0xFFFF        # way partitioning (Fig. 18)
+    accel_way_mask: int = 0xFFFF
+    ship: ShipParams = ship_mod.SHIP_DEFAULT
+    # SHIP sampler sets: observer sets never bypass and are the only sets
+    # that train the SHCT (prevents the bypass death-spiral; standard
+    # set-sampling practice for bypass-capable SHiP variants).
+    sampler_shift: int = 5             # every 32nd set observes
+
+    @property
+    def num_sets(self) -> int:
+        return self.size_bytes // (self.line_bytes * self.ways)
+
+    @property
+    def hit_latency(self) -> int:
+        return self.tag_cycles + self.data_cycles
+
+
+class LLCState(NamedTuple):
+    tags: jnp.ndarray      # int32 [S, W], -1 = invalid
+    lru: jnp.ndarray       # int32 [S, W] last-touch tick
+    owner: jnp.ndarray     # int32 [S, W] 0 core / 1 accel
+    sig: jnp.ndarray       # int32 [S, W] inserting SHIP signature
+    reused: jnp.ndarray    # bool  [S, W]
+    tick: jnp.ndarray      # int32 [] global round tick
+    shct_core: jnp.ndarray   # int32 [T]
+    shct_accel: jnp.ndarray  # int32 [T]
+
+
+def init_state(cfg: LLCConfig) -> LLCState:
+    s, w = cfg.num_sets, cfg.ways
+    return LLCState(
+        tags=jnp.full((s, w), -1, jnp.int32),
+        lru=jnp.zeros((s, w), jnp.int32),
+        owner=jnp.zeros((s, w), jnp.int32),
+        sig=jnp.zeros((s, w), jnp.int32),
+        reused=jnp.zeros((s, w), bool),
+        tick=jnp.zeros((), jnp.int32),
+        shct_core=ship_mod.init_table(cfg.ship),
+        shct_accel=ship_mod.init_table(cfg.ship),
+    )
+
+
+STAT_NAMES = (
+    "core_hits", "core_misses", "core_bypasses",
+    "accel_hits", "accel_misses", "accel_bypasses",
+    "accel_writes_bypassed", "evictions", "prefetch_fills", "invalidations",
+)
+
+ROUND_BUCKETS = (8, 16, 32, 64, 128, 256, 512)
+
+
+def _mask_to_vec(mask: int, w: int) -> np.ndarray:
+    return np.array([(mask >> i) & 1 for i in range(w)], dtype=bool)
+
+
+def build_rounds(cfg: LLCConfig, line: np.ndarray, meta: np.ndarray,
+                 max_rounds: int = ROUND_BUCKETS[-1]):
+    """Regroup an ordered event stream into round-major [R, S] matrices.
+
+    Round r, column s = the r-th event addressed to set s (-1/0 if none).
+    R is padded up to the next bucket so the jitted scan compiles once per
+    bucket.  Hot sets with more than ``max_rounds`` events yield multiple
+    chunks, processed sequentially (per-set order is preserved; cross-set
+    interleaving is immaterial to cache content — see module docstring).
+
+    Yields (line_m, meta_m) chunk pairs."""
+    s_all = (line & (cfg.num_sets - 1)).astype(np.int64)
+    order = np.argsort(s_all, kind="stable")
+    ss = s_all[order]
+    n = line.shape[0]
+    if n == 0:
+        return
+    first = np.empty(n, dtype=bool)
+    first[0] = True
+    first[1:] = ss[1:] != ss[:-1]
+    gid = np.cumsum(first) - 1
+    grp_start = np.flatnonzero(first)
+    rank = np.arange(n) - grp_start[gid]
+    line_o = line[order].astype(np.int32)
+    meta_o = meta[order].astype(np.int32)
+    n_chunks = int(rank.max()) // max_rounds + 1
+    for c in range(n_chunks):
+        m = (rank >= c * max_rounds) & (rank < (c + 1) * max_rounds)
+        rk = rank[m] - c * max_rounds
+        r_needed = int(rk.max()) + 1
+        r_pad = next(b for b in ROUND_BUCKETS if b >= r_needed)
+        line_m = np.full((r_pad, cfg.num_sets), -1, dtype=np.int32)
+        meta_m = np.zeros((r_pad, cfg.num_sets), dtype=np.int32)
+        line_m[rk, ss[m]] = line_o[m]
+        meta_m[rk, ss[m]] = meta_o[m]
+        yield line_m, meta_m
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",),
+                   donate_argnames=("state",))
+def simulate_epoch(cfg: LLCConfig, state: LLCState, line_m: jnp.ndarray,
+                   meta_m: jnp.ndarray
+                   ) -> Tuple[LLCState, jnp.ndarray, jnp.ndarray]:
+    """Run one epoch (round-major event matrices) through the LLC.
+
+    Returns (state, stats[len(STAT_NAMES)] int32, percore[NUM_CORES, 2]
+    (hits, misses) int32)."""
+    w = cfg.ways
+    core_ways = jnp.asarray(_mask_to_vec(cfg.core_way_mask, w))
+    accel_ways = jnp.asarray(_mask_to_vec(cfg.accel_way_mask, w))
+    cmax = cfg.ship.counter_max
+    imax = jnp.iinfo(jnp.int32).max
+    wr = jnp.arange(w, dtype=jnp.int32)
+
+    sampler = (np.arange(cfg.num_sets) & ((1 << cfg.sampler_shift) - 1)) == 0
+    sampler_j = jnp.asarray(sampler)
+
+    def round_step(carry, ev):
+        st, stats, percore = carry
+        line, meta = ev                      # [S] each
+        valid = (meta & M_VALID) != 0
+        is_accel = (meta & M_ACCEL) != 0
+        write = (meta & M_WRITE) != 0
+        hint = (meta & M_HINT) != 0
+        prefetch = (meta & M_PREFETCH) != 0
+        dlok = (meta & M_DLOK) != 0
+        src = (meta >> M_SRC_SHIFT) & 0x7
+
+        hit_vec = (st.tags == line[:, None]) & (st.tags != -1)   # [S, W]
+        hit = jnp.any(hit_vec, 1) & valid
+        way_hit = jnp.argmax(hit_vec, 1)
+
+        sig_e = ship_mod.signature(line, cfg.ship)
+        tbl_accel = st.shct_core if cfg.shared_predictor else st.shct_accel
+        pred_dead_core = st.shct_core[sig_e] == 0
+        pred_dead_accel = tbl_accel[sig_e] == 0
+
+        if cfg.accel_mode == A_NONE:
+            byp_accel = jnp.zeros_like(valid)
+        elif cfg.accel_mode in (A_HINT, A_RAND):
+            byp_accel = hint
+        else:  # A_SHIP
+            byp_accel = pred_dead_accel
+        byp_accel = byp_accel & dlok
+        byp_core = pred_dead_core if cfg.core_bypass else jnp.zeros_like(valid)
+        bypass = jnp.where(is_accel, byp_accel, byp_core) & valid & ~prefetch
+        # SHIP-driven bypasses never apply in observer (sampler) sets;
+        # LERN/random hints are unaffected (offline predictions).
+        if cfg.core_bypass or cfg.accel_mode == A_SHIP:
+            ship_driven = (~is_accel) | (cfg.accel_mode == A_SHIP)
+            bypass = bypass & ~(sampler_j & ship_driven)
+
+        # --- hit path ----------------------------------------------------
+        inval = is_accel & write & bypass & hit
+        served_hit = hit & ~inval
+        # --- miss path -----------------------------------------------------
+        do_insert = (~hit) & (~bypass) & valid
+        allowed = jnp.where((is_accel | prefetch)[:, None], accel_ways[None, :],
+                            core_ways[None, :])
+        empty = (st.tags == -1) & allowed
+        has_empty = jnp.any(empty, 1)
+        first_empty = jnp.argmax(empty, 1)
+        lru_key = jnp.where(allowed, st.lru, imax)
+        victim_lru = jnp.argmin(lru_key, 1)
+        victim = jnp.where(has_empty, first_empty, victim_lru).astype(jnp.int32)
+        vic_tag = jnp.take_along_axis(st.tags, victim[:, None], 1)[:, 0]
+        vic_reused = jnp.take_along_axis(st.reused, victim[:, None], 1)[:, 0]
+        vic_sig = jnp.take_along_axis(st.sig, victim[:, None], 1)[:, 0]
+        vic_owner = jnp.take_along_axis(st.owner, victim[:, None], 1)[:, 0]
+        evict_valid = do_insert & ~has_empty & (vic_tag != -1)
+
+        # --- state update (one-hot masks over ways) ------------------------
+        tick = st.tick + 1
+        upd_way = jnp.where(served_hit, way_hit, victim)
+        onehot = upd_way[:, None] == wr[None, :]                 # [S, W]
+        ins_mask = onehot & do_insert[:, None]
+        inval_mask = (way_hit[:, None] == wr[None, :]) & inval[:, None]
+        touch_mask = onehot & (served_hit | do_insert)[:, None]
+
+        new_tags = jnp.where(inval_mask, -1,
+                             jnp.where(ins_mask, line[:, None], st.tags))
+        new_lru = jnp.where(touch_mask, tick, st.lru)
+        new_owner = jnp.where(ins_mask, is_accel[:, None].astype(jnp.int32),
+                              st.owner)
+        new_sig = jnp.where(ins_mask, sig_e[:, None], st.sig)
+        new_reused = jnp.where(onehot & (served_hit & ~prefetch)[:, None],
+                               True,
+                               jnp.where(ins_mask, False, st.reused))
+
+        # --- SHIP table updates (batched per round) -------------------------
+        hit_sig = jnp.take_along_axis(st.sig, way_hit[:, None], 1)[:, 0]
+        hit_owner = jnp.take_along_axis(st.owner, way_hit[:, None], 1)[:, 0]
+        inc = served_hit & ~prefetch & sampler_j
+        dec = evict_valid & ~vic_reused & sampler_j
+        upd_idx = jnp.where(inc, hit_sig, vic_sig)
+        delta = jnp.where(inc, 1, jnp.where(dec, -1, 0))
+        own_accel = jnp.where(inc, hit_owner, vic_owner) == 1
+        to_accel_tbl = own_accel & (not cfg.shared_predictor)
+        shct_core = jnp.clip(
+            st.shct_core.at[upd_idx].add(
+                jnp.where(to_accel_tbl, 0, delta)), 0, cmax)
+        shct_accel = jnp.clip(
+            st.shct_accel.at[upd_idx].add(
+                jnp.where(to_accel_tbl, delta, 0)), 0, cmax)
+
+        new_st = LLCState(new_tags, new_lru, new_owner, new_sig, new_reused,
+                          tick, shct_core, shct_accel)
+
+        v = valid & ~prefetch
+        ca = is_accel
+        upd = jnp.stack([
+            jnp.sum(v & ~ca & served_hit), jnp.sum(v & ~ca & ~hit),
+            jnp.sum(v & ~ca & ~hit & bypass),
+            jnp.sum(v & ca & served_hit), jnp.sum(v & ca & ~served_hit),
+            jnp.sum(v & ca & bypass & ~served_hit),
+            jnp.sum(v & ca & write & bypass), jnp.sum(evict_valid),
+            jnp.sum(valid & prefetch & do_insert), jnp.sum(inval),
+        ]).astype(jnp.int32)
+        pc_h = jnp.zeros(NUM_CORES, jnp.int32).at[src].add(
+            (v & ~ca & served_hit).astype(jnp.int32))
+        pc_m = jnp.zeros(NUM_CORES, jnp.int32).at[src].add(
+            (v & ~ca & ~hit).astype(jnp.int32))
+        return (new_st, stats + upd,
+                percore + jnp.stack([pc_h, pc_m], 1)), None
+
+    stats0 = jnp.zeros(len(STAT_NAMES), jnp.int32)
+    pc0 = jnp.zeros((NUM_CORES, 2), jnp.int32)
+    (state, stats, percore), _ = jax.lax.scan(
+        round_step, (state, stats0, pc0), (line_m, meta_m))
+    return state, stats, percore
+
+
+def occupancy(state: LLCState) -> Tuple[int, int]:
+    """(core_lines, accel_lines) currently valid (paper Fig. 14)."""
+    valid = state.tags != -1
+    accel = valid & (state.owner == 1)
+    return (int(jnp.sum(valid & ~accel)), int(jnp.sum(accel)))
+
+
+def pack_meta(is_accel, write, hint, prefetch, dlok, src) -> np.ndarray:
+    """Build the meta bitfield for build_rounds (all inputs bool/int arrays)."""
+    return (M_VALID
+            | np.where(is_accel, M_ACCEL, 0)
+            | np.where(write, M_WRITE, 0)
+            | np.where(hint, M_HINT, 0)
+            | np.where(prefetch, M_PREFETCH, 0)
+            | np.where(dlok, M_DLOK, 0)
+            | (np.asarray(src, np.int32) << M_SRC_SHIFT)).astype(np.int32)
+
+
+# ---------------------------------------------------------------------------
+# Pure-Python reference (oracle for tests) — same semantics, serial.
+# events: iterable of (line, is_accel, write, hint, prefetch, valid, src)
+# ---------------------------------------------------------------------------
+def ref_simulate(cfg: LLCConfig, events, accel_switch_point: int = -1,
+                 shct_core=None, shct_accel=None) -> Dict[str, int]:
+    S, W = cfg.num_sets, cfg.ways
+    tags = [[-1] * W for _ in range(S)]
+    lru = [[0] * W for _ in range(S)]
+    owner = [[0] * W for _ in range(S)]
+    sig = [[0] * W for _ in range(S)]
+    reused = [[False] * W for _ in range(S)]
+    tick = 0
+    cmax = cfg.ship.counter_max
+    tc = [cfg.ship.init_value] * cfg.ship.entries if shct_core is None else shct_core
+    ta = tc if cfg.shared_predictor else (
+        [cfg.ship.init_value] * cfg.ship.entries if shct_accel is None else shct_accel)
+    core_ways = _mask_to_vec(cfg.core_way_mask, W)
+    accel_ways = _mask_to_vec(cfg.accel_way_mask, W)
+    stats = {k: 0 for k in STAT_NAMES}
+    accel_seen = 0
+
+    for (line, is_accel, write, hint, prefetch, valid, *_src) in events:
+        if not valid:
+            continue
+        s = line & (S - 1)
+        is_sampler = (s & ((1 << cfg.sampler_shift) - 1)) == 0
+        hit_way = next((i for i in range(W) if tags[s][i] == line), -1)
+        hit = hit_way >= 0
+        sg = int(ship_mod.signature_np(np.array([line]), cfg.ship)[0])
+        if is_accel:
+            accel_seen += 1
+        deadline_ok = accel_seen > accel_switch_point
+        if is_accel:
+            if cfg.accel_mode == A_NONE:
+                byp = False
+            elif cfg.accel_mode in (A_HINT, A_RAND):
+                byp = bool(hint)
+            else:
+                byp = ta[sg] == 0 and not is_sampler
+            byp = byp and deadline_ok
+        else:
+            byp = cfg.core_bypass and tc[sg] == 0 and not is_sampler
+        if prefetch:
+            byp = False
+
+        tick += 1
+        inval = is_accel and write and byp and hit
+        if hit and not inval:
+            lru[s][hit_way] = tick
+            if not prefetch:
+                if is_sampler:
+                    t = tc if (owner[s][hit_way] == 0 or cfg.shared_predictor) else ta
+                    t[sig[s][hit_way]] = min(t[sig[s][hit_way]] + 1, cmax)
+                reused[s][hit_way] = True
+                if is_accel:
+                    stats["accel_hits"] += 1
+                else:
+                    stats["core_hits"] += 1
+            continue
+        if inval:
+            tags[s][hit_way] = -1
+            stats["invalidations"] += 1
+        if not prefetch:
+            if is_accel:
+                stats["accel_misses"] += 1
+                if byp:
+                    stats["accel_bypasses"] += 1
+                    if write:
+                        stats["accel_writes_bypassed"] += 1
+            else:
+                stats["core_misses"] += 1
+                if byp:
+                    stats["core_bypasses"] += 1
+        if byp:
+            continue
+        allowed = accel_ways if (is_accel or prefetch) else core_ways
+        empties = [i for i in range(W) if tags[s][i] == -1 and allowed[i]]
+        if empties:
+            v = empties[0]
+        else:
+            v = min((i for i in range(W) if allowed[i]), key=lambda i: lru[s][i])
+            if tags[s][v] != -1:
+                stats["evictions"] += 1
+                if not reused[s][v] and is_sampler:
+                    t = tc if (owner[s][v] == 0 or cfg.shared_predictor) else ta
+                    t[sig[s][v]] = max(t[sig[s][v]] - 1, 0)
+        tags[s][v] = line
+        lru[s][v] = tick
+        owner[s][v] = 1 if is_accel else 0
+        sig[s][v] = sg
+        reused[s][v] = False
+        if prefetch:
+            stats["prefetch_fills"] += 1
+    return stats

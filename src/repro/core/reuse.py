@@ -1,0 +1,115 @@
+"""Reuse Interval / Reuse Count signature extraction (paper §IV-A, Table I).
+
+Definitions (cache-line granularity):
+* occurrence positions of line c_i in the trace: r_i = (m_1 < m_2 < ... < m_Ti)
+* Reuse Interval at occurrence j:  RI_{i,j} = r_{i,j+1} - r_{i,j}; the last
+  occurrence has RI = -1.
+* Reuse Count T_i = number of occurrences of c_i (the running count at
+  position m_j is j).
+
+Two implementations: a numpy one for the offline LERN pipeline, and a JAX
+(sort-based, fixed-shape) one used by tests/property checks and by the
+vectorized feature path.  Both are oracle-tested against Table I.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import numpy as np
+
+RI_BIN_EDGES = (10, 100, 500)  # bins: [1,10], (10,100], (100,500], (500,inf)
+NUM_RI_BINS = 4
+
+
+def reuse_signature_np(lines: np.ndarray) -> Dict[str, np.ndarray]:
+    """Per-access RI (forward) and running RC, plus per-unique-line data.
+
+    Returns dict with:
+      ri        int64 [M]   forward reuse interval per access (-1 if last)
+      rc_run    int64 [M]   running occurrence count per access (1-based)
+      uniq      int64 [N]   unique line addresses (sorted)
+      inv       int64 [M]   index into uniq per access
+      count     int64 [N]   total reuse count T_i per unique line
+    """
+    lines = np.asarray(lines, dtype=np.int64)
+    m = lines.shape[0]
+    uniq, inv, count = np.unique(lines, return_inverse=True,
+                                 return_counts=True)
+    # stable sort by (line, position): positions ascending within each line
+    order = np.argsort(inv, kind="stable")
+    sorted_inv = inv[order]
+    sorted_pos = order.astype(np.int64)
+    same_next = np.empty(m, dtype=bool)
+    same_next[:-1] = sorted_inv[1:] == sorted_inv[:-1]
+    same_next[-1] = False
+    ri_sorted = np.where(same_next,
+                         np.concatenate([sorted_pos[1:], [0]]) - sorted_pos,
+                         -1)
+    ri = np.empty(m, dtype=np.int64)
+    ri[order] = ri_sorted
+    # running count: index within the line's segment (1-based)
+    seg_start = np.empty(m, dtype=bool)
+    seg_start[0] = True
+    seg_start[1:] = sorted_inv[1:] != sorted_inv[:-1]
+    seg_id = np.cumsum(seg_start) - 1
+    first_of_seg = np.flatnonzero(seg_start)
+    rc_sorted = np.arange(m, dtype=np.int64) - first_of_seg[seg_id] + 1
+    rc_run = np.empty(m, dtype=np.int64)
+    rc_run[order] = rc_sorted
+    return {"ri": ri, "rc_run": rc_run, "uniq": uniq, "inv": inv,
+            "count": count}
+
+
+def ri_histogram_np(lines: np.ndarray, sig: Dict[str, np.ndarray] = None
+                    ) -> Tuple[np.ndarray, np.ndarray]:
+    """Per-unique-line features: (F_RI [N,4] histogram, F_RC [N] counts).
+
+    The final -1 interval of each line is excluded from the histogram, per
+    Table I (c_1 RV={1,1,3,1,-1} -> F_RI={4,0,0,0})."""
+    if sig is None:
+        sig = reuse_signature_np(lines)
+    ri, inv, n = sig["ri"], sig["inv"], sig["uniq"].shape[0]
+    valid = ri >= 0
+    e0, e1, e2 = RI_BIN_EDGES
+    bin_idx = np.where(ri <= e0, 0, np.where(ri <= e1, 1,
+                       np.where(ri <= e2, 2, 3)))
+    f_ri = np.zeros((n, NUM_RI_BINS), dtype=np.int64)
+    np.add.at(f_ri, (inv[valid], bin_idx[valid]), 1)
+    return f_ri, sig["count"]
+
+
+# ----------------------------------------------------------------------------
+# JAX implementation (fixed shapes, jit-able) — used for property tests and
+# for on-accelerator feature extraction in the vectorized explorer.
+# ----------------------------------------------------------------------------
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def reuse_signature_jax(lines: jnp.ndarray) -> Dict[str, jnp.ndarray]:
+    """JAX version of per-access RI / running-RC (no unique tables)."""
+    m = lines.shape[0]
+    order = jnp.argsort(lines, stable=True)
+    sorted_lines = lines[order]
+    sorted_pos = order.astype(jnp.int32)
+    nxt = jnp.concatenate([sorted_pos[1:], jnp.array([-1], jnp.int32)])
+    same_next = jnp.concatenate(
+        [sorted_lines[1:] == sorted_lines[:-1], jnp.array([False])])
+    ri_sorted = jnp.where(same_next, nxt - sorted_pos, -1)
+    ri = jnp.zeros(m, jnp.int32).at[order].set(ri_sorted)
+
+    seg_start = jnp.concatenate(
+        [jnp.array([True]), sorted_lines[1:] != sorted_lines[:-1]])
+    idx = jnp.arange(m, dtype=jnp.int32)
+    first_of_run = jnp.maximum.accumulate(jnp.where(seg_start, idx, -1))
+    rc_sorted = idx - first_of_run + 1
+    rc_run = jnp.zeros(m, jnp.int32).at[order].set(rc_sorted)
+    return {"ri": ri, "rc_run": rc_run}
+
+
+def ri_bin(ri: jnp.ndarray) -> jnp.ndarray:
+    """Map a (non-negative) reuse interval to its bin index 0..3."""
+    e0, e1, e2 = RI_BIN_EDGES
+    return jnp.where(ri <= e0, 0,
+                     jnp.where(ri <= e1, 1, jnp.where(ri <= e2, 2, 3)))

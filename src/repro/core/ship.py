@@ -1,0 +1,63 @@
+"""SHiP-style signature-based hit predictor (baseline, paper §V-D/§VI-K).
+
+The accelerator has no PC, so (as in SHiP-Mem) the signature is a hashed
+memory *region* (16 consecutive lines).  Counter table semantics:
+
+* on LLC hit       : saturating-increment the counter of the signature that
+                     inserted the line
+* on eviction of a never-reused line : saturating-decrement its signature
+* prediction       : counter == 0  ->  dead-on-fill  ->  bypass candidate
+
+Default: 4K entries x 3-bit counters; "Large" variant (§VI-K): 128K x 8-bit.
+The update/lookup logic itself lives inside the LLC scan (llc.py); this
+module holds parameters + the signature hash.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ShipParams:
+    entries: int = 4096
+    counter_bits: int = 3
+    region_lines: int = 32  # lines per signature region
+
+    @property
+    def counter_max(self) -> int:
+        return (1 << self.counter_bits) - 1
+
+    @property
+    def init_value(self) -> int:
+        # weakly-reused initial state (mid-low), standard SHiP practice
+        return 1
+
+    @property
+    def size_bytes(self) -> int:
+        return self.entries * self.counter_bits // 8
+
+
+SHIP_DEFAULT = ShipParams()
+SHIP_LARGE = ShipParams(entries=128 * 1024, counter_bits=8)
+
+
+def signature(lines: jnp.ndarray, p: ShipParams = SHIP_DEFAULT) -> jnp.ndarray:
+    """Region signature, xor-folded into the table index space."""
+    r = (lines // p.region_lines).astype(jnp.uint32)
+    h = r ^ (r >> 7) ^ (r >> 15)
+    h = (h * jnp.uint32(0x9E3779B9))
+    return (h >> jnp.uint32(16)).astype(jnp.int32) & (p.entries - 1)
+
+
+def signature_np(lines: np.ndarray, p: ShipParams = SHIP_DEFAULT) -> np.ndarray:
+    r = (np.asarray(lines, np.int64) // p.region_lines).astype(np.uint32)
+    h = r ^ (r >> 7) ^ (r >> 15)
+    h = (h * np.uint32(0x9E3779B9)).astype(np.uint32)
+    return ((h >> 16).astype(np.int64)) & (p.entries - 1)
+
+
+def init_table(p: ShipParams = SHIP_DEFAULT) -> jnp.ndarray:
+    return jnp.full((p.entries,), p.init_value, dtype=jnp.int32)

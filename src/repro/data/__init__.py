@@ -1,0 +1,1 @@
+from .pipeline import DataPipeline, synth_corpus  # noqa: F401

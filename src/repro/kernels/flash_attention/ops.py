@@ -1,0 +1,34 @@
+"""jit'd wrapper: model-facing [B, S, H, d] GQA interface over the kernel.
+
+On non-TPU backends the kernel runs in interpret mode (correctness path);
+on TPU it compiles to Mosaic.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import flash_attention
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal",))
+def mha(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+        causal: bool = True) -> jnp.ndarray:
+    """q [B, Sq, H, d]; k, v [B, Sk, Hkv, d] -> [B, Sq, H, d]."""
+    b, sq, h, d = q.shape
+    hkv = k.shape[2]
+    rep = h // hkv
+    qf = q.transpose(0, 2, 1, 3).reshape(b * h, sq, d)
+    kf = k.transpose(0, 2, 1, 3).reshape(b * hkv, k.shape[1], d)
+    vf = v.transpose(0, 2, 1, 3).reshape(b * hkv, v.shape[1], d)
+    # GQA: map q-head grid index -> kv-head block (no materialized repeat)
+    out = flash_attention(qf, kf, vf, causal=causal,
+                          interpret=_interpret(),
+                          kv_map=lambda g: g // rep)
+    return out.reshape(b, h, sq, d).transpose(0, 2, 1, 3)

@@ -1,0 +1,44 @@
+"""K-means assignment Pallas TPU kernel (LERN's offline hot loop).
+
+Distance via the MXU-friendly decomposition ||x-c||^2 = ||x||^2 - 2 x.c
++ ||c||^2 (the x.c term is a [block_n, D] x [D, K] matmul); the ||x||^2
+term is constant per row and dropped from the argmin.  Feature dims are
+padded to the 128-lane register width by the ops wrapper; centers stay
+VMEM-resident across the grid.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, c_ref, o_ref):
+    x = x_ref[...].astype(jnp.float32)          # [block_n, D]
+    c = c_ref[...].astype(jnp.float32)          # [K, D]
+    xc = jax.lax.dot_general(x, c, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    c2 = jnp.sum(c * c, axis=1)                 # [K]
+    d2 = c2[None, :] - 2.0 * xc                 # [block_n, K]
+    o_ref[...] = jnp.argmin(d2, axis=1).astype(jnp.int32)
+
+
+def kmeans_assign(x: jnp.ndarray, centers: jnp.ndarray, *,
+                  block_n: int = 1024, interpret: bool = True) -> jnp.ndarray:
+    """x [N, D] (N % block_n == 0, D % 128 == 0 — ops pads), centers [K, D]
+    -> assignment [N] int32."""
+    n, d = x.shape
+    block_n = min(block_n, n)
+    assert n % block_n == 0, (n, block_n)
+    grid = (n // block_n,)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_n, d), lambda i: (i, 0)),
+                  pl.BlockSpec(centers.shape, lambda i: (0, 0))],
+        out_specs=pl.BlockSpec((block_n,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.int32),
+        interpret=interpret,
+    )(x, centers)

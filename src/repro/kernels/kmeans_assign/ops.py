@@ -1,0 +1,25 @@
+"""jit'd wrapper: pads N to the block size and D to the 128-lane width."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import kmeans_assign
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@jax.jit
+def assign(x: jnp.ndarray, centers: jnp.ndarray) -> jnp.ndarray:
+    """x [N, D], centers [K, D] -> [N] int32 (matches ref.assign_ref)."""
+    n, d = x.shape
+    k = centers.shape[0]
+    dp = ((d + 127) // 128) * 128
+    block_n = 1024 if n >= 1024 else max(8, n)
+    npad = ((n + block_n - 1) // block_n) * block_n
+    xp = jnp.zeros((npad, dp), x.dtype).at[:n, :d].set(x)
+    cp = jnp.zeros((k, dp), centers.dtype).at[:, :d].set(centers)
+    out = kmeans_assign(xp, cp, block_n=block_n, interpret=_interpret())
+    return out[:n]

@@ -1,0 +1,8 @@
+"""Pure-jnp oracle for the kmeans_assign kernel."""
+import jax.numpy as jnp
+
+
+def assign_ref(x: jnp.ndarray, centers: jnp.ndarray) -> jnp.ndarray:
+    d2 = jnp.sum((x[:, None, :].astype(jnp.float32)
+                  - centers[None, :, :].astype(jnp.float32)) ** 2, axis=-1)
+    return jnp.argmin(d2, axis=1).astype(jnp.int32)

@@ -1,0 +1,45 @@
+"""Reuse-interval binning Pallas TPU kernel (LERN feature extraction).
+
+Maps each reuse interval to its F_RI bin ([1,10], (10,100], (100,500],
+(500,inf); -1 = no-reuse -> bin -1) and emits per-block partial bin counts
+(summed by the ops wrapper).  Pure VPU work: vectorized compares + block
+reductions; one pass over HBM.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BIN_EDGES = (10, 100, 500)
+NUM_BINS = 4
+
+
+def _kernel(ri_ref, bin_ref, cnt_ref):
+    ri = ri_ref[...]
+    e0, e1, e2 = BIN_EDGES
+    b = jnp.where(ri <= e0, 0,
+                  jnp.where(ri <= e1, 1, jnp.where(ri <= e2, 2, 3)))
+    b = jnp.where(ri < 0, -1, b).astype(jnp.int32)
+    bin_ref[...] = b
+    for j in range(NUM_BINS):
+        cnt_ref[0, j] = jnp.sum((b == j).astype(jnp.int32))
+
+
+def ri_histogram(ri: jnp.ndarray, *, block_n: int = 4096,
+                 interpret: bool = True):
+    """ri [N] int32 -> (bin_idx [N] int32, partial_counts [grid, 4])."""
+    n = ri.shape[0]
+    block_n = min(block_n, n)
+    assert n % block_n == 0
+    grid = (n // block_n,)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_n,), lambda i: (i,))],
+        out_specs=[pl.BlockSpec((block_n,), lambda i: (i,)),
+                   pl.BlockSpec((1, NUM_BINS), lambda i: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((n,), jnp.int32),
+                   jax.ShapeDtypeStruct((grid[0], NUM_BINS), jnp.int32)],
+        interpret=interpret,
+    )(ri)

@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for the ri_histogram kernel."""
+import jax.numpy as jnp
+
+from .kernel import BIN_EDGES, NUM_BINS
+
+
+def histogram_ref(ri: jnp.ndarray):
+    e0, e1, e2 = BIN_EDGES
+    b = jnp.where(ri <= e0, 0,
+                  jnp.where(ri <= e1, 1, jnp.where(ri <= e2, 2, 3)))
+    b = jnp.where(ri < 0, -1, b).astype(jnp.int32)
+    counts = jnp.stack([jnp.sum((b == j).astype(jnp.int32))
+                        for j in range(NUM_BINS)])
+    return b, counts

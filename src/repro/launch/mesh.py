@@ -1,0 +1,20 @@
+"""Production mesh definitions (deliverable e).
+
+A FUNCTION, not a module-level constant — importing this module never
+touches jax device state (smoke tests must see 1 CPU device; only the
+dry-run sets XLA_FLAGS for 512 host devices before any jax import).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """1-device mesh for CPU smoke/integration runs (same axis names)."""
+    return jax.make_mesh((1, 1), ("data", "model"))

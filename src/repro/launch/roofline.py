@@ -1,0 +1,156 @@
+"""Roofline-term derivation from compiled dry-run artifacts (deliverable g).
+
+Hardware constants: TPU v5e — 197 TFLOP/s bf16 per chip, 819 GB/s HBM,
+~50 GB/s/link ICI (per the assignment).
+
+    compute term    = HLO_FLOPs   / (chips x peak FLOP/s)
+    memory term     = HLO_bytes   / (chips x HBM bw)
+    collective term = collective_bytes / (chips x link bw)
+
+``cost_analysis`` reports whole-program FLOPs/bytes (already per-partition
+for SPMD-partitioned modules).  collective_bytes is parsed from the
+partitioned HLO text: we sum the *result* shape bytes of every all-gather /
+all-reduce / reduce-scatter / all-to-all / collective-permute op (a ring
+all-gather moves ~result x (n-1)/n per device; we report the conservative
+result-size sum and note the convention in EXPERIMENTS.md).
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s / chip
+ICI_BW = 50e9                # bytes/s / link (per chip, one direction)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """Total bytes of 'bf16[8,128]{1,0}'-style result type(s)."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _line_collectives(line: str) -> Dict[str, int]:
+    out = {}
+    ls = line.strip()
+    eq = ls.find("= ")
+    if eq < 0:
+        return out
+    rhs = ls[eq + 2:]
+    for kind in _COLLECTIVES:
+        idx = rhs.find(" " + kind + "(")
+        if idx < 0:
+            idx = rhs.find(") " + kind + "(")  # tuple results
+            if idx < 0:
+                continue
+        if kind + "-done" in rhs:   # count the -start only
+            continue
+        out[kind] = _shape_bytes(rhs[:idx + 1])
+        break
+    return out
+
+
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->.*{?\s*$")
+_WHILE_RE = re.compile(
+    r"while\(.*?\),\s*(?:condition=%?([\w.\-]+),\s*body=%?([\w.\-]+)"
+    r"|body=%?([\w.\-]+),\s*condition=%?([\w.\-]+))")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Per-collective-kind bytes over the module, with while-loop bodies
+    multiplied by their trip count (XLA prints a loop body once; the scan
+    over layers would otherwise be undercounted by the layer count).
+
+    Trip count is recovered from the largest integer constant in the loop's
+    condition computation (the induction bound)."""
+    # --- split into computations -------------------------------------------
+    comps: Dict[str, list] = {}
+    cur = None
+    for line in hlo_text.splitlines():
+        if line and not line.startswith(" ") and "{" in line:
+            m = _COMP_RE.match(line.split("{")[0] + "")
+            if m:
+                cur = m.group(1)
+                comps[cur] = []
+                continue
+        if cur is not None:
+            comps[cur].append(line)
+
+    direct: Dict[str, Dict[str, int]] = {}
+    whiles: Dict[str, list] = {}
+    trips: Dict[str, int] = {}
+    for name, lines in comps.items():
+        d: Dict[str, int] = {}
+        w = []
+        for line in lines:
+            for k, v in _line_collectives(line).items():
+                d[k] = d.get(k, 0) + v
+            m = _WHILE_RE.search(line)
+            if m:
+                cond = m.group(1) or m.group(4)
+                body = m.group(2) or m.group(3)
+                w.append((cond, body))
+        direct[name] = d
+        whiles[name] = w
+        consts = [int(c) for line in lines for c in _CONST_RE.findall(line)]
+        trips[name] = max(consts) if consts else 1
+
+    memo: Dict[str, Dict[str, int]] = {}
+
+    def total(name: str) -> Dict[str, int]:
+        if name in memo:
+            return memo[name]
+        memo[name] = {}  # cycle guard
+        acc = dict(direct.get(name, {}))
+        for cond, body in whiles.get(name, []):
+            trip = trips.get(cond, 1)
+            for k, v in total(body).items():
+                acc[k] = acc.get(k, 0) + v * trip
+        memo[name] = acc
+        return acc
+
+    entry = next((n for n in comps if "main" in n), None)
+    if entry is None and comps:
+        entry = list(comps)[-1]
+    out = {k: 0 for k in _COLLECTIVES}
+    for k, v in (total(entry) if entry else {}).items():
+        out[k] = v
+    out["count"] = sum(1 for d in direct.values() for _ in d)
+    return out
+
+
+def roofline_terms(flops: float, bytes_accessed: float,
+                   coll_bytes_per_dev: float, n_chips: int,
+                   cost_is_global: bool = True) -> Dict[str, float]:
+    """Three roofline terms in seconds.  flops/bytes may be global
+    (unrolled pre-SPMD lowering) or per-device (compiled partitioned
+    module); collective bytes are always parsed from the per-device
+    partitioned module."""
+    div = n_chips if cost_is_global else 1
+    t_compute = flops / div / PEAK_FLOPS
+    t_memory = bytes_accessed / div / HBM_BW
+    t_coll = coll_bytes_per_dev / ICI_BW
+    dom = max(("compute", t_compute), ("memory", t_memory),
+              ("collective", t_coll), key=lambda kv: kv[1])
+    return {"compute_s": t_compute, "memory_s": t_memory,
+            "collective_s": t_coll, "dominant": dom[0],
+            "bound_s": dom[1]}

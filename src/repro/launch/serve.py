@@ -1,0 +1,40 @@
+"""Serving launcher: batched decode with the HyDRA KV-residency scheduler.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b \
+        --requests 12 [--no-hydra]
+"""
+import argparse
+
+import jax
+import numpy as np
+
+from repro.configs import get_arch
+from repro.models import lm
+from repro.serve import HydraKVScheduler, Request, ServeEngine
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-1.7b")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--no-hydra", action="store_true")
+    args = ap.parse_args()
+    cfg = get_arch(args.arch).reduced()
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    sched = None if args.no_hydra else HydraKVScheduler(
+        token_budget=4096, deadline_tokens=args.max_new * 8)
+    eng = ServeEngine(cfg, params, slots=args.slots, s_max=128,
+                      scheduler=sched)
+    rng = np.random.default_rng(0)
+    reqs = [Request(session_id=i, prompt=[1, 2, 3], max_new=args.max_new,
+                    deadline_steps=args.max_new * 20,
+                    arrival=int(rng.integers(0, 32)))
+            for i in range(args.requests)]
+    out = eng.run(reqs, max_steps=4000)
+    print(out)
+
+
+if __name__ == "__main__":
+    main()

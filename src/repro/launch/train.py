@@ -1,0 +1,39 @@
+"""Training launcher: real end-to-end run on the host devices.
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen3-1.7b \
+        --reduced --steps 100 --ckpt /tmp/ck
+
+Uses the reduced config by default (CPU host); on a TPU fleet the same
+entry point runs the full config with the dry-run's sharding rules.
+"""
+import argparse
+
+from repro.configs import get_arch
+from repro.data import DataPipeline
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-1.7b")
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--ckpt", default="/tmp/repro_train")
+    ap.add_argument("--lr", type=float, default=1e-3)
+    args = ap.parse_args()
+    cfg = get_arch(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    pipe = DataPipeline(vocab=cfg.vocab, seq_len=args.seq,
+                        global_batch=args.batch)
+    tcfg = TrainerConfig(steps=args.steps, ckpt_every=50, log_every=10,
+                         ckpt_dir=args.ckpt, lr_peak=args.lr, lr_warmup=20)
+    res = Trainer(cfg, tcfg, pipe).run()
+    print(f"done: final loss {res['final_loss']:.4f}, "
+          f"{res['steps_run']} steps")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,8 @@
+"""Composable JAX model zoo for the assigned architectures (DESIGN.md §4).
+
+Pure-functional: params are plain pytrees (nested dicts of jnp arrays),
+layers are stacked along a leading axis and executed with lax.scan so HLO
+size / compile time is O(1) in depth — a requirement for 56-layer dry-runs
+on the CPU host and for compile-time sanity at 1000-node scale.
+"""
+from . import attention, layers, lm, moe, ssm  # noqa: F401

@@ -1,0 +1,186 @@
+"""GQA attention with causal / sliding-window masks and decode KV cache."""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .layers import _init, apply_rope, rmsnorm
+
+Params = Dict[str, jnp.ndarray]
+
+# use the chunked online-softmax path for sequences >= this (0 = off);
+# launchers enable it for long-context shapes (§Perf hillclimb D)
+CHUNKED_SEQ = 8192
+
+
+def attention_init(key, d: int, n_heads: int, n_kv: int, d_head: int,
+                   qk_norm: bool = False) -> Params:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p = {"wq": _init(k1, (d, n_heads * d_head)),
+         "wk": _init(k2, (d, n_kv * d_head)),
+         "wv": _init(k3, (d, n_kv * d_head)),
+         "wo": _init(k4, (n_heads * d_head, d))}
+    if qk_norm:
+        p["q_norm"] = jnp.ones((d_head,), jnp.float32)
+        p["k_norm"] = jnp.ones((d_head,), jnp.float32)
+    return p
+
+
+class KVCache(NamedTuple):
+    k: jnp.ndarray        # [B, S_max, n_kv, d_head]
+    v: jnp.ndarray        # [B, S_max, n_kv, d_head]
+    length: jnp.ndarray   # [] int32 — tokens currently cached
+
+
+def _qkv(p: Params, x, n_heads, n_kv, d_head, positions, rope_theta):
+    b, s, _ = x.shape
+    q = (x @ p["wq"]).reshape(b, s, n_heads, d_head)
+    k = (x @ p["wk"]).reshape(b, s, n_kv, d_head)
+    v = (x @ p["wv"]).reshape(b, s, n_kv, d_head)
+    if "q_norm" in p:  # qwen3-style per-head qk RMSNorm
+        q = rmsnorm({"scale": p["q_norm"]}, q)
+        k = rmsnorm({"scale": p["k_norm"]}, k)
+    if rope_theta:
+        q = apply_rope(q, positions, rope_theta)
+        k = apply_rope(k, positions, rope_theta)
+    return q, k, v
+
+
+def _sdpa(q, k, v, mask, n_rep):
+    """q [B,Sq,H,hd]; k,v [B,Sk,Hkv,hd]; mask [Sq,Sk] or [B,Sq,Sk] bool."""
+    scale = q.shape[-1] ** -0.5
+    if n_rep > 1:
+        k = jnp.repeat(k, n_rep, axis=2)
+        v = jnp.repeat(v, n_rep, axis=2)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * scale
+    if mask.ndim == 2:
+        mask = mask[None, None, :, :]
+    else:
+        mask = mask[:, None, :, :]
+    logits = jnp.where(mask, logits, jnp.finfo(jnp.float32).min)
+    w = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", w, v)
+
+
+def _sdpa_chunked(q, k, v, n_rep, *, causal=True, chunk=1024,
+                  window=None):
+    """Online-softmax attention over KV chunks (pure-jnp flash: the same
+    tiling the Pallas kernel uses, expressed so XLA fuses it — §Perf
+    hillclimb D).  Peak memory O(Sq x chunk) instead of O(Sq x Sk).
+    ``window``: sliding-window (SWA) banding applied inside the chunk mask.
+    q [B,Sq,H,hd]; k,v [B,Sk,Hkv,hd]."""
+    b, sq, h, hd = q.shape
+    sk = k.shape[1]
+    chunk = min(chunk, sk)
+    if sk % chunk != 0:
+        chunk = sk
+    n = sk // chunk
+    if n_rep > 1:
+        k = jnp.repeat(k, n_rep, axis=2)
+        v = jnp.repeat(v, n_rep, axis=2)
+    scale = hd ** -0.5
+    qf = q.astype(jnp.float32)
+    kc = jnp.moveaxis(k.reshape(b, n, chunk, h, hd), 1, 0)
+    vc = jnp.moveaxis(v.reshape(b, n, chunk, h, hd), 1, 0)
+    rows = jnp.arange(sq)[:, None]
+
+    def body(carry, inp):
+        m, l, acc, ci = carry
+        kb, vb = inp
+        s = jnp.einsum("bqhd,bkhd->bhqk", qf, kb.astype(jnp.float32)
+                       ) * scale
+        if causal:
+            cols = ci * chunk + jnp.arange(chunk)[None, :]
+            band = rows >= cols
+            if window is not None:
+                band = band & (rows - cols < window)
+            s = jnp.where(band[None, None], s, -1e30)
+        m_new = jnp.maximum(m, jnp.max(s, -1))
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l = l * alpha + jnp.sum(p, -1)
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bhqk,bkhd->bhqd", p, vb.astype(jnp.float32))
+        return (m_new, l, acc, ci + 1), None
+
+    m0 = jnp.full((b, h, sq), -1e30, jnp.float32)
+    l0 = jnp.zeros((b, h, sq), jnp.float32)
+    a0 = jnp.zeros((b, h, sq, hd), jnp.float32)
+    (m, l, acc, _), _ = jax.lax.scan(
+        body, (m0, l0, a0, jnp.zeros((), jnp.int32)), (kc, vc))
+    out = acc / jnp.maximum(l, 1e-20)[..., None]
+    return jnp.moveaxis(out, 1, 2).astype(q.dtype)
+
+
+def causal_mask(s: int, window: Optional[int] = None) -> jnp.ndarray:
+    i = jnp.arange(s)[:, None]
+    j = jnp.arange(s)[None, :]
+    m = j <= i
+    if window is not None:
+        m = m & (j > i - window)
+    return m
+
+
+def attention(p: Params, x: jnp.ndarray, *, n_heads: int, n_kv: int,
+              d_head: int, causal: bool = True,
+              window: Optional[int] = None, rope_theta: float = 10000.0,
+              cross_kv: Optional[tuple] = None,
+              use_flash: bool = False) -> jnp.ndarray:
+    """Full-sequence attention (training / prefill).
+
+    cross_kv: optional (k, v) from an encoder for cross-attention
+    (rope/causality disabled on the cross path)."""
+    b, s, _ = x.shape
+    positions = jnp.arange(s)[None, :]
+    if cross_kv is not None:
+        q = (x @ p["wq"]).reshape(b, s, n_heads, d_head)
+        k, v = cross_kv
+        mask = jnp.ones((s, k.shape[1]), bool)
+        out = _sdpa(q, k, v, mask, n_heads // k.shape[2])
+    else:
+        q, k, v = _qkv(p, x, n_heads, n_kv, d_head, positions, rope_theta)
+        if use_flash and causal and window is None:
+            from repro.kernels.flash_attention import ops as flash_ops
+            out = flash_ops.mha(q, k, v, causal=True)
+        elif CHUNKED_SEQ and s >= CHUNKED_SEQ and causal:
+            out = _sdpa_chunked(q, k, v, n_heads // n_kv, window=window)
+        else:
+            mask = causal_mask(s, window) if causal else jnp.ones((s, s), bool)
+            out = _sdpa(q, k, v, mask, n_heads // n_kv)
+    return out.reshape(b, s, n_heads * d_head) @ p["wo"]
+
+
+def init_cache(batch: int, s_max: int, n_kv: int, d_head: int,
+               dtype=jnp.bfloat16) -> KVCache:
+    return KVCache(k=jnp.zeros((batch, s_max, n_kv, d_head), dtype),
+                   v=jnp.zeros((batch, s_max, n_kv, d_head), dtype),
+                   length=jnp.zeros((), jnp.int32))
+
+
+def decode_step(p: Params, x: jnp.ndarray, cache: KVCache, *, n_heads: int,
+                n_kv: int, d_head: int, window: Optional[int] = None,
+                rope_theta: float = 10000.0) -> tuple:
+    """One-token decode: x [B, 1, d]; returns (out [B,1,d], new cache).
+
+    With a sliding window the cache is a ring buffer of size ``window``
+    (positions wrap; the mask keeps only the last ``window`` tokens)."""
+    b = x.shape[0]
+    s_max = cache.k.shape[1]
+    pos = cache.length
+    positions = jnp.full((b, 1), pos, jnp.int32)
+    q, k, v = _qkv(p, x, n_heads, n_kv, d_head, positions, rope_theta)
+    slot = jnp.where(jnp.asarray(window is not None), pos % s_max,
+                     jnp.minimum(pos, s_max - 1))
+    ck = jax.lax.dynamic_update_slice(cache.k, k, (0, slot, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cache.v, v, (0, slot, 0, 0))
+    idx = jnp.arange(s_max)
+    if window is None:
+        valid = idx <= pos
+    else:
+        valid = (idx <= pos) | (pos >= s_max)  # ring buffer: all slots live
+    mask = valid[None, None, :]                # [B, 1, S_max]
+    out = _sdpa(q, ck, cv, mask, n_heads // n_kv)
+    out = out.reshape(b, 1, n_heads * d_head) @ p["wo"]
+    return out, KVCache(ck, cv, pos + 1)

@@ -1,0 +1,99 @@
+"""Basic layers: norms, RoPE, embeddings, MLPs (pure functions + init)."""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Params = Dict[str, jnp.ndarray]
+
+
+def _init(key, shape, scale=None, dtype=jnp.bfloat16):
+    scale = scale if scale is not None else 1.0 / np.sqrt(shape[0])
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+# --- norms -------------------------------------------------------------------
+def rmsnorm_init(d: int) -> Params:
+    return {"scale": jnp.ones((d,), jnp.float32)}
+
+
+def rmsnorm(p: Params, x: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return ((xf * jax.lax.rsqrt(var + eps)) * p["scale"]).astype(x.dtype)
+
+
+def layernorm_init(d: int) -> Params:
+    return {"scale": jnp.ones((d,), jnp.float32),
+            "bias": jnp.zeros((d,), jnp.float32)}
+
+
+def layernorm(p: Params, x: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, -1, keepdims=True)
+    var = jnp.var(xf, -1, keepdims=True)
+    return ((xf - mu) * jax.lax.rsqrt(var + eps) * p["scale"]
+            + p["bias"]).astype(x.dtype)
+
+
+# --- rotary embeddings -------------------------------------------------------
+def rope_freqs(d_head: int, theta: float = 10000.0) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, d_head, 2, dtype=jnp.float32)
+                            / d_head))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray,
+               theta: float = 10000.0) -> jnp.ndarray:
+    """x: [..., seq, heads, d_head]; positions: [..., seq]."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                      # [d/2]
+    ang = positions[..., :, None].astype(jnp.float32) * freqs  # [..., s, d/2]
+    cos = jnp.cos(ang)[..., :, None, :]
+    sin = jnp.sin(ang)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return out.astype(x.dtype)
+
+
+# --- embedding / unembedding -------------------------------------------------
+def embedding_init(key, vocab: int, d: int) -> Params:
+    return {"table": _init(key, (vocab, d), scale=0.02)}
+
+
+def embed(p: Params, tokens: jnp.ndarray) -> jnp.ndarray:
+    return p["table"][tokens]
+
+
+def unembed(p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    """Tied or untied logits head: x [..., d] -> [..., vocab] (fp32)."""
+    return jnp.einsum("...d,vd->...v", x.astype(jnp.float32),
+                      p["table"].astype(jnp.float32))
+
+
+# --- MLPs --------------------------------------------------------------------
+def swiglu_init(key, d: int, d_ff: int) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"w_gate": _init(k1, (d, d_ff)),
+            "w_up": _init(k2, (d, d_ff)),
+            "w_down": _init(k3, (d_ff, d))}
+
+
+def swiglu(p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    g = jax.nn.silu(x @ p["w_gate"])
+    return (g * (x @ p["w_up"])) @ p["w_down"]
+
+
+def gelu_mlp_init(key, d: int, d_ff: int) -> Params:
+    k1, k2 = jax.random.split(key)
+    return {"w_up": _init(k1, (d, d_ff)),
+            "b_up": jnp.zeros((d_ff,), jnp.float32),
+            "w_down": _init(k2, (d_ff, d)),
+            "b_down": jnp.zeros((d,), jnp.float32)}
+
+
+def gelu_mlp(p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    h = jax.nn.gelu((x @ p["w_up"] + p["b_up"]).astype(x.dtype))
+    return (h @ p["w_down"] + p["b_down"]).astype(x.dtype)

@@ -1,0 +1,455 @@
+"""Model assembly: decoder-only LMs (dense/MoE/SSM/hybrid), whisper
+encoder-decoder, and the PaliGemma-style VLM — all driven by ModelConfig.
+
+Per-layer parameters are stacked on a leading axis and the decoder runs as
+`lax.scan` over layers => HLO size and compile time are O(1) in depth
+(required for 56-layer dry-runs and sane at production scale).  Hybrid
+(Zamba2) runs scan-per-group with the shared attention block applied
+between groups.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from . import attention as attn_mod
+from . import layers as L
+from . import moe as moe_mod
+from . import ssm as ssm_mod
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+def _stack_init(key, n: int, fn):
+    """Initialize n identical layers stacked on axis 0 (vmap over keys)."""
+    return jax.vmap(fn)(jax.random.split(key, n))
+
+
+def _dense_layer_init(cfg: ModelConfig):
+    def fn(k):
+        k1, k2 = jax.random.split(k)
+        p = {"ln1": L.rmsnorm_init(cfg.d_model),
+             "ln2": L.rmsnorm_init(cfg.d_model),
+             "attn": attn_mod.attention_init(
+                 k1, cfg.d_model, cfg.n_heads, cfg.n_kv, cfg.d_head,
+                 qk_norm=cfg.qk_norm)}
+        if cfg.family == "moe":
+            p["moe"] = moe_mod.moe_init(
+                k2, cfg.d_model, cfg.expert_d_ff, cfg.n_experts,
+                cfg.n_shared_experts,
+                cfg.expert_d_ff * max(cfg.n_shared_experts, 1))
+        elif cfg.act == "gelu":
+            p["mlp"] = L.gelu_mlp_init(k2, cfg.d_model, cfg.d_ff)
+        else:
+            p["mlp"] = L.swiglu_init(k2, cfg.d_model, cfg.d_ff)
+        return p
+    return fn
+
+
+def _encdec_layer_init(cfg: ModelConfig):
+    def fn(k):
+        k1, k2, k3 = jax.random.split(k, 3)
+        return {"ln1": L.layernorm_init(cfg.d_model),
+                "ln_x": L.layernorm_init(cfg.d_model),
+                "ln2": L.layernorm_init(cfg.d_model),
+                "attn": attn_mod.attention_init(
+                    k1, cfg.d_model, cfg.n_heads, cfg.n_kv, cfg.d_head),
+                "xattn": attn_mod.attention_init(
+                    k2, cfg.d_model, cfg.n_heads, cfg.n_kv, cfg.d_head),
+                "mlp": L.gelu_mlp_init(k3, cfg.d_model, cfg.d_ff)}
+    return fn
+
+
+def init_params(key, cfg: ModelConfig) -> Params:
+    keys = jax.random.split(key, 8)
+    p: Params = {"embed": L.embedding_init(keys[0], cfg.vocab, cfg.d_model),
+                 "ln_f": L.rmsnorm_init(cfg.d_model)}
+    if cfg.family in ("dense", "moe", "vlm"):
+        p["layers"] = _stack_init(keys[1], cfg.n_layers,
+                                  _dense_layer_init(cfg))
+    elif cfg.family == "ssm":  # rwkv6
+        def fn(k):
+            k1, k2 = jax.random.split(k)
+            return {"ln1": L.rmsnorm_init(cfg.d_model),
+                    "ln2": L.rmsnorm_init(cfg.d_model),
+                    "tm": ssm_mod.rwkv_init(k1, cfg.d_model, cfg.ssm_heads,
+                                            cfg.d_ff)}
+        p["layers"] = _stack_init(keys[1], cfg.n_layers, fn)
+    elif cfg.family == "hybrid":  # zamba2
+        def fn(k):
+            return {"ln1": L.rmsnorm_init(cfg.d_model),
+                    "mamba": ssm_mod.mamba_init(k, cfg.d_model,
+                                                cfg.ssm_heads, cfg.d_state)}
+        p["layers"] = _stack_init(keys[1], cfg.n_layers, fn)
+        k1, k2 = jax.random.split(keys[2])
+        p["shared_attn"] = {
+            "ln1": L.rmsnorm_init(cfg.d_model),
+            "ln2": L.rmsnorm_init(cfg.d_model),
+            "attn": attn_mod.attention_init(k1, cfg.d_model, cfg.n_heads,
+                                            cfg.n_kv, cfg.d_head),
+            "mlp": L.swiglu_init(k2, cfg.d_model, cfg.d_ff)}
+    elif cfg.family == "encdec":  # whisper
+        def enc_fn(k):
+            k1, k2 = jax.random.split(k)
+            return {"ln1": L.layernorm_init(cfg.d_model),
+                    "ln2": L.layernorm_init(cfg.d_model),
+                    "attn": attn_mod.attention_init(
+                        k1, cfg.d_model, cfg.n_heads, cfg.n_kv, cfg.d_head),
+                    "mlp": L.gelu_mlp_init(k2, cfg.d_model, cfg.d_ff)}
+        p["encoder"] = _stack_init(keys[3], cfg.enc_layers, enc_fn)
+        p["ln_enc"] = L.layernorm_init(cfg.d_model)
+        p["layers"] = _stack_init(keys[1], cfg.n_layers,
+                                  _encdec_layer_init(cfg))
+    else:
+        raise ValueError(cfg.family)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# full-sequence forward (training / prefill)
+# ---------------------------------------------------------------------------
+# Activation / logits sharding constraints (§Perf hillclimb C): without
+# them GSPMD resolves FSDP-sharded contracting dims by keeping activations
+# *batch-replicated* and all-reducing over the data axis (measured: 10 GB
+# all-reduces per layer at qwen3-1.7b/train_4k).  Constraining the residual
+# stream to batch-sharded flips the resolution to per-layer weight
+# all-gathers (true FSDP).  Set by the launchers; None = no constraint
+# (single-device smoke tests).
+ACT_SPEC = None      # PartitionSpec for [B, S, d] activations
+LOGITS_SPEC = None   # PartitionSpec for [B, C, vocab] CE-chunk logits
+
+
+def _wsc(x, spec):
+    if spec is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def _dense_block(cfg: ModelConfig, lp, x, use_flash):
+    x = _wsc(x, ACT_SPEC)
+    h = attn_mod.attention(
+        lp["attn"], L.rmsnorm(lp["ln1"], x), n_heads=cfg.n_heads,
+        n_kv=cfg.n_kv, d_head=cfg.d_head, window=cfg.window,
+        rope_theta=cfg.rope_theta, use_flash=use_flash)
+    x = x + h
+    y = L.rmsnorm(lp["ln2"], x)
+    if cfg.family == "moe":
+        x = x + moe_mod.dispatch(lp["moe"], y, top_k=cfg.top_k)
+    elif cfg.act == "gelu":
+        x = x + L.gelu_mlp(lp["mlp"], y)
+    else:
+        x = x + L.swiglu(lp["mlp"], y)
+    return x
+
+
+# When set (dry-run cost lowering only), scans over layers fully unroll so
+# XLA cost analysis counts every layer (it does not multiply while-loop
+# bodies by trip count — verified; see EXPERIMENTS.md §Roofline).
+SCAN_UNROLL = False
+
+
+def _scan_layers(layers, x, body, remat=False):
+    fn = jax.checkpoint(body) if remat else body
+    x, _ = jax.lax.scan(lambda c, lp: (fn(c, lp), None), x, layers,
+                        unroll=True if SCAN_UNROLL else 1)
+    return x
+
+
+def hidden(params: Params, cfg: ModelConfig, batch: Dict[str, jnp.ndarray],
+           *, use_flash: bool = False, remat: bool = False) -> jnp.ndarray:
+    """Final-norm hidden states [B, S, d] over the token positions."""
+    tokens = batch["tokens"]
+    x = _wsc(L.embed(params["embed"], tokens), ACT_SPEC)
+
+    if cfg.family in ("dense", "moe"):
+        body = lambda c, lp: _dense_block(cfg, lp, c, use_flash)
+        x = _scan_layers(params["layers"], x, body, remat)
+
+    elif cfg.family == "vlm":
+        # prefix patch embeddings (SigLIP stub) + causal decoding over all
+        prefix = batch["patch_embeds"].astype(x.dtype)      # [B, P, d]
+        x = jnp.concatenate([prefix, x], axis=1)
+        body = lambda c, lp: _dense_block(cfg, lp, c, use_flash)
+        x = _scan_layers(params["layers"], x, body, remat)
+        x = x[:, prefix.shape[1]:, :]
+
+    elif cfg.family == "ssm":
+        bsz, d = x.shape[0], cfg.d_model
+        def body(c, lp):
+            s0 = jnp.zeros((bsz, cfg.ssm_heads, cfg.d_head, cfg.d_head),
+                           jnp.float32)
+            zero = jnp.zeros((bsz, d), c.dtype)
+            h, _ = ssm_mod.rwkv_time_mix(lp["tm"], L.rmsnorm(lp["ln1"], c),
+                                         zero, s0)
+            c = c + h
+            c = c + ssm_mod.rwkv_channel_mix(lp["tm"],
+                                             L.rmsnorm(lp["ln2"], c), zero)
+            return c
+        x = _scan_layers(params["layers"], x, body, remat)
+
+    elif cfg.family == "hybrid":
+        ge = cfg.attn_every
+        n_groups = max(cfg.n_layers // ge, 1)
+        sa = params["shared_attn"]
+        def body(c, lp):
+            return c + ssm_mod.mamba_forward(lp["mamba"],
+                                             L.rmsnorm(lp["ln1"], c))
+        for g in range(n_groups):
+            grp = jax.tree.map(lambda a: a[g * ge:(g + 1) * ge],
+                               params["layers"])
+            x = _scan_layers(grp, x, body, remat)
+            h = attn_mod.attention(
+                sa["attn"], L.rmsnorm(sa["ln1"], x), n_heads=cfg.n_heads,
+                n_kv=cfg.n_kv, d_head=cfg.d_head, window=cfg.window,
+                rope_theta=cfg.rope_theta, use_flash=use_flash)
+            x = x + h
+            x = x + L.swiglu(sa["mlp"], L.rmsnorm(sa["ln2"], x))
+
+    elif cfg.family == "encdec":
+        enc = encode(params, cfg, batch["enc_embeds"])
+        def body(c, lp):
+            h = attn_mod.attention(
+                lp["attn"], L.layernorm(lp["ln1"], c), n_heads=cfg.n_heads,
+                n_kv=cfg.n_kv, d_head=cfg.d_head, rope_theta=cfg.rope_theta)
+            c = c + h
+            ek = (enc @ lp["xattn"]["wk"]).reshape(
+                enc.shape[0], enc.shape[1], cfg.n_kv, cfg.d_head)
+            ev = (enc @ lp["xattn"]["wv"]).reshape(
+                enc.shape[0], enc.shape[1], cfg.n_kv, cfg.d_head)
+            h = attn_mod.attention(
+                lp["xattn"], L.layernorm(lp["ln_x"], c), n_heads=cfg.n_heads,
+                n_kv=cfg.n_kv, d_head=cfg.d_head, cross_kv=(ek, ev))
+            c = c + h
+            return c + L.gelu_mlp(lp["mlp"], L.layernorm(lp["ln2"], c))
+        x = x + _sinusoid(tokens.shape[1], cfg.d_model)[None].astype(x.dtype)
+        x = _scan_layers(params["layers"], x, body, remat)
+
+    return L.rmsnorm(params["ln_f"], x)
+
+
+def forward(params: Params, cfg: ModelConfig, batch: Dict[str, jnp.ndarray],
+            *, use_flash: bool = False, remat: bool = False,
+            last_only: bool = False) -> jnp.ndarray:
+    """fp32 logits [B, S, vocab].  last_only=True (prefill): unembed only
+    the final position — never materialize [B, 32K, vocab]."""
+    x = hidden(params, cfg, batch, use_flash=use_flash, remat=remat)
+    if last_only:
+        x = x[:, -1:, :]
+    return L.unembed(params["embed"], x)
+
+
+def _sinusoid(s: int, d: int) -> jnp.ndarray:
+    pos = jnp.arange(s, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(0, d, 2, dtype=jnp.float32)[None, :]
+    ang = pos / jnp.power(10000.0, dim / d)
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=1)
+
+
+def encode(params: Params, cfg: ModelConfig, enc_embeds: jnp.ndarray
+           ) -> jnp.ndarray:
+    """Whisper encoder over (stub) frame embeddings [B, T, d]."""
+    x = enc_embeds + _sinusoid(enc_embeds.shape[1],
+                               cfg.d_model)[None].astype(enc_embeds.dtype)
+    def body(c, lp):
+        h = attn_mod.attention(
+            lp["attn"], L.layernorm(lp["ln1"], c), n_heads=cfg.n_heads,
+            n_kv=cfg.n_kv, d_head=cfg.d_head, causal=False, rope_theta=0.0)
+        c = c + h
+        return c + L.gelu_mlp(lp["mlp"], L.layernorm(lp["ln2"], c))
+    x = _scan_layers(params["encoder"], x, body)
+    return L.layernorm(params["ln_enc"], x)
+
+
+def loss_fn(params: Params, cfg: ModelConfig, batch: Dict[str, jnp.ndarray],
+            *, ce_chunk: int = 1024, **kw) -> jnp.ndarray:
+    """Chunked cross-entropy: the [B, S, vocab] logits tensor is never
+    materialized — sequence chunks of hidden states are unembedded inside a
+    scan (peak logits memory / ce_chunk; required to fit 16 GB/chip at
+    global_batch 256 x 4K x 256K-vocab)."""
+    x = hidden(params, cfg, batch, **kw)
+    labels = batch["labels"]
+    b, s, d = x.shape
+    chunk = min(ce_chunk, s)
+    if s % chunk != 0:
+        chunk = s
+    n = s // chunk
+    xc = jnp.moveaxis(x.reshape(b, n, chunk, d), 1, 0)        # [n,B,C,d]
+    lc = jnp.moveaxis(labels.reshape(b, n, chunk), 1, 0)      # [n,B,C]
+
+    def body(acc, inp):
+        xi, li = inp
+        xi = _wsc(xi, ACT_SPEC)
+        logits = _wsc(L.unembed(params["embed"], xi), LOGITS_SPEC)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        lab = jnp.take_along_axis(logits, jnp.maximum(li, 0)[..., None],
+                                  axis=-1)[..., 0]
+        mask = (li >= 0).astype(jnp.float32)
+        return (acc[0] + jnp.sum((lse - lab) * mask),
+                acc[1] + jnp.sum(mask)), None
+
+    (tot, cnt), _ = jax.lax.scan(
+        body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+        (xc, lc), unroll=True if SCAN_UNROLL else 1)
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+# ---------------------------------------------------------------------------
+# decode (single-token serve step with per-layer state)
+# ---------------------------------------------------------------------------
+class DecodeState(NamedTuple):
+    kv: Any          # stacked per-layer KVCache / SSM states
+    extra: Any       # cross-attn kv (encdec) / shared-attn caches (hybrid)
+    pos: jnp.ndarray
+
+
+def init_decode_state(params: Params, cfg: ModelConfig, batch: int,
+                      s_max: int) -> DecodeState:
+    if cfg.family in ("dense", "moe", "vlm"):
+        s_kv = min(s_max, cfg.window) if cfg.window else s_max
+        kv = jax.vmap(lambda _: attn_mod.init_cache(
+            batch, s_kv, cfg.n_kv, cfg.d_head))(jnp.arange(cfg.n_layers))
+        return DecodeState(kv, None, jnp.zeros((), jnp.int32))
+    if cfg.family == "ssm":
+        layer0 = jax.tree.map(lambda a: a[0], params["layers"])
+        st = jax.vmap(lambda _: ssm_mod.rwkv_init_state(
+            layer0["tm"], batch, cfg.d_model))(jnp.arange(cfg.n_layers))
+        return DecodeState(st, None, jnp.zeros((), jnp.int32))
+    if cfg.family == "hybrid":
+        layer0 = jax.tree.map(lambda a: a[0], params["layers"])
+        st = jax.vmap(lambda _: ssm_mod.mamba_init_state(
+            layer0["mamba"], batch))(jnp.arange(cfg.n_layers))
+        n_groups = max(cfg.n_layers // cfg.attn_every, 1)
+        s_kv = min(s_max, cfg.window) if cfg.window else s_max
+        caches = jax.vmap(lambda _: attn_mod.init_cache(
+            batch, s_kv, cfg.n_kv, cfg.d_head))(jnp.arange(n_groups))
+        return DecodeState(st, caches, jnp.zeros((), jnp.int32))
+    if cfg.family == "encdec":
+        kv = jax.vmap(lambda _: attn_mod.init_cache(
+            batch, s_max, cfg.n_kv, cfg.d_head))(jnp.arange(cfg.n_layers))
+        # cross-attn K/V: filled by prime_encdec (zeros here for dry-run)
+        xkv = (jnp.zeros((cfg.n_layers, batch, cfg.enc_seq, cfg.n_kv,
+                          cfg.d_head), jnp.bfloat16),
+               jnp.zeros((cfg.n_layers, batch, cfg.enc_seq, cfg.n_kv,
+                          cfg.d_head), jnp.bfloat16))
+        return DecodeState(kv, xkv, jnp.zeros((), jnp.int32))
+    raise ValueError(cfg.family)
+
+
+def prime_encdec(params: Params, cfg: ModelConfig, enc_embeds, state):
+    """Compute per-layer cross-attention K/V from the encoder output."""
+    enc = encode(params, cfg, enc_embeds)
+    def one(lp):
+        ek = (enc @ lp["xattn"]["wk"]).reshape(
+            enc.shape[0], enc.shape[1], cfg.n_kv, cfg.d_head)
+        ev = (enc @ lp["xattn"]["wv"]).reshape(
+            enc.shape[0], enc.shape[1], cfg.n_kv, cfg.d_head)
+        return ek.astype(jnp.bfloat16), ev.astype(jnp.bfloat16)
+    xk, xv = jax.vmap(one)(params["layers"])
+    return DecodeState(state.kv, (xk, xv), state.pos)
+
+
+def decode_step(params: Params, cfg: ModelConfig, state: DecodeState,
+                tokens: jnp.ndarray) -> Tuple[jnp.ndarray, DecodeState]:
+    """tokens [B, 1] -> (logits [B, 1, vocab], new state)."""
+    x = L.embed(params["embed"], tokens)
+    akw = dict(n_heads=cfg.n_heads, n_kv=cfg.n_kv, d_head=cfg.d_head,
+               window=cfg.window, rope_theta=cfg.rope_theta)
+
+    if cfg.family in ("dense", "moe", "vlm"):
+        def body(c, sc):
+            lp, cache = sc
+            h, cache = attn_mod.decode_step(
+                lp["attn"], L.rmsnorm(lp["ln1"], c), cache, **akw)
+            c = c + h
+            y = L.rmsnorm(lp["ln2"], c)
+            if cfg.family == "moe":
+                c = c + moe_mod.dispatch(lp["moe"], y, top_k=cfg.top_k)
+            elif cfg.act == "gelu":
+                c = c + L.gelu_mlp(lp["mlp"], y)
+            else:
+                c = c + L.swiglu(lp["mlp"], y)
+            return c, cache
+        x, kv = jax.lax.scan(body, x, (params["layers"], state.kv),
+                             unroll=True if SCAN_UNROLL else 1)
+        new = DecodeState(kv, None, state.pos + 1)
+
+    elif cfg.family == "ssm":
+        def body(c, sc):
+            lp, st = sc
+            bsz, d = c.shape[0], cfg.d_model
+            h1 = L.rmsnorm(lp["ln1"], c)
+            y, s_new = ssm_mod.rwkv_time_mix(lp["tm"], h1,
+                                             st.x_tm.astype(h1.dtype),
+                                             st.s)
+            c = c + y
+            h2 = L.rmsnorm(lp["ln2"], c)
+            c = c + ssm_mod.rwkv_channel_mix(lp["tm"], h2,
+                                             st.x_cm.astype(h2.dtype))
+            st = ssm_mod.RWKVState(s=s_new,
+                                   x_tm=h1[:, 0].astype(jnp.bfloat16),
+                                   x_cm=h2[:, 0].astype(jnp.bfloat16))
+            return c, st
+        x, kv = jax.lax.scan(body, x, (params["layers"], state.kv),
+                             unroll=True if SCAN_UNROLL else 1)
+        new = DecodeState(kv, None, state.pos + 1)
+
+    elif cfg.family == "hybrid":
+        ge = cfg.attn_every
+        n_groups = max(cfg.n_layers // ge, 1)
+        sa = params["shared_attn"]
+        def body(c, sc):
+            lp, st = sc
+            y, st = ssm_mod.mamba_decode_step(lp["mamba"],
+                                              L.rmsnorm(lp["ln1"], c), st)
+            return c + y, st
+        new_sts = []
+        caches = []
+        for g in range(n_groups):
+            grp = jax.tree.map(lambda a: a[g * ge:(g + 1) * ge],
+                               params["layers"])
+            grp_st = jax.tree.map(lambda a: a[g * ge:(g + 1) * ge], state.kv)
+            x, st = jax.lax.scan(body, x, (grp, grp_st),
+                                 unroll=True if SCAN_UNROLL else 1)
+            new_sts.append(st)
+            cache_g = jax.tree.map(lambda a: a[g], state.extra)
+            h, cache_g = attn_mod.decode_step(
+                sa["attn"], L.rmsnorm(sa["ln1"], x), cache_g, **akw)
+            x = x + h
+            x = x + L.swiglu(sa["mlp"], L.rmsnorm(sa["ln2"], x))
+            caches.append(cache_g)
+        kv = jax.tree.map(lambda *a: jnp.concatenate(a, 0), *new_sts)
+        extra = jax.tree.map(lambda *a: jnp.stack(a, 0), *caches)
+        new = DecodeState(kv, extra, state.pos + 1)
+
+    elif cfg.family == "encdec":
+        xk, xv = state.extra
+        def body(c, sc):
+            lp, cache, ek, ev = sc
+            h, cache = attn_mod.decode_step(
+                lp["attn"], L.layernorm(lp["ln1"], c), cache,
+                n_heads=cfg.n_heads, n_kv=cfg.n_kv, d_head=cfg.d_head,
+                rope_theta=cfg.rope_theta)
+            c = c + h
+            q = (L.layernorm(lp["ln_x"], c) @ lp["xattn"]["wq"]).reshape(
+                c.shape[0], 1, cfg.n_heads, cfg.d_head)
+            o = attn_mod._sdpa(q, ek, ev,
+                               jnp.ones((1, ek.shape[1]), bool),
+                               cfg.n_heads // cfg.n_kv)
+            c = c + o.reshape(c.shape[0], 1, -1) @ lp["xattn"]["wo"]
+            c = c + L.gelu_mlp(lp["mlp"], L.layernorm(lp["ln2"], c))
+            return c, cache
+        x, kv = jax.lax.scan(body, x, (params["layers"], state.kv, xk, xv),
+                             unroll=True if SCAN_UNROLL else 1)
+        new = DecodeState(kv, state.extra, state.pos + 1)
+    else:
+        raise ValueError(cfg.family)
+
+    x = L.rmsnorm(params["ln_f"], x)
+    return L.unembed(params["embed"], x), new

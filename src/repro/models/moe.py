@@ -1,0 +1,175 @@
+"""Mixture-of-Experts FFN (Mixtral-style top-k routing; Qwen2-MoE-style
+shared + routed experts).
+
+Dispatch uses capacity-bounded one-hot einsums (Mesh-TF/GShard style):
+tokens -> [E, capacity, d] -> expert FFN -> combine.  The expert dimension
+stays local; the expert *hidden* dimension is TP-sharded on the "model"
+mesh axis, so expert counts need not divide the mesh (DESIGN.md §5 — EP as
+TP-within-expert; a ragged all-to-all EP variant is a documented extension).
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from .layers import _init, swiglu, swiglu_init
+
+Params = Dict[str, jnp.ndarray]
+
+# dispatch implementation: "sorted" (default; §Perf hillclimb A) or
+# "einsum" (GShard-style one-hot baseline, kept for comparison/tests)
+IMPL = "sorted"
+
+# batch-dim sharding constraint for dispatch intermediates (set by the
+# launchers together with lm.ACT_SPEC; §Perf hillclimb A2): without it
+# GSPMD lays out the scattered [B, E, C, d] expert inputs batch-replicated.
+BATCH_SPEC = None  # NamedSharding whose spec is P(fsdp) for the batch dim
+
+
+def _wsc_batch(x):
+    if BATCH_SPEC is None:
+        return x
+    import jax as _jax
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    spec = BATCH_SPEC.spec[0] if hasattr(BATCH_SPEC, "spec") else BATCH_SPEC[0]
+    mesh = BATCH_SPEC.mesh
+    full = P(spec, *(None,) * (x.ndim - 1))
+    return _jax.lax.with_sharding_constraint(x, NamedSharding(mesh, full))
+
+
+def dispatch(p: Params, x: jnp.ndarray, *, top_k: int,
+             capacity_factor: float = 1.25) -> jnp.ndarray:
+    # single-token decode: per-row sorting degenerates (capacity padding
+    # exceeds the work); the one-hot path is cheaper at s == 1
+    if IMPL == "sorted" and x.shape[1] > 1:
+        return moe_ffn_sorted(p, x, top_k=top_k,
+                              capacity_factor=capacity_factor)
+    return moe_ffn(p, x, top_k=top_k, capacity_factor=capacity_factor)
+
+
+def moe_init(key, d: int, d_ff: int, n_experts: int, n_shared: int = 0,
+             shared_d_ff: int = 0) -> Params:
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": _init(ks[0], (d, n_experts), scale=0.02),
+        # stacked expert weights [E, ...]
+        "w_gate": _init(ks[1], (n_experts, d, d_ff)),
+        "w_up": _init(ks[2], (n_experts, d, d_ff)),
+        "w_down": _init(ks[3], (n_experts, d_ff, d)),
+    }
+    if n_shared > 0:
+        p["shared"] = swiglu_init(ks[4], d, shared_d_ff or d_ff * n_shared)
+    return p
+
+
+def moe_ffn(p: Params, x: jnp.ndarray, *, top_k: int,
+            capacity_factor: float = 1.25) -> jnp.ndarray:
+    """x: [B, S, d] -> [B, S, d].  Top-k softmax routing with capacity."""
+    b, s, d = x.shape
+    n_exp = p["router"].shape[1]
+    tokens = x.reshape(b * s, d)
+    n_tok = b * s
+    cap = max(int(n_tok * top_k * capacity_factor / n_exp), 4)
+
+    logits = (tokens.astype(jnp.float32) @ p["router"].astype(jnp.float32))
+    weights, sel = jax.lax.top_k(logits, top_k)          # [T, k]
+    weights = jax.nn.softmax(weights, axis=-1)
+
+    # position of each (token, k) within its expert's capacity buffer
+    onehot = jax.nn.one_hot(sel, n_exp, dtype=jnp.int32)       # [T, k, E]
+    flat = onehot.reshape(n_tok * top_k, n_exp)
+    pos = jnp.cumsum(flat, axis=0) * flat - 1                  # [T*k, E]
+    pos = pos.reshape(n_tok, top_k, n_exp)
+    within = (pos < cap) & (onehot > 0)
+
+    # dispatch [T, k, E, C] one-hot -> expert inputs [E, C, d]
+    pos_oh = jax.nn.one_hot(jnp.where(within, pos, cap), cap + 1,
+                            dtype=tokens.dtype)[..., :cap]     # [T,k,E,C]
+    disp = (pos_oh * within[..., None].astype(tokens.dtype))
+    expert_in = jnp.einsum("td,tkec->ecd", tokens, disp)
+
+    # expert FFN (hidden dim sharded on "model")
+    g = jax.nn.silu(jnp.einsum("ecd,edf->ecf", expert_in, p["w_gate"]))
+    h = g * jnp.einsum("ecd,edf->ecf", expert_in, p["w_up"])
+    expert_out = jnp.einsum("ecf,efd->ecd", h, p["w_down"])
+
+    # combine with routing weights
+    comb = disp * weights[..., None, None].astype(tokens.dtype)
+    out = jnp.einsum("ecd,tkec->td", expert_out, comb)
+    if "shared" in p:
+        out = out + swiglu(p["shared"], tokens)
+    return out.reshape(b, s, d)
+
+
+def moe_ffn_sorted(p: Params, x: jnp.ndarray, *, top_k: int,
+                   capacity_factor: float = 1.25) -> jnp.ndarray:
+    """Sort-based, *batch-row-local* dispatch (§Perf hillclimb A):
+
+    * per row (vmap over the FSDP-sharded batch dim), tokens are stably
+      argsorted by expert id and moved with O(S*k*d) gathers/scatters —
+      routing never crosses data shards, so no cross-batch collectives;
+    * grouped [B, E, C, d] GEMMs with expert hidden dims TP-sharded;
+    * no [T, k, E, C] one-hot intermediates (the GShard-style einsum path,
+      kept as ``moe_ffn`` for comparison, moves O(T*k*E*C) bytes).
+
+    Capacity is per batch row (GShard group semantics)."""
+    b, s, d = x.shape
+    n_exp = p["router"].shape[1]
+    cap = max(int(s * top_k * capacity_factor / n_exp), 4)
+
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32),
+                        p["router"].astype(jnp.float32))
+    weights, sel = jax.lax.top_k(logits, top_k)              # [B, S, k]
+    weights = jax.nn.softmax(weights, axis=-1)
+
+    def row(tok, sel_r, w_r):
+        flat_e = sel_r.reshape(-1)                           # [S*k]
+        order = jnp.argsort(flat_e, stable=True)
+        sorted_e = flat_e[order]
+        idx = jnp.arange(s * top_k, dtype=jnp.int32)
+        first = jnp.concatenate([jnp.array([True]),
+                                 sorted_e[1:] != sorted_e[:-1]])
+        grp_start = jnp.maximum.accumulate(jnp.where(first, idx, -1))
+        rank = idx - grp_start
+        keep = rank < cap
+        dst = jnp.where(keep, sorted_e * cap + rank, n_exp * cap)
+        src_tok = order // top_k
+        ein = jnp.zeros((n_exp * cap + 1, d), tok.dtype
+                        ).at[dst].set(tok[src_tok])
+        w_sorted = w_r.reshape(-1)[order]
+        return (ein[:n_exp * cap].reshape(n_exp, cap, d), dst, src_tok,
+                w_sorted)
+
+    ein, dst, src_tok, w_sorted = jax.vmap(row)(x, sel, weights)
+    ein = _wsc_batch(ein)
+
+    g = jax.nn.silu(jnp.einsum("becd,edf->becf", ein, p["w_gate"]))
+    h = g * jnp.einsum("becd,edf->becf", ein, p["w_up"])
+    eout = jnp.einsum("becf,efd->becd", h, p["w_down"]).reshape(
+        b, n_exp * cap, d)
+    eout = _wsc_batch(eout)
+    eout = jnp.concatenate([eout, jnp.zeros((b, 1, d), eout.dtype)], 1)
+
+    def combine(eo, dst_r, src_r, w_r):
+        contrib = eo[dst_r] * w_r[:, None].astype(eo.dtype)
+        return jnp.zeros((s, d), eo.dtype).at[src_r].add(contrib)
+
+    out = jax.vmap(combine)(eout, dst, src_tok, w_sorted)
+    if "shared" in p:
+        out = out + swiglu(p["shared"], x.reshape(b * s, d)).reshape(b, s, d)
+    return out.reshape(b, s, d)
+
+
+def aux_load_balance_loss(p: Params, x: jnp.ndarray, top_k: int) -> jnp.ndarray:
+    """Switch-style load-balancing auxiliary loss (mean over experts of
+    fraction_dispatched * mean_router_prob * E)."""
+    b, s, d = x.shape
+    tokens = x.reshape(b * s, d).astype(jnp.float32)
+    n_exp = p["router"].shape[1]
+    logits = tokens @ p["router"].astype(jnp.float32)
+    probs = jax.nn.softmax(logits, -1)
+    _, sel = jax.lax.top_k(logits, top_k)
+    frac = jnp.mean(jax.nn.one_hot(sel, n_exp).sum(1), 0)
+    return jnp.sum(frac * probs.mean(0)) * n_exp

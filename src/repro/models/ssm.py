@@ -1,0 +1,212 @@
+"""State-space / attention-free sequence mixers: Mamba2 (SSD) and RWKV6.
+
+Both are implemented in recurrent form with `lax.scan` over time for
+training/prefill (O(1) HLO size; a chunked-parallel SSD formulation is a
+documented hillclimb candidate — see EXPERIMENTS.md §Perf) and as O(1)
+single-step state updates for decode.  State layouts are chosen so the
+head dimension TP-shards on the "model" mesh axis.
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import _init
+
+Params = Dict[str, jnp.ndarray]
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 (simplified SSD: scalar-per-head decay, outer-product state)
+# ---------------------------------------------------------------------------
+class MambaState(NamedTuple):
+    h: jnp.ndarray      # [B, H, d_head, d_state]
+    conv: jnp.ndarray   # [B, K-1, d_inner] conv tail for decode
+
+
+def mamba_init(key, d: int, n_heads: int, d_state: int,
+               expand: int = 2, d_conv: int = 4) -> Params:
+    d_inner = expand * d
+    d_head = d_inner // n_heads
+    ks = jax.random.split(key, 7)
+    return {
+        # separate input projections (z, x, B, C, dt) so each output dim
+        # TP-shards cleanly (fused projections would split mid-segment)
+        "w_z": _init(ks[0], (d, d_inner)),
+        "w_x": _init(ks[1], (d, d_inner)),
+        "w_b": _init(ks[2], (d, d_state)),
+        "w_c": _init(ks[3], (d, d_state)),
+        "w_dt": _init(ks[4], (d, n_heads)),
+        "conv_w": _init(ks[5], (d_conv, d_inner), scale=0.5),
+        "a_log": jnp.zeros((n_heads,), jnp.float32),
+        "d_skip": jnp.ones((n_heads,), jnp.float32),
+        "dt_bias": jnp.zeros((n_heads,), jnp.float32),
+        "w_out": _init(ks[6], (d_inner, d)),
+        "_shape": jnp.zeros((n_heads, d_head, d_state, d_conv)),  # metadata
+    }
+
+
+def _mamba_split(p, x):
+    n_heads, d_head, d_state, d_conv = p["_shape"].shape
+    z = x @ p["w_z"]
+    xin = x @ p["w_x"]
+    b = x @ p["w_b"]
+    c = x @ p["w_c"]
+    dt = x @ p["w_dt"]
+    return z, xin, b, c, dt, (n_heads, d_head, d_state, int(d_conv))
+
+
+def _causal_conv(x, w):
+    """Depthwise causal conv: x [B,S,C], w [K,C]."""
+    k = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + x.shape[1], :] * w[i] for i in range(k))
+    return jax.nn.silu(out)
+
+
+def mamba_forward(p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    """Full-sequence forward: x [B, S, d] -> [B, S, d]."""
+    bsz, s, _ = x.shape
+    z, xin, b, c, dt, (nh, dh, ds, _) = _mamba_split(p, x)
+    xin = _causal_conv(xin, p["conv_w"])
+    xh = xin.reshape(bsz, s, nh, dh)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # [B,S,H]
+    decay = jnp.exp(-jnp.exp(p["a_log"])[None, None, :] * dt)    # [B,S,H]
+
+    def step(h, inp):
+        xt, bt, ct, dk, dtt = inp      # [B,nh,dh], [B,ds], [B,ds], [B,nh], [B,nh]
+        # h: [B, nh, dh, ds]
+        upd = jnp.einsum("bhd,bs,bh->bhds", xt, bt, dtt)
+        h = h * dk[:, :, None, None] + upd
+        y = jnp.einsum("bhds,bs->bhd", h, ct)
+        return h, y
+
+    h0 = jnp.zeros((bsz, nh, dh, ds), jnp.float32)
+    xs = (jnp.moveaxis(xh.astype(jnp.float32), 1, 0),
+          jnp.moveaxis(b.astype(jnp.float32), 1, 0),
+          jnp.moveaxis(c.astype(jnp.float32), 1, 0),
+          jnp.moveaxis(decay, 1, 0), jnp.moveaxis(dt, 1, 0))
+    _, ys = jax.lax.scan(step, h0, xs)
+    y = jnp.moveaxis(ys, 0, 1)                       # [B,S,nh,dh]
+    y = y + xh.astype(jnp.float32) * p["d_skip"][None, None, :, None]
+    y = (y.reshape(bsz, s, nh * dh) * jax.nn.silu(z.astype(jnp.float32)))
+    return (y.astype(x.dtype)) @ p["w_out"]
+
+
+def mamba_init_state(p: Params, batch: int) -> MambaState:
+    nh, dh, ds, dk = p["_shape"].shape
+    return MambaState(h=jnp.zeros((batch, nh, dh, ds), jnp.float32),
+                      conv=jnp.zeros((batch, int(dk) - 1, nh * dh),
+                                     jnp.bfloat16))
+
+
+def mamba_decode_step(p: Params, x: jnp.ndarray, state: MambaState
+                      ) -> Tuple[jnp.ndarray, MambaState]:
+    """x: [B, 1, d] -> ([B, 1, d], state)."""
+    bsz = x.shape[0]
+    z, xin, b, c, dt, (nh, dh, ds, dk) = _mamba_split(p, x)
+    # conv over [tail, current]
+    win = jnp.concatenate([state.conv, xin.astype(state.conv.dtype)], 1)
+    conv = sum(win[:, i, :] * p["conv_w"][i] for i in range(dk))
+    xt = jax.nn.silu(conv).reshape(bsz, nh, dh).astype(jnp.float32)
+    dtt = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])
+    decay = jnp.exp(-jnp.exp(p["a_log"])[None, :] * dtt)
+    upd = jnp.einsum("bhd,bs,bh->bhds", xt, b[:, 0].astype(jnp.float32), dtt)
+    h = state.h * decay[:, :, None, None] + upd
+    y = jnp.einsum("bhds,bs->bhd", h, c[:, 0].astype(jnp.float32))
+    y = y + xt * p["d_skip"][None, :, None]
+    y = y.reshape(bsz, 1, nh * dh) * jax.nn.silu(z.astype(jnp.float32))
+    return y.astype(x.dtype) @ p["w_out"], MambaState(h=h, conv=win[:, 1:, :])
+
+
+# ---------------------------------------------------------------------------
+# RWKV6 ("Finch") — data-dependent decay time-mix + channel-mix
+# ---------------------------------------------------------------------------
+class RWKVState(NamedTuple):
+    s: jnp.ndarray        # [B, H, d_head, d_head] wkv state
+    x_tm: jnp.ndarray     # [B, d] previous token (time-mix shift)
+    x_cm: jnp.ndarray     # [B, d] previous token (channel-mix shift)
+
+
+def rwkv_init(key, d: int, n_heads: int, d_ff: int) -> Params:
+    dh = d // n_heads
+    ks = jax.random.split(key, 10)
+    return {
+        "mix_r": jnp.full((d,), 0.5, jnp.float32),
+        "mix_k": jnp.full((d,), 0.5, jnp.float32),
+        "mix_v": jnp.full((d,), 0.5, jnp.float32),
+        "mix_w": jnp.full((d,), 0.5, jnp.float32),
+        "mix_g": jnp.full((d,), 0.5, jnp.float32),
+        "w_r": _init(ks[0], (d, d)),
+        "w_k": _init(ks[1], (d, d)),
+        "w_v": _init(ks[2], (d, d)),
+        "w_g": _init(ks[3], (d, d)),
+        "w_decay": _init(ks[4], (d, d), scale=0.01),  # data-dependent decay
+        "decay_bias": jnp.full((d,), -6.0, jnp.float32),
+        "bonus": jnp.zeros((n_heads, dh), jnp.float32),
+        "w_o": _init(ks[5], (d, d)),
+        "ln_x": jnp.ones((d,), jnp.float32),
+        # channel mix
+        "cm_mix_k": jnp.full((d,), 0.5, jnp.float32),
+        "cm_wk": _init(ks[6], (d, d_ff)),
+        "cm_wv": _init(ks[7], (d_ff, d)),
+        "_shape": jnp.zeros((n_heads, dh)),
+    }
+
+
+def _shift(x, x_prev):
+    """Token shift: prepend x_prev, drop last. x [B,S,d], x_prev [B,d]."""
+    return jnp.concatenate([x_prev[:, None, :], x[:, :-1, :]], axis=1)
+
+
+def rwkv_time_mix(p: Params, x: jnp.ndarray, x_prev: jnp.ndarray,
+                  s0: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x [B,S,d]; returns (out [B,S,d], final state [B,H,dh,dh])."""
+    bsz, s, d = x.shape
+    nh, dh = p["_shape"].shape
+    xs = _shift(x, x_prev)
+
+    def mix(m):
+        return x * p[f"mix_{m}"] + xs * (1.0 - p[f"mix_{m}"])
+
+    r = (mix("r") @ p["w_r"]).reshape(bsz, s, nh, dh).astype(jnp.float32)
+    k = (mix("k") @ p["w_k"]).reshape(bsz, s, nh, dh).astype(jnp.float32)
+    v = (mix("v") @ p["w_v"]).reshape(bsz, s, nh, dh).astype(jnp.float32)
+    g = jax.nn.silu(mix("g") @ p["w_g"]).astype(jnp.float32)
+    # data-dependent decay (Finch): w_t = exp(-exp(decay(x_t)))
+    wdec = (mix("w") @ p["w_decay"]).astype(jnp.float32) + p["decay_bias"]
+    w = jnp.exp(-jnp.exp(wdec)).reshape(bsz, s, nh, dh)
+
+    def step(state, inp):
+        rt, kt, vt, wt = inp          # [B,nh,dh] each
+        kv = jnp.einsum("bhk,bhv->bhkv", kt, vt)
+        y = jnp.einsum("bhk,bhkv->bhv", rt,
+                       state + p["bonus"][None, :, :, None] * kv)
+        state = state * wt[..., None] + kv
+        return state, y
+
+    xs_t = tuple(jnp.moveaxis(a, 1, 0) for a in (r, k, v, w))
+    s_fin, ys = jax.lax.scan(step, s0, xs_t)
+    y = jnp.moveaxis(ys, 0, 1).reshape(bsz, s, d)
+    # group norm over heads (ln_x) + gate
+    y = y.reshape(bsz, s, nh, dh)
+    y = y * jax.lax.rsqrt(jnp.mean(y * y, -1, keepdims=True) + 1e-5)
+    y = (y.reshape(bsz, s, d) * p["ln_x"] * g).astype(x.dtype)
+    return y @ p["w_o"], s_fin
+
+
+def rwkv_channel_mix(p: Params, x: jnp.ndarray, x_prev: jnp.ndarray
+                     ) -> jnp.ndarray:
+    xs = _shift(x, x_prev)
+    xk = (x * p["cm_mix_k"] + xs * (1.0 - p["cm_mix_k"])).astype(x.dtype)
+    h = jnp.square(jax.nn.relu(xk @ p["cm_wk"]))
+    return (h @ p["cm_wv"]).astype(x.dtype)
+
+
+def rwkv_init_state(p: Params, batch: int, d: int) -> RWKVState:
+    nh, dh = p["_shape"].shape
+    return RWKVState(s=jnp.zeros((batch, nh, dh, dh), jnp.float32),
+                     x_tm=jnp.zeros((batch, d), jnp.bfloat16),
+                     x_cm=jnp.zeros((batch, d), jnp.bfloat16))

@@ -1,0 +1,2 @@
+from .adamw import (adamw_update, clip_by_global_norm, init_opt_state,
+                    lr_schedule)  # noqa: F401

@@ -1,0 +1,71 @@
+"""AdamW + global-norm clipping + warmup-cosine schedule (pure JAX).
+
+Optimizer moments are fp32 and shard exactly like their parameters (the
+param PartitionSpec tree is reused verbatim), giving ZeRO-style sharded
+optimizer state under the FSDP axes for free.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class OptState(NamedTuple):
+    m: Any
+    v: Any
+    step: jnp.ndarray
+
+
+def init_opt_state(params: Any) -> OptState:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return OptState(m=jax.tree.map(zeros, params),
+                    v=jax.tree.map(zeros, params),
+                    step=jnp.zeros((), jnp.int32))
+
+
+def clip_by_global_norm(grads: Any, max_norm: float) -> Any:
+    leaves = jax.tree.leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                      for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale
+                                   ).astype(g.dtype), grads), gn
+
+
+def lr_schedule(step: jnp.ndarray, peak: float = 3e-4, warmup: int = 200,
+                total: int = 10_000) -> jnp.ndarray:
+    step = step.astype(jnp.float32)
+    warm = peak * step / warmup
+    prog = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0, 1)
+    cos = peak * 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+    return jnp.where(step < warmup, warm, cos)
+
+
+def adamw_update(params: Any, grads: Any, state: OptState, *,
+                 lr: jnp.ndarray, b1: float = 0.9, b2: float = 0.95,
+                 eps: float = 1e-8, wd: float = 0.1) -> tuple:
+    step = state.step + 1
+    t = step.astype(jnp.float32)
+    bc1 = 1.0 - b1 ** t
+    bc2 = 1.0 - b2 ** t
+
+    def upd(p, g, m, v):
+        gf = g.astype(jnp.float32)
+        m = b1 * m + (1 - b1) * gf
+        v = b2 * v + (1 - b2) * jnp.square(gf)
+        mh = m / bc1
+        vh = v / bc2
+        pf = p.astype(jnp.float32)
+        pf = pf - lr * (mh / (jnp.sqrt(vh) + eps) + wd * pf)
+        return pf.astype(p.dtype), m, v
+
+    out = jax.tree.map(upd, params, grads, state.m, state.v)
+    new_p = jax.tree.map(lambda o: o[0], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree.map(lambda o: o[1], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree.map(lambda o: o[2], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    return new_p, OptState(new_m, new_v, step)

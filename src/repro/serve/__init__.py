@@ -1,0 +1,2 @@
+from .engine import Request, ServeEngine  # noqa: F401
+from .hydra_scheduler import HydraKVScheduler  # noqa: F401

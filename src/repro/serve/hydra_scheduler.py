@@ -1,0 +1,115 @@
+"""HyDRA-as-a-serving-feature: deadline- and reuse-aware KV-cache HBM
+residency (DESIGN.md §2c — the paper's technique re-instantiated at the
+serving layer).
+
+Mapping from the paper:
+  LLC space               -> HBM KV-block budget
+  accelerator accesses    -> session KV re-references (multi-turn reuse)
+  bypass an access        -> do NOT keep a finished turn's KV resident
+                             (re-prefill on the next turn if it returns)
+  LERN clusters           -> offline clusters of session reuse behavior
+                             (RC = turns per session, RI = inter-turn gap)
+  APM deadline progress   -> decoded-tokens vs. per-request deadlines
+  Fig. 9 thresholds       -> residency aggressiveness per epoch
+
+The APM/threshold machinery is literally `repro.core.apm` — the paper's
+module — driving a different resource.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+from repro.core.apm import APMParams, APMState
+from repro.core.kmeans import annotate_rc, annotate_ri, kmeans_fit, normalize
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass
+class SessionProfile:
+    """Offline-learnt reuse clusters over completed sessions."""
+    rc_centers: np.ndarray      # turns-per-session cluster centers (Cold..Hot)
+    ri_centers: np.ndarray      # inter-turn-gap centers (Immediate..Remote)
+
+    @classmethod
+    def fit(cls, turns_per_session: np.ndarray, gaps: np.ndarray
+            ) -> "SessionProfile":
+        xr = jnp.asarray(np.log1p(turns_per_session, dtype=np.float32)
+                         )[:, None]
+        xn, lo, hi = normalize(xr)
+        span = float(np.asarray(hi - lo).reshape(-1)[0])
+        lo0 = float(np.asarray(lo).reshape(-1)[0])
+        res = kmeans_fit(xn, k=4)
+        order = np.argsort(annotate_rc(np.asarray(res.centers)))
+        rc_c = np.expm1(np.asarray(res.centers).reshape(-1)
+                        * span + lo0)[order]
+        xg = jnp.asarray(np.log1p(gaps, dtype=np.float32))[:, None]
+        gn, glo, ghi = normalize(xg)
+        gspan = float(np.asarray(ghi - glo).reshape(-1)[0])
+        glo0 = float(np.asarray(glo).reshape(-1)[0])
+        resg = kmeans_fit(gn, k=4)
+        cg = np.expm1(np.asarray(resg.centers).reshape(-1) * gspan + glo0)
+        return cls(rc_centers=rc_c, ri_centers=np.sort(cg))
+
+    def classify(self, expected_turns: float, expected_gap: float
+                 ) -> Tuple[int, int]:
+        """-> (rc_cluster 0..3 Cold..Hot, ri_cluster 0..3 Imm..Remote)."""
+        rc = int(np.argmin(np.abs(self.rc_centers - expected_turns)))
+        ri = int(np.argmin(np.abs(self.ri_centers - expected_gap)))
+        return rc, ri
+
+
+class HydraKVScheduler:
+    """Per-epoch residency decisions for finished-turn KV blocks."""
+
+    def __init__(self, *, token_budget: int, deadline_tokens: float,
+                 epoch_tokens: int = 64, params: APMParams = APMParams(),
+                 profile: SessionProfile = None):
+        # APM over "tokens decoded" instead of "memory accesses completed"
+        self.apm = APMState(m_total=int(deadline_tokens),
+                            deadline=float(deadline_tokens),
+                            epoch_len=float(epoch_tokens), params=params)
+        self.token_budget = token_budget
+        self.profile = profile
+        self.ri_th, self.rc_th = 3, -1   # conservative start (keep all)
+        self.resident_tokens = 0
+        self.evictions = 0
+        self.keeps = 0
+
+    def epoch_update(self, *, decoded_rate: float, required_rate: float,
+                     hbm_pressure: float) -> None:
+        """Select this epoch's residency thresholds (Fig. 9 machinery).
+
+        decoded_rate / required_rate play M̂A / MA^(i); hbm_pressure plays
+        the core-miss-rate margin condition."""
+        ma_i = max(required_rate, 1e-6)
+        th = self.apm.bypass_thresholds(ma_i * self.apm.epoch_len)
+        self.ri_th, self.rc_th, _ = self.apm.reuse_thresholds(
+            decoded_rate * self.apm.epoch_len, ma_i * self.apm.epoch_len, th)
+        if hbm_pressure > 0.9:   # margin condition: high contention
+            self.ri_th = max(self.ri_th - 1, -1)
+            self.rc_th = min(self.rc_th + 1, 4)
+
+    def keep_resident(self, session_turns: float, inter_turn_gap: float
+                      ) -> bool:
+        """Paper's bypass rule: evict iff RI_cluster > RI_Th or
+        RC_cluster < RC_Th."""
+        if self.profile is None:
+            rc_cl, ri_cl = 2, 1
+        else:
+            rc_cl, ri_cl = self.profile.classify(session_turns,
+                                                 inter_turn_gap)
+        evict = (ri_cl > self.ri_th) or (rc_cl < self.rc_th)
+        if evict:
+            self.evictions += 1
+        else:
+            self.keeps += 1
+        return not evict
+
+    def stats(self) -> Dict[str, float]:
+        tot = self.evictions + self.keeps
+        return {"evictions": self.evictions, "keeps": self.keeps,
+                "evict_rate": self.evictions / max(tot, 1),
+                "ri_th": self.ri_th, "rc_th": self.rc_th}

@@ -1,0 +1,189 @@
+"""Named sharding rules: FSDP(data[,pod]) x TP(model) x EP-as-TP.
+
+Rules are path+shape driven and divisibility-guarded: a dim shards on an
+axis only if it divides evenly (whole attention heads, whole experts'
+hidden columns, ...), else that dim is replicated and the fallback is
+recorded — the dry-run report surfaces every fallback so the roofline
+iteration can target them (DESIGN.md §5).
+
+Conventions (mesh axes: ["pod",] "data", "model"):
+* column-parallel projections (wq, w_gate, w_up, cm_wk, w_z/w_x ...):
+    [d_model -> FSDP, out -> "model"]
+* row-parallel projections (wo, w_down, cm_wv, w_out):
+    [in -> "model", d_model -> FSDP]
+* embedding table: [vocab -> "model", d_model -> FSDP]
+* stacked-layer leading axis (scan dim): always unsharded.
+* small vectors / norms / router: replicated (FSDP on 1-D >= 8192 dims).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+
+FALLBACKS: List[str] = []  # cleared/read by the dry-run report
+
+
+def _div(n: int, mesh: Mesh, *axes: str) -> bool:
+    k = int(np.prod([mesh.shape[a] for a in axes])) if axes else 1
+    return n % k == 0
+
+
+def _fsdp_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+def _col(mesh: Mesh, shape, name: str) -> P:
+    """[in=d_model, out=tp] with stacked leading dims skipped."""
+    lead = (None,) * (len(shape) - 2)
+    din, dout = shape[-2], shape[-1]
+    fsdp = _fsdp_axes(mesh)
+    a0 = fsdp if _div(din, mesh, *fsdp) else None
+    a1 = "model" if _div(dout, mesh, "model") else None
+    if a1 is None:
+        FALLBACKS.append(f"{name}: out dim {dout} !% model -> replicated")
+    return P(*lead, a0, a1)
+
+
+def _row(mesh: Mesh, shape, name: str) -> P:
+    lead = (None,) * (len(shape) - 2)
+    din, dout = shape[-2], shape[-1]
+    fsdp = _fsdp_axes(mesh)
+    a0 = "model" if _div(din, mesh, "model") else None
+    a1 = fsdp if _div(dout, mesh, *fsdp) else None
+    if a0 is None:
+        FALLBACKS.append(f"{name}: in dim {din} !% model -> replicated")
+    return P(*lead, a0, a1)
+
+
+def param_specs(cfg: ModelConfig, mesh: Mesh, params_shape: Any) -> Any:
+    """PartitionSpec pytree matching ``params_shape`` (a ShapeDtypeStruct
+    tree from jax.eval_shape(init_params, ...))."""
+    tp = mesh.shape["model"]
+    heads_ok = cfg.n_heads % tp == 0
+    kv_ok = cfg.n_kv % tp == 0 if cfg.n_kv else False
+
+    def rule(path, leaf) -> P:
+        keys = [getattr(k, "key", getattr(k, "name", "")) for k in path]
+        name = "/".join(map(str, keys))
+        shape = leaf.shape
+        last = keys[-1] if keys else ""
+        # --- embeddings -----------------------------------------------------
+        if last == "table":
+            fsdp = _fsdp_axes(mesh)
+            v_ax = "model" if _div(shape[0], mesh, "model") else None
+            d_ax = fsdp if _div(shape[1], mesh, *fsdp) else None
+            if v_ax is None:
+                FALLBACKS.append(f"{name}: vocab {shape[0]} !% model")
+            return P(v_ax, d_ax)
+        # --- attention -------------------------------------------------------
+        if last == "wq":
+            return _col(mesh, shape, name) if heads_ok else \
+                _repl(shape, name, "q heads !% tp")
+        if last in ("wk", "wv"):
+            return _col(mesh, shape, name) if kv_ok else \
+                _repl(shape, name, "kv heads < tp (GQA): replicated")
+        if last == "wo":
+            return _row(mesh, shape, name) if heads_ok else \
+                _repl(shape, name, "q heads !% tp")
+        # --- dense / shared MLP ----------------------------------------------
+        if last in ("w_gate", "w_up", "cm_wk", "w_z", "w_x", "w_r",
+                    "w_k", "w_v", "w_g", "w_decay", "w_dt"):
+            return _col(mesh, shape, name)
+        if last in ("w_down", "cm_wv", "w_out", "w_o"):
+            return _row(mesh, shape, name)
+        if last in ("b_up",):
+            lead = (None,) * (len(shape) - 1)
+            return P(*lead, "model" if _div(shape[-1], mesh, "model")
+                     else None)
+        if last == "conv_w":
+            lead = (None,) * (len(shape) - 2)
+            return P(*lead, None,
+                     "model" if _div(shape[-1], mesh, "model") else None)
+        if last in ("a_log", "d_skip", "dt_bias"):
+            lead = (None,) * (len(shape) - 1)
+            return P(*lead, "model" if _div(shape[-1], mesh, "model")
+                     else None)
+        if last == "bonus":
+            lead = (None,) * (len(shape) - 2)
+            return P(*lead, "model" if _div(shape[-2], mesh, "model")
+                     else None, None)
+        # everything else (norms, router, mixes, biases, metadata): replicate
+        return P(*(None,) * len(shape))
+
+    def _repl(shape, name, why) -> P:
+        FALLBACKS.append(f"{name}: {why}")
+        return P(*(None,) * len(shape))
+
+    return jax.tree_util.tree_map_with_path(rule, params_shape)
+
+
+def batch_specs(cfg: ModelConfig, mesh: Mesh, batch_shape: Dict[str, Any],
+                ) -> Dict[str, P]:
+    """Input shardings: batch dim over FSDP axes (replicated if batch=1)."""
+    fsdp = _fsdp_axes(mesh)
+    out = {}
+    for k, v in batch_shape.items():
+        b = v.shape[0]
+        b_ax = fsdp if _div(b, mesh, *fsdp) and b > 1 else None
+        out[k] = P(b_ax, *(None,) * (len(v.shape) - 1))
+    return out
+
+
+def decode_state_specs(cfg: ModelConfig, mesh: Mesh, state_shape: Any) -> Any:
+    """KV caches / SSM states: batch over FSDP, heads on model where whole,
+    else cache *sequence* on model (flash-decoding-style split)."""
+    tp = mesh.shape["model"]
+    fsdp = _fsdp_axes(mesh)
+
+    def rule(path, leaf):
+        shape = leaf.shape
+        keys = [str(getattr(k, "key", getattr(k, "name", "")))
+                for k in path]
+        last = keys[-1] if keys else ""
+        if len(shape) == 0 or last in ("length", "pos"):
+            return P()
+        if last in ("k", "v") and len(shape) >= 4:
+            # [L, B, S, n_kv, hd] (stacked) or [B, S, n_kv, hd]
+            lead = (None,) * (len(shape) - 4)
+            b, s, kv, hd = shape[-4:]
+            b_ax = fsdp if b % int(np.prod([mesh.shape[a] for a in fsdp])) == 0 and b > 1 else None
+            if kv % tp == 0:
+                return P(*lead, b_ax, None, "model", None)
+            if s % tp == 0 and s > tp:
+                return P(*lead, b_ax, "model", None, None)
+            return P(*lead, b_ax, None, None, None)
+        if last == "h" and len(shape) >= 4:       # mamba [L,B,H,dh,ds]
+            lead = (None,) * (len(shape) - 4)
+            b, h = shape[-4], shape[-3]
+            b_ax = fsdp if b % int(np.prod([mesh.shape[a] for a in fsdp])) == 0 and b > 1 else None
+            h_ax = "model" if h % tp == 0 else None
+            return P(*lead, b_ax, h_ax, None, None)
+        if last == "s" and len(shape) >= 4:       # rwkv [L,B,H,dh,dh]
+            lead = (None,) * (len(shape) - 4)
+            b, h = shape[-4], shape[-3]
+            b_ax = fsdp if b % int(np.prod([mesh.shape[a] for a in fsdp])) == 0 and b > 1 else None
+            h_ax = "model" if h % tp == 0 else None
+            return P(*lead, b_ax, h_ax, None, None)
+        # conv tails, token shifts, cross-kv, misc: batch-shard only
+        if len(shape) >= 2:
+            lead_n = 1 if shape[0] != 0 else 0
+            # find a batch-like dim: assume axis 0 is layers if stacked
+            return P(*(None,) * len(shape))
+        return P(*(None,) * len(shape))
+
+    return jax.tree_util.tree_map_with_path(rule, state_shape)
+
+
+def shard_tree(tree_shape: Any, specs: Any, mesh: Mesh) -> Any:
+    """Attach NamedShardings to a ShapeDtypeStruct tree (dry-run inputs).
+    ``specs`` leaves may be PartitionSpecs or NamedShardings."""
+    def f(l, s):
+        sh = s if isinstance(s, NamedSharding) else NamedSharding(mesh, s)
+        return jax.ShapeDtypeStruct(l.shape, l.dtype, sharding=sh)
+    return jax.tree.map(f, tree_shape, specs,
+                        is_leaf=lambda x: isinstance(x, (P, NamedSharding)))

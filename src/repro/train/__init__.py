@@ -1,0 +1,1 @@
+from .step import input_specs, make_train_step  # noqa: F401

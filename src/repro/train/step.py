@@ -1,0 +1,94 @@
+"""Training / prefill / serve step factories + abstract input specs.
+
+``input_specs(arch, shape)`` returns ShapeDtypeStruct stand-ins for every
+model input of an (architecture x assigned-shape) cell — weak-type-correct,
+shardable, no device allocation — consumed by the multi-pod dry-run and by
+the real launchers alike.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, SHAPES, get_arch
+from repro.models import lm
+from repro.optim import adamw_update, clip_by_global_norm, init_opt_state, \
+    lr_schedule
+
+
+def make_train_step(cfg: ModelConfig, *, remat: bool = True,
+                    use_flash: bool = False, max_norm: float = 1.0,
+                    lr_peak: float = 3e-4, lr_warmup: int = 200,
+                    lr_total: int = 10_000):
+    """(params, opt_state, batch) -> (params, opt_state, metrics)."""
+
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(
+            lambda p: lm.loss_fn(p, cfg, batch, remat=remat,
+                                 use_flash=use_flash))(params)
+        grads, gnorm = clip_by_global_norm(grads, max_norm)
+        lr = lr_schedule(opt_state.step, peak=lr_peak, warmup=lr_warmup,
+                         total=lr_total)
+        params, opt_state = adamw_update(params, grads, opt_state, lr=lr)
+        return params, opt_state, {"loss": loss, "grad_norm": gnorm,
+                                   "lr": lr}
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, *, use_flash: bool = False):
+    def prefill_step(params, batch):
+        return lm.forward(params, cfg, batch, use_flash=use_flash,
+                          last_only=True)
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig):
+    def serve_step(params, state, tokens):
+        return lm.decode_step(params, cfg, state, tokens)
+    return serve_step
+
+
+# ---------------------------------------------------------------------------
+# abstract inputs
+# ---------------------------------------------------------------------------
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(arch: str, shape: str) -> Dict[str, Any]:
+    """Abstract model inputs for one (arch x shape) cell."""
+    cfg = get_arch(arch)
+    sp = SHAPES[shape]
+    b, s = sp.global_batch, sp.seq_len
+    if sp.kind == "decode":
+        batch = {"tokens": _sds((b, 1), jnp.int32)}
+    else:
+        batch = {"tokens": _sds((b, s), jnp.int32)}
+        if sp.kind == "train":
+            batch["labels"] = _sds((b, s), jnp.int32)
+    if cfg.family == "encdec" and sp.kind != "decode":
+        batch["enc_embeds"] = _sds((b, cfg.enc_seq, cfg.d_model),
+                                   jnp.bfloat16)
+    if cfg.family == "vlm" and sp.kind != "decode":
+        batch["patch_embeds"] = _sds((b, cfg.prefix_len, cfg.d_model),
+                                     jnp.bfloat16)
+    return batch
+
+
+def abstract_params(cfg: ModelConfig):
+    key = jax.random.PRNGKey(0)
+    return jax.eval_shape(lambda: lm.init_params(key, cfg))
+
+
+def abstract_opt_state(params_shape):
+    return jax.eval_shape(init_opt_state, params_shape)
+
+
+def abstract_decode_state(cfg: ModelConfig, params_shape, batch: int,
+                          s_max: int):
+    return jax.eval_shape(
+        lambda p: lm.init_decode_state(p, cfg, batch, s_max), params_shape)

@@ -1,0 +1,102 @@
+"""APM: margins (Fig. 8), Algorithm 1 threshold bands, Fig. 9 mapping."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.apm import APMParams, APMState, bypass_mask
+
+
+def mk(m=100_000, d=1_000_000, et=10_000, **kw):
+    return APMState(m_total=m, deadline=d, epoch_len=et,
+                    params=APMParams(**kw))
+
+
+def test_ma_global():
+    apm = mk()
+    assert apm.ma_global == pytest.approx(100_000 / 1_000_000 * 10_000)
+
+
+def test_margin_conditions():
+    """Fig. 8: high contention + behind-global -> margin_high; one of the
+    two -> margin_low; neither -> 0."""
+    apm = mk()
+    g = apm.ma_global
+    assert apm.margin(0.5, 0.5 * g) == apm.params.margin_high
+    assert apm.margin(0.5, 2.0 * g) == apm.params.margin_low
+    assert apm.margin(0.1, 0.5 * g) == apm.params.margin_low
+    assert apm.margin(0.1, 2.0 * g) == 0.0
+
+
+def test_epoch_requirement_margin_inflates():
+    apm = mk()
+    base = apm.epoch_requirement(50_000, 500_000, 0.1, 2 * apm.ma_global)
+    infl = apm.epoch_requirement(50_000, 500_000, 0.5, 0.5 * apm.ma_global)
+    assert infl > base  # margins shrink the effective remaining time
+
+
+def test_algorithm1_bands():
+    apm = mk()
+    p = apm.params
+    g = apm.ma_global
+    # within +-beta: thresholds unchanged
+    t = apm.bypass_thresholds(g)
+    assert t == (p.t_a1, p.t_a2, p.t_a3, p.t_a4, p.t_b)
+    # far below: max reduction (6 delta), floored at 1 for T_A
+    t_low = apm.bypass_thresholds((1 - 10 * p.beta) * g)
+    assert t_low[0] == max(p.t_a1 - 6 * p.delta_a, 1.0)
+    assert t_low[4] == pytest.approx(p.t_b - 6 * p.delta_b)
+    # k-band: (1-(k+1)b, 1-kb] for k=2
+    t_k2 = apm.bypass_thresholds((1 - 2.5 * p.beta) * g)
+    assert t_k2[3] == pytest.approx(max(p.t_a4 - 2 * p.delta_a, 1.0))
+    # above (1+beta): T_A increased, T_B unchanged
+    t_hi = apm.bypass_thresholds((1 + 2 * p.beta) * g)
+    assert t_hi[0] == pytest.approx(p.t_a1 + p.delta_a)
+    assert t_hi[4] == pytest.approx(p.t_b)
+
+
+def test_fig9_threshold_ladder():
+    """Progress bands map to the Fig. 9 (RI_Th, RC_Th) rows."""
+    apm = mk()
+    th = (1.0, 1.2, 1.5, 2.0, 0.8)
+    ma = 1000.0
+    assert apm.reuse_thresholds(3000, ma, th)[:2] == (-1, 4)   # bypass all
+    assert apm.reuse_thresholds(1800, ma, th)[:2] == (0, 3)
+    assert apm.reuse_thresholds(1300, ma, th)[:2] == (1, 2)
+    assert apm.reuse_thresholds(1100, ma, th)[:2] == (2, 1)
+    ri, rc, special = apm.reuse_thresholds(900, ma, th)
+    assert (ri, rc, special) == (3, 0, True)                   # special cases
+    assert apm.reuse_thresholds(700, ma, th)[:2] == (3, -1)    # no bypass
+
+
+def test_fig9_bypass_semantics():
+    """bypass iff RI_cluster > RI_Th or RC_cluster < RC_Th; No-Reuse
+    (-1,-1) bypassed whenever RC_Th >= 0; (3,-1) row bypasses nothing."""
+    rc = np.array([-1, 0, 1, 2, 3, 3])
+    ri = np.array([-1, 0, 1, 2, 3, 0])
+    # bypass-all row
+    assert bypass_mask(rc, ri, -1, 4, False, 10).all()
+    # no-bypass row
+    assert not bypass_mask(rc, ri, 3, -1, False, 10).any()
+    # mid row (1, 2): bypass Far/Remote RI or Cold/Light RC, and No-Reuse
+    m = bypass_mask(rc, ri, 1, 2, False, 10)
+    assert m.tolist() == [True, True, True, True, True, False]
+    # special cases: Cold cluster bypassed only when center implies <= 1
+    # further reuse
+    m_sp = bypass_mask(np.array([0]), np.array([1]), 3, 0, True, 1.5)
+    assert m_sp[0]
+    m_nosp = bypass_mask(np.array([0]), np.array([1]), 3, 0, True, 5.0)
+    assert not m_nosp[0]
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.floats(0.01, 10.0), st.floats(0.1, 5.0))
+def test_monotone_aggressiveness(ratio, tb):
+    """Higher predicted progress never yields a *less* aggressive row."""
+    apm = mk()
+    th = (1.0, 1.2, 1.5, 2.0, min(tb, 0.99))
+    ma = 1000.0
+    rows = []
+    for r in sorted([ratio, ratio * 1.5, ratio * 3.0]):
+        ri, rc, _ = apm.reuse_thresholds(r * ma, ma, th)
+        rows.append((ri, -rc))
+    assert rows == sorted(rows, reverse=True)

@@ -1,0 +1,68 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import ops as fops, ref as fref
+from repro.kernels.kmeans_assign import ops as kops, ref as kref
+from repro.kernels.ri_histogram import ops as hops, ref as href
+
+
+@pytest.mark.parametrize("b,s,h,hkv,d", [
+    (1, 128, 2, 2, 64), (2, 256, 4, 2, 64), (1, 384, 8, 1, 128),
+    (2, 128, 4, 4, 32),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention(b, s, h, hkv, d, dtype, causal):
+    rng = np.random.default_rng(42)
+    q = jnp.asarray(rng.normal(size=(b, s, h, d)), dtype)
+    k = jnp.asarray(rng.normal(size=(b, s, hkv, d)), dtype)
+    v = jnp.asarray(rng.normal(size=(b, s, hkv, d)), dtype)
+    out = fops.mha(q, k, v, causal=causal)
+    rep = h // hkv
+    kk = jnp.repeat(k, rep, 2).transpose(0, 2, 1, 3).reshape(b * h, s, d)
+    vv = jnp.repeat(v, rep, 2).transpose(0, 2, 1, 3).reshape(b * h, s, d)
+    qq = q.transpose(0, 2, 1, 3).reshape(b * h, s, d)
+    want = fref.mha_ref(qq, kk, vv, causal=causal).reshape(
+        b, h, s, d).transpose(0, 2, 1, 3)
+    atol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), atol=atol)
+
+
+@pytest.mark.parametrize("n,d,k", [(64, 4, 4), (777, 4, 4), (2048, 8, 6),
+                                   (100, 1, 3), (4096, 16, 4)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_kmeans_assign(n, d, k, dtype):
+    rng = np.random.default_rng(7)
+    # well-separated clusters so bf16 rounding can't flip the argmin
+    centers = jnp.asarray(rng.normal(size=(k, d)) * 10, dtype)
+    x = jnp.asarray(np.asarray(centers)[rng.integers(0, k, n)]
+                    + rng.normal(size=(n, d)) * 0.01, dtype)
+    got = kops.assign(x, centers)
+    want = kref.assign_ref(x, centers)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("n", [8, 100, 4096, 10_000])
+def test_ri_histogram(n):
+    rng = np.random.default_rng(3)
+    ri = jnp.asarray(rng.integers(-1, 3000, n), jnp.int32)
+    b1, c1 = hops.histogram(ri)
+    b2, c2 = href.histogram_ref(ri)
+    np.testing.assert_array_equal(np.asarray(b1), np.asarray(b2))
+    np.testing.assert_array_equal(np.asarray(c1), np.asarray(c2))
+
+
+def test_kmeans_fit_uses_kernel():
+    """kmeans_fit(use_kernel=True) equals the jnp path on the same data."""
+    from repro.core.kmeans import kmeans_fit
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(512, 4)), jnp.float32)
+    a = kmeans_fit(x, k=4, iters=10, use_kernel=False)
+    b = kmeans_fit(x, k=4, iters=10, use_kernel=True)
+    np.testing.assert_allclose(np.asarray(a.centers), np.asarray(b.centers),
+                               atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(a.assign), np.asarray(b.assign))

@@ -1,0 +1,149 @@
+"""LLC engine: set-parallel rounds vs. the serial Python oracle, bypass
+semantics, way partitioning, occupancy invariants (paper Fig. 1/§V-C)."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import llc as L
+from repro.core.llc import (A_HINT, A_NONE, A_SHIP, LLCConfig, build_rounds,
+                            init_state, pack_meta, simulate_epoch)
+
+TINY = dict(size_bytes=64 * 64 * 4, ways=4)  # 16 sets x 4 ways
+
+
+def _mk_events(rng, n, n_lines=256, p_accel=0.5, p_write=0.2, p_hint=0.5):
+    line = rng.integers(0, n_lines, n).astype(np.int64)
+    is_accel = rng.random(n) < p_accel
+    write = rng.random(n) < p_write
+    hint = rng.random(n) < p_hint
+    pf = np.zeros(n, bool)
+    src = rng.integers(0, 8, n)
+    return line, is_accel, write, hint, pf, src
+
+
+def _run_engine(cfg, line, isacc, wr, hint, pf, src, switch=-1,
+                one_by_one=False):
+    state = init_state(cfg)
+    acc_seen = np.cumsum(isacc & ~pf)
+    dlok = acc_seen > switch
+    meta = pack_meta(isacc, wr, hint, pf, dlok, src)
+    stats = np.zeros(len(L.STAT_NAMES), np.int64)
+    if one_by_one:   # exact serial semantics (SHIP updates included)
+        for i in range(len(line)):
+            for lm, mm in build_rounds(cfg, line[i:i + 1], meta[i:i + 1]):
+                state, s, _ = simulate_epoch(cfg, state, jnp.asarray(lm),
+                                             jnp.asarray(mm))
+                stats += np.asarray(s)
+    else:
+        for lm, mm in build_rounds(cfg, line, meta):
+            state, s, _ = simulate_epoch(cfg, state, jnp.asarray(lm),
+                                         jnp.asarray(mm))
+            stats += np.asarray(s)
+    return dict(zip(L.STAT_NAMES, stats.tolist())), state
+
+
+def _ref(cfg, line, isacc, wr, hint, pf, src, switch=-1):
+    ev = list(zip(line.tolist(), isacc.tolist(), wr.tolist(),
+                  hint.tolist(), pf.tolist(), [True] * len(line),
+                  src.tolist()))
+    return L.ref_simulate(cfg, ev, accel_switch_point=switch)
+
+
+@pytest.mark.parametrize("mode,core_byp", [
+    (A_NONE, False), (A_HINT, False), (A_SHIP, True)])
+def test_engine_matches_oracle_serial(mode, core_byp):
+    """One event per engine call == exact serial semantics (incl. SHIP)."""
+    rng = np.random.default_rng(0)
+    cfg = LLCConfig(accel_mode=mode, core_bypass=core_byp, **TINY)
+    ev = _mk_events(rng, 300)
+    got, _ = _run_engine(cfg, *ev, one_by_one=True)
+    want = _ref(cfg, *ev)
+    assert got == want
+
+
+@pytest.mark.parametrize("mode", [A_NONE, A_HINT])
+def test_engine_matches_oracle_batched(mode):
+    """Batched rounds preserve per-set order => identical stats for
+    policies without global dynamic predictors."""
+    rng = np.random.default_rng(1)
+    cfg = LLCConfig(accel_mode=mode, **TINY)
+    ev = _mk_events(rng, 1000)
+    got, _ = _run_engine(cfg, *ev)
+    want = _ref(cfg, *ev)
+    assert got == want
+
+
+def test_deadline_switch_point():
+    """Accel bypass activates only after switch_point accel accesses
+    (§III-C1 deadline-aware bypass)."""
+    rng = np.random.default_rng(2)
+    cfg = LLCConfig(accel_mode=A_HINT, **TINY)
+    ev = _mk_events(rng, 400, p_hint=1.0)
+    got, _ = _run_engine(cfg, *ev, switch=10**9)
+    assert got["accel_bypasses"] == 0
+    got2, _ = _run_engine(cfg, *ev, switch=-1)
+    assert got2["accel_bypasses"] > 0
+    want = _ref(cfg, *ev, switch=50)
+    got3, _ = _run_engine(cfg, *ev, switch=50)
+    assert got3 == want
+
+
+def test_write_bypass_invalidates():
+    """Bypassed accel write to a cached line invalidates the copy."""
+    cfg = LLCConfig(accel_mode=A_HINT, **TINY)
+    line = np.array([7, 7], dtype=np.int64)
+    isacc = np.array([True, True])
+    wr = np.array([False, True])
+    hint = np.array([False, True])
+    pf = np.zeros(2, bool)
+    src = np.zeros(2, np.int64)
+    stats, state = _run_engine(cfg, line, isacc, wr, hint, pf, src)
+    assert stats["invalidations"] == 1
+    assert not bool(jnp.any(state.tags == 7))
+
+
+def test_way_partitioning():
+    """Agents never insert outside their way mask (Fig. 18)."""
+    cfg = LLCConfig(core_way_mask=0b0011, accel_way_mask=0b1100, **TINY)
+    rng = np.random.default_rng(3)
+    ev = _mk_events(rng, 500, n_lines=4096)
+    _, state = _run_engine(cfg, *ev)
+    owner = np.asarray(state.owner)
+    valid = np.asarray(state.tags) != -1
+    assert not np.any(valid[:, 2:] & (owner[:, 2:] == 0))
+    assert not np.any(valid[:, :2] & (owner[:, :2] == 1))
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(50, 400))
+def test_conservation_properties(seed, n):
+    """hits+misses == events; occupancy <= capacity; bypasses <= misses."""
+    rng = np.random.default_rng(seed)
+    cfg = LLCConfig(accel_mode=A_HINT, core_bypass=True, **TINY)
+    ev = _mk_events(rng, n)
+    stats, state = _run_engine(cfg, *ev)
+    n_acc = int(np.sum(ev[1]))
+    assert stats["accel_hits"] + stats["accel_misses"] == n_acc
+    assert stats["core_hits"] + stats["core_misses"] == n - n_acc
+    assert stats["accel_bypasses"] <= stats["accel_misses"]
+    assert stats["core_bypasses"] <= stats["core_misses"]
+    core_l, accel_l = L.occupancy(state)
+    assert core_l + accel_l <= cfg.num_sets * cfg.ways
+
+
+def test_chunked_hot_set():
+    """A set receiving more events than the round cap still processes all
+    of them (chunked rounds), matching the oracle."""
+    cfg = LLCConfig(accel_mode=A_NONE, **TINY)
+    n = 2000  # all to one set -> 2000 rounds >> 512 cap
+    line = np.full(n, 5, dtype=np.int64)
+    line[::3] = 5 + 16 * 7  # same set, different tag
+    isacc = np.zeros(n, bool)
+    wr = np.zeros(n, bool)
+    hint = np.zeros(n, bool)
+    pf = np.zeros(n, bool)
+    src = np.zeros(n, np.int64)
+    got, _ = _run_engine(cfg, line, isacc, wr, hint, pf, src)
+    want = _ref(cfg, line, isacc, wr, hint, pf, src)
+    assert got == want

@@ -1,0 +1,57 @@
+"""The §Perf optimization paths must match their naive references
+(EXPERIMENTS.md iterations A/A2/D)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import attention as A
+from repro.models import moe
+
+
+@pytest.mark.parametrize("b,s,d,e,k", [(2, 32, 64, 8, 2), (1, 64, 32, 4, 1),
+                                       (3, 16, 48, 6, 3)])
+def test_sorted_dispatch_matches_einsum(b, s, d, e, k):
+    p = moe.moe_init(jax.random.PRNGKey(0), d, d * 2, e, n_shared=1,
+                     shared_d_ff=d * 2)
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.normal(size=(b, s, d)) * 0.1, jnp.float32)
+    # high capacity => no drops => grouping-independent, exact match
+    a = moe.moe_ffn(p, x, top_k=k, capacity_factor=float(e))
+    bb = moe.moe_ffn_sorted(p, x, top_k=k, capacity_factor=float(e))
+    np.testing.assert_allclose(np.asarray(a), np.asarray(bb), atol=1e-4)
+
+
+def test_sorted_dispatch_capacity_drops_rowwise():
+    """At binding capacity the row-local path drops per row; outputs stay
+    finite and bounded by the no-drop result."""
+    p = moe.moe_init(jax.random.PRNGKey(1), 32, 64, 4)
+    x = jnp.asarray(np.random.default_rng(2).normal(size=(2, 64, 32)) * 0.1,
+                    jnp.float32)
+    out = moe.moe_ffn_sorted(p, x, top_k=2, capacity_factor=0.5)
+    assert bool(jnp.isfinite(out).all())
+
+
+@pytest.mark.parametrize("s,chunk", [(128, 32), (256, 64), (96, 96)])
+@pytest.mark.parametrize("causal", [True, False])
+def test_chunked_attention_matches_dense(s, chunk, causal):
+    rng = np.random.default_rng(0)
+    B, H, HKV, D = 2, 4, 2, 32
+    q = jnp.asarray(rng.normal(size=(B, s, H, D)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, s, HKV, D)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, s, HKV, D)), jnp.float32)
+    mask = A.causal_mask(s) if causal else jnp.ones((s, s), bool)
+    dense = A._sdpa(q, k, v, mask, H // HKV)
+    chunked = A._sdpa_chunked(q, k, v, H // HKV, causal=causal, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(dense), np.asarray(chunked),
+                               atol=5e-6)
+
+
+def test_decode_uses_einsum_path():
+    """Single-token dispatch routes through the one-hot path (the sorted
+    path degenerates at S=1 — EXPERIMENTS.md regression note)."""
+    p = moe.moe_init(jax.random.PRNGKey(0), 32, 64, 4)
+    x = jnp.ones((8, 1, 32), jnp.float32) * 0.1
+    out = moe.dispatch(p, x, top_k=2)
+    ref = moe.moe_ffn(p, x, top_k=2)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-6)

@@ -1,0 +1,65 @@
+"""Reuse-signature extraction: Table-I oracle + properties (paper §IV-A)."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.reuse import (reuse_signature_np, reuse_signature_jax,
+                              ri_histogram_np)
+
+# Table I: addresses a1..a4; {a1,a2} -> line c1, {a3,a4} -> line c2.
+SEQ_ADDR = [1, 2, 1, 3, 4, 1, 2, 3]
+SEQ_LINE = [1, 1, 1, 2, 2, 1, 1, 2]
+
+
+def test_table1_addresses():
+    sig = reuse_signature_np(np.array(SEQ_ADDR))
+    assert sig["ri"].tolist() == [2, 5, 3, 4, -1, -1, -1, -1]
+    assert sig["rc_run"].tolist() == [1, 1, 2, 1, 1, 3, 2, 2]
+
+
+def test_table1_cache_lines():
+    sig = reuse_signature_np(np.array(SEQ_LINE))
+    assert sig["ri"].tolist() == [1, 1, 3, 1, 3, 1, -1, -1]
+    assert sig["rc_run"].tolist() == [1, 2, 3, 1, 2, 4, 5, 3]
+
+
+def test_table1_features():
+    f_ri, f_rc = ri_histogram_np(np.array(SEQ_LINE))
+    # F_RC = {5, 3}; F_RI = {{4,0,0,0},{2,0,0,0}} (paper §IV-B example)
+    assert f_rc.tolist() == [5, 3]
+    assert f_ri.tolist() == [[4, 0, 0, 0], [2, 0, 0, 0]]
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.integers(0, 30), min_size=1, max_size=200))
+def test_numpy_jax_equivalence(lines):
+    arr = np.array(lines, dtype=np.int64)
+    a = reuse_signature_np(arr)
+    b = reuse_signature_jax(jnp.asarray(arr, jnp.int32))
+    np.testing.assert_array_equal(a["ri"], np.asarray(b["ri"]))
+    np.testing.assert_array_equal(a["rc_run"], np.asarray(b["rc_run"]))
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.integers(0, 50), min_size=1, max_size=300))
+def test_reuse_invariants(lines):
+    arr = np.array(lines, dtype=np.int64)
+    sig = reuse_signature_np(arr)
+    ri, rc, count, inv = sig["ri"], sig["rc_run"], sig["count"], sig["inv"]
+    # every line's final occurrence has RI == -1; earlier ones point to the
+    # actual next occurrence of the same line
+    for i, r in enumerate(ri):
+        if r >= 0:
+            assert arr[i + r] == arr[i]
+            assert not np.any(arr[i + 1:i + r] == arr[i])
+        else:
+            assert not np.any(arr[i + 1:] == arr[i])
+    # running count ends at the total count
+    assert np.all(rc >= 1)
+    for u, c in zip(sig["uniq"], count):
+        assert np.sum(arr == u) == c
+    # histogram mass == reuses (non -1 RIs)
+    f_ri, f_rc = ri_histogram_np(arr, sig)
+    assert f_ri.sum() == np.sum(ri >= 0)
+    assert f_rc.sum() == len(arr)

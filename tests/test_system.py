@@ -1,0 +1,80 @@
+"""End-to-end behaviour of the paper's system: policy orderings on a real
+(reduced) simulation — the claims HyDRA's contribution rests on.
+
+These run the full stack (trace gen -> LERN -> L-RPT -> LLC engine -> APM)
+on the smallest accelerator config and assert the *qualitative* results of
+paper Figs. 2/10: deadline behavior, bypass-rate regimes, and the
+deadline/reuse tradeoff.  (The quantitative sweep lives in benchmarks/.)
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import policies, sim
+
+PARAMS = sim.SimParams(n_inputs=3, max_epochs=1500)
+
+
+# config3 (small-SRAM Tiny-YOLO — the paper's parameter-selection config)
+# on the omnetpp+mcf motivation mix.  Note: on config7 (high accel reuse)
+# under MI-heavy mixes our DRAM-queue model lets conservative SHIP-D edge
+# out HyDRA — recorded as a deviation in EXPERIMENTS.md §Validation.
+CFG, MIX = "config3", "moti2"
+
+
+@pytest.fixture(scope="module")
+def results():
+    out = {}
+    for pol in ("fifo-nb", "arp-nb", "arp-cs-as", "arp-cs-as-d", "hydra",
+                "arp-al"):
+        out[pol] = sim.run_cached(CFG, MIX, policies.get(pol), PARAMS)
+    return out
+
+
+def test_deadline_aware_policies_meet_deadline(results):
+    """Key Challenge 1/3: ARP-based deadline-aware policies meet the
+    deadline; deadline awareness never worsens DMR."""
+    assert results["arp-nb"].dmr == 0.0
+    assert results["hydra"].dmr == 0.0
+    assert results["arp-cs-as-d"].dmr <= results["arp-cs-as"].dmr
+
+
+def test_deadline_awareness_reduces_bypass_rate(results):
+    """§III-C1: adding deadline awareness drops the accel bypass rate."""
+    assert results["arp-cs-as-d"].accel_br <= results["arp-cs-as"].accel_br
+
+
+def test_hydra_beats_deadline_aware_ship(results):
+    """HyDRA (LERN-driven) achieves higher throughput than the
+    SHIP-driven deadline-aware baseline at equal-or-better DMR."""
+    assert results["hydra"].dmr <= results["arp-cs-as-d"].dmr
+    assert results["hydra"].ipc_total > results["arp-cs-as-d"].ipc_total
+
+
+def test_hydra_bypasses_more_than_ship_d(results):
+    """LERN's offline reuse knowledge lets HyDRA bypass aggressively while
+    still meeting the deadline (paper: 60-75% vs <10%)."""
+    assert results["hydra"].accel_br > results["arp-cs-as-d"].accel_br
+
+
+def test_hydra_reallocates_cache_to_cores(results):
+    """Fig. 14 mechanism: bypass raises the cores' hit rate vs ARP-NB."""
+    assert results["hydra"].core_hit_rate > results["arp-nb"].core_hit_rate
+
+
+def test_lern_accuracy_in_paper_band():
+    """§IV-D: LERN RI-prediction accuracy 79-100% across configs."""
+    model = sim.load_lern("config7", "full", PARAMS.subsample_target)
+    tr = sim.load_trace("config7", PARAMS.subsample_target)
+    from repro.core.lern import prediction_accuracy
+    acc = prediction_accuracy(model, tr)
+    assert acc > 0.7
+
+
+def test_epoch_history_recorded(results):
+    """Fig. 11 inputs: per-epoch access rate + requirement are recorded."""
+    h = results["hydra"].history
+    assert len(h["accel_rate"]) == results["hydra"].epochs
+    assert max(h["accel_rate"]) > 0
+    assert any(t != h["ri_th"][0] for t in h["ri_th"])  # thresholds move
