@@ -1,4 +1,11 @@
-"""Shared helpers for the paper-figure benchmark suite."""
+"""Shared helpers for the paper-figure benchmark suite.
+
+Figure modules build their full (config, mix, policy) cross-product as
+``SweepPoint``s and push it through the sweep engine once (``prefetch``);
+the per-row ``run_cached``/``mean_over_mixes`` reads that follow are then
+disk-cache hits.  ``--jobs N`` on benchmarks/run.py fans the prefetch over
+a process pool; ``--smoke`` shrinks the suite to a CI-sized footprint.
+"""
 from __future__ import annotations
 
 import time
@@ -6,23 +13,73 @@ from typing import Dict, List, Optional
 
 import numpy as np
 
-from repro.core import policies, sim
+from repro.core import policies, sim, sweep
 from repro.core.dram import DDR3_1600
 
 QUICK_MIXES = ["moti1", "mix3"]
 FULL_MIXES = [f"mix{i}" for i in range(1, 13)]
+SMOKE_MIXES = ["moti1"]
 QUICK_CONFIGS = ["config1", "config3", "config4", "config7", "config10"]
 FULL_CONFIGS = [f"config{i}" for i in range(1, 11)]
+SMOKE_CONFIGS = ["config1"]
 
 BASE_PARAMS = sim.SimParams(n_inputs=3, max_epochs=1500)
 
+JOBS = 1          # process-pool width for prefetch (run.py --jobs)
+SMOKE = False     # CI-sized suite (run.py --smoke)
+
+# machine-readable record of every emitted row; run.py dumps it as the
+# sweep.json artifact (schema: hydra-sweep/v1)
+SWEEP_ROWS: List[Dict] = []
+
+
+def set_jobs(n: int) -> None:
+    global JOBS
+    JOBS = max(1, int(n))
+
+
+def set_smoke() -> None:
+    """Shrink to a CI smoke footprint: one mix x one config, short trace,
+    few epochs.  BASE_PARAMS is mutated in place so figure modules that
+    imported the object directly observe the change."""
+    global SMOKE
+    SMOKE = True
+    BASE_PARAMS.n_inputs = 1
+    BASE_PARAMS.max_epochs = 60
+    BASE_PARAMS.subsample_target = 50_000
+
 
 def mixes(quick: bool) -> List[str]:
+    if SMOKE:
+        return list(SMOKE_MIXES)
     return QUICK_MIXES if quick else FULL_MIXES
 
 
 def configs(quick: bool) -> List[str]:
+    if SMOKE:
+        return list(SMOKE_CONFIGS)
     return QUICK_CONFIGS if quick else FULL_CONFIGS
+
+
+def points(config: str, pols, quick: bool,
+           params: Optional[sim.SimParams] = None,
+           dram=DDR3_1600) -> List[sweep.SweepPoint]:
+    """SweepPoints for ``pols`` (names or Policy objects) over the mix set."""
+    params = params or BASE_PARAMS
+    out = []
+    for pol in pols:
+        if isinstance(pol, str):
+            pol = policies.get(pol)
+        out.extend(sweep.SweepPoint(config, m, pol, params, dram)
+                   for m in mixes(quick))
+    return out
+
+
+def prefetch(pts: List[sweep.SweepPoint]) -> None:
+    """Evaluate a figure's cross-product through the sweep engine (batched
+    lanes, JOBS workers); subsequent cached reads are instant."""
+    if pts:
+        sweep.map_points(pts, jobs=JOBS)
 
 
 def mean_over_mixes(config: str, policy_name: str, quick: bool = True,
@@ -30,11 +87,9 @@ def mean_over_mixes(config: str, policy_name: str, quick: bool = True,
                     dram=DDR3_1600, policy=None) -> Dict[str, float]:
     """Mean (ipc, dmr, brs) over the mix set — one paper bar."""
     pol = policy or policies.get(policy_name)
-    rows = []
-    for mix in mixes(quick):
-        r = sim.run_cached(config, mix, pol, params or BASE_PARAMS,
-                           dram=dram)
-        rows.append(r.summary())
+    pts = [sweep.SweepPoint(config, m, pol, params or BASE_PARAMS, dram)
+           for m in mixes(quick)]
+    rows = [r.summary() for r in sweep.map_points(pts)]
     return {k: float(np.mean([r[k] for r in rows])) for k in rows[0]}
 
 
@@ -44,6 +99,8 @@ def emit(name: str, t0: float, derived: Dict[str, float]) -> str:
     dv = ";".join(f"{k}={v:.4g}" for k, v in derived.items())
     row = f"{name},{us:.0f},{dv}"
     print(row, flush=True)
+    SWEEP_ROWS.append({"name": name, "us_per_call": round(us),
+                       "derived": {k: float(v) for k, v in derived.items()}})
     return row
 
 

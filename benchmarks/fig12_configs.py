@@ -1,7 +1,7 @@
 """Fig. 12/13 — HyDRA vs baselines (incl. DPCP, FLASH) across configs."""
 import time
 
-from .common import configs, emit, mean_over_mixes
+from .common import configs, emit, mean_over_mixes, points, prefetch
 
 POLICIES = ["fifo-nb", "arp-nb", "arp-as-d", "arp-cs-as-d", "hydra",
             "arp-al-d", "dpcp", "flash"]
@@ -9,6 +9,8 @@ POLICIES = ["fifo-nb", "arp-nb", "arp-as-d", "arp-cs-as-d", "hydra",
 
 def run(quick: bool = True):
     rows = []
+    prefetch([pt for cfg in configs(quick)
+              for pt in points(cfg, POLICIES, quick)])
     for cfg in configs(quick):
         base = mean_over_mixes(cfg, "fifo-nb", quick)
         for pol in POLICIES:

@@ -2,22 +2,29 @@
 import time
 
 from repro.core import policies
-from .common import emit, mean_over_mixes
+from .common import emit, mean_over_mixes, points, prefetch
 
 WP = (0xFFFC, 0x0003)  # cores: ways 2-15, accel: ways 0-1
 
 
 def run(quick: bool = True):
     rows = []
+    # shared variant list: prefetch and read loop see identical policies
+    variants = [(name, wp) for name in ("fifo-nb", "hydra")
+                for wp in (False, True)]
+
+    def variant_policy(name, wp):
+        pol = policies.get(name)
+        return policies.with_way_partition(pol, *WP) if wp else pol
+
+    prefetch(points("config1", [variant_policy(n, w) for n, w in variants],
+                    quick))
     base = mean_over_mixes("config1", "fifo-nb", quick)
-    for name in ("fifo-nb", "hydra"):
-        for wp in (False, True):
-            pol = policies.get(name)
-            if wp:
-                pol = policies.with_way_partition(pol, *WP)
-            t0 = time.time()
-            r = mean_over_mixes("config1", name, quick, policy=pol)
-            tag = f"{name}-wp" if wp else name
-            rows.append(emit(f"fig18/{tag}", t0,
-                             {"speedup": r["ipc"] / base["ipc"], **r}))
+    for name, wp in variants:
+        t0 = time.time()
+        r = mean_over_mixes("config1", name, quick,
+                            policy=variant_policy(name, wp))
+        tag = f"{name}-wp" if wp else name
+        rows.append(emit(f"fig18/{tag}", t0,
+                         {"speedup": r["ipc"] / base["ipc"], **r}))
     return rows

@@ -1,14 +1,20 @@
 """Benchmark harness — one module per paper table/figure (deliverable d).
 
     PYTHONPATH=src python -m benchmarks.run [--full] [--only fig12,...]
+                                            [--jobs N] [--smoke]
+                                            [--out sweep.json]
 
-Prints ``name,us_per_call,derived`` CSV rows.  Results are disk-cached
-(.cache/sim), so repeated runs are cheap.
+Prints ``name,us_per_call,derived`` CSV rows and writes every row to a
+machine-readable ``sweep.json`` artifact (schema hydra-sweep/v1) for CI
+and bench-trajectory tracking.  Results are disk-cached (.cache/sim);
+``--jobs N`` fans uncached sweep points over N worker processes.
 """
 import argparse
 import importlib
+import json
 import sys
 import time
+
 
 MODULES = [
     "fig02_motivation", "fig05_clustering", "fig06_distribution",
@@ -25,7 +31,19 @@ def main() -> None:
                     help="all 12 mixes x 10 configs (slow)")
     ap.add_argument("--only", default=None,
                     help="comma-separated module subset")
+    ap.add_argument("--jobs", type=int, default=1,
+                    help="worker processes for uncached sweep points")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized footprint (1 mix x 1 config, tiny params)")
+    ap.add_argument("--out", default="sweep.json",
+                    help="machine-readable results artifact path")
     args = ap.parse_args()
+
+    from . import common
+    common.set_jobs(args.jobs)
+    if args.smoke:
+        common.set_smoke()
+
     mods = args.only.split(",") if args.only else MODULES
     print("name,us_per_call,derived")
     t0 = time.time()
@@ -37,8 +55,17 @@ def main() -> None:
         except Exception as e:  # keep the suite going; report at the end
             failures += 1
             print(f"{name},0,ERROR={type(e).__name__}:{e}", flush=True)
-    print(f"# total {time.time() - t0:.0f}s, {failures} module failures",
-          flush=True)
+    elapsed = time.time() - t0
+    with open(args.out, "w") as f:
+        json.dump({"schema": "hydra-sweep/v1",
+                   "modules": mods,
+                   "full": args.full, "smoke": args.smoke,
+                   "jobs": args.jobs,
+                   "elapsed_s": round(elapsed, 3),
+                   "failures": failures,
+                   "rows": common.SWEEP_ROWS}, f, indent=1)
+    print(f"# wrote {len(common.SWEEP_ROWS)} rows to {args.out}", flush=True)
+    print(f"# total {elapsed:.0f}s, {failures} module failures", flush=True)
     sys.exit(1 if failures else 0)
 
 

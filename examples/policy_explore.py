@@ -3,14 +3,14 @@ cache-policy zoo on one accelerator config + workload mix and print the
 (IPC speedup, DMR, bypass-rate) table — Fig. 10a in CSV form.
 
     PYTHONPATH=src python examples/policy_explore.py --config config3 \
-        --mix moti2
+        --mix moti2 --jobs 4
 """
 import argparse
 import sys
 
 sys.path.insert(0, "src")
 
-from repro.core import policies, sim
+from repro.core import policies, sim, sweep
 
 POLS = ["fifo-nb", "fifo-cs", "arp-nb", "arp-cs", "arp-cas", "arp-cs-as",
         "arp-as-d", "arp-al", "arp-al-d", "arp-cs-as-d", "hydra",
@@ -22,13 +22,18 @@ def main():
     ap.add_argument("--config", default="config7")
     ap.add_argument("--mix", default="moti2")
     ap.add_argument("--inputs", type=int, default=3)
+    ap.add_argument("--jobs", type=int, default=1,
+                    help="worker processes for uncached points")
     args = ap.parse_args()
     params = sim.SimParams(n_inputs=args.inputs)
+    # evaluate the whole zoo through the batched sweep engine up front
+    pts = [sweep.SweepPoint(args.config, args.mix, policies.get(p), params)
+           for p in POLS]
+    results = sweep.map_points(pts, jobs=args.jobs)
     print("policy,ipc_speedup,dmr,core_bypass_rate,accel_bypass_rate,"
           "core_hit_rate,accel_hit_rate")
     base = None
-    for pol in POLS:
-        r = sim.run_cached(args.config, args.mix, policies.get(pol), params)
+    for pol, r in zip(POLS, results):
         if base is None:
             base = r.ipc_total
         print(f"{pol},{r.ipc_total / base:.4f},{r.dmr:.3f},{r.core_br:.3f},"

@@ -159,24 +159,75 @@ def build_rounds(cfg: LLCConfig, line: np.ndarray, meta: np.ndarray,
         yield line_m, meta_m
 
 
-@functools.partial(jax.jit, static_argnames=("cfg",),
-                   donate_argnames=("state",))
-def simulate_epoch(cfg: LLCConfig, state: LLCState, line_m: jnp.ndarray,
-                   meta_m: jnp.ndarray
-                   ) -> Tuple[LLCState, jnp.ndarray, jnp.ndarray]:
-    """Run one epoch (round-major event matrices) through the LLC.
+class LaneKnobs(NamedTuple):
+    """Per-lane policy knobs carried as *data* so `jax.vmap` can batch many
+    policies through one round-engine dispatch (sweep.py).  Geometry and
+    SHIP table shape stay static arguments and must agree across lanes —
+    see `geometry_key`.  Leaves are scalars/[W] per lane; stack on axis 0
+    for `simulate_epoch_lanes`."""
+    accel_mode: jnp.ndarray        # int32
+    core_bypass: jnp.ndarray       # bool
+    shared_predictor: jnp.ndarray  # bool
+    core_ways: jnp.ndarray         # bool [W]
+    accel_ways: jnp.ndarray        # bool [W]
 
-    Returns (state, stats[len(STAT_NAMES)] int32, percore[NUM_CORES, 2]
-    (hits, misses) int32)."""
+
+def lane_knobs(cfgs) -> LaneKnobs:
+    """Stack the data-knobs of several LLCConfigs along a lane axis."""
+    w = cfgs[0].ways
+    return LaneKnobs(
+        accel_mode=jnp.asarray([c.accel_mode for c in cfgs], jnp.int32),
+        core_bypass=jnp.asarray([c.core_bypass for c in cfgs], bool),
+        shared_predictor=jnp.asarray([c.shared_predictor for c in cfgs],
+                                     bool),
+        core_ways=jnp.asarray(
+            np.stack([_mask_to_vec(c.core_way_mask, w) for c in cfgs])),
+        accel_ways=jnp.asarray(
+            np.stack([_mask_to_vec(c.accel_way_mask, w) for c in cfgs])))
+
+
+def geometry_key(cfg: LLCConfig) -> Tuple:
+    """Lanes may share one batched dispatch iff these static fields agree
+    (they fix the state shapes and the compiled kernel)."""
+    return (cfg.size_bytes, cfg.ways, cfg.line_bytes, cfg.ship,
+            cfg.sampler_shift)
+
+
+def stack_states(cfg: LLCConfig, n: int) -> LLCState:
+    """n fresh per-lane LLC states stacked on a leading lane axis."""
+    one = init_state(cfg)
+    return jax.tree.map(lambda x: jnp.broadcast_to(x, (n,) + x.shape).copy(),
+                        one)
+
+
+def _const_knobs(cfg: LLCConfig) -> LaneKnobs:
     w = cfg.ways
-    core_ways = jnp.asarray(_mask_to_vec(cfg.core_way_mask, w))
-    accel_ways = jnp.asarray(_mask_to_vec(cfg.accel_way_mask, w))
+    return LaneKnobs(
+        accel_mode=jnp.int32(cfg.accel_mode),
+        core_bypass=jnp.asarray(cfg.core_bypass),
+        shared_predictor=jnp.asarray(cfg.shared_predictor),
+        core_ways=jnp.asarray(_mask_to_vec(cfg.core_way_mask, w)),
+        accel_ways=jnp.asarray(_mask_to_vec(cfg.accel_way_mask, w)))
+
+
+def _scan_rounds(cfg: LLCConfig, knobs: LaneKnobs, state: LLCState,
+                 line_m: jnp.ndarray, meta_m: jnp.ndarray
+                 ) -> Tuple[LLCState, jnp.ndarray, jnp.ndarray]:
+    """One lane's epoch: lax.scan of the round transition.  Policy knobs
+    arrive as (possibly traced) values; with constants XLA folds the
+    selects back to the static single-policy kernel."""
+    w = cfg.ways
+    core_ways = knobs.core_ways
+    accel_ways = knobs.accel_ways
     cmax = cfg.ship.counter_max
     imax = jnp.iinfo(jnp.int32).max
     wr = jnp.arange(w, dtype=jnp.int32)
 
     sampler = (np.arange(cfg.num_sets) & ((1 << cfg.sampler_shift) - 1)) == 0
     sampler_j = jnp.asarray(sampler)
+    accel_ship = knobs.accel_mode == A_SHIP
+    accel_none = knobs.accel_mode == A_NONE
+    shared = knobs.shared_predictor
 
     def round_step(carry, ev):
         st, stats, percore = carry
@@ -194,32 +245,27 @@ def simulate_epoch(cfg: LLCConfig, state: LLCState, line_m: jnp.ndarray,
         way_hit = jnp.argmax(hit_vec, 1)
 
         sig_e = ship_mod.signature(line, cfg.ship)
-        tbl_accel = st.shct_core if cfg.shared_predictor else st.shct_accel
         pred_dead_core = st.shct_core[sig_e] == 0
-        pred_dead_accel = tbl_accel[sig_e] == 0
+        pred_dead_accel = jnp.where(shared, st.shct_core[sig_e],
+                                    st.shct_accel[sig_e]) == 0
 
-        if cfg.accel_mode == A_NONE:
-            byp_accel = jnp.zeros_like(valid)
-        elif cfg.accel_mode in (A_HINT, A_RAND):
-            byp_accel = hint
-        else:  # A_SHIP
-            byp_accel = pred_dead_accel
+        byp_accel = jnp.where(accel_ship, pred_dead_accel,
+                              jnp.where(accel_none, False, hint))
         byp_accel = byp_accel & dlok
-        byp_core = pred_dead_core if cfg.core_bypass else jnp.zeros_like(valid)
+        byp_core = pred_dead_core & knobs.core_bypass
         bypass = jnp.where(is_accel, byp_accel, byp_core) & valid & ~prefetch
         # SHIP-driven bypasses never apply in observer (sampler) sets;
         # LERN/random hints are unaffected (offline predictions).
-        if cfg.core_bypass or cfg.accel_mode == A_SHIP:
-            ship_driven = (~is_accel) | (cfg.accel_mode == A_SHIP)
-            bypass = bypass & ~(sampler_j & ship_driven)
+        ship_driven = jnp.where(is_accel, accel_ship, knobs.core_bypass)
+        bypass = bypass & ~(sampler_j & ship_driven)
 
         # --- hit path ----------------------------------------------------
         inval = is_accel & write & bypass & hit
         served_hit = hit & ~inval
         # --- miss path -----------------------------------------------------
         do_insert = (~hit) & (~bypass) & valid
-        allowed = jnp.where((is_accel | prefetch)[:, None], accel_ways[None, :],
-                            core_ways[None, :])
+        allowed = jnp.where((is_accel | prefetch)[:, None],
+                            accel_ways[None, :], core_ways[None, :])
         empty = (st.tags == -1) & allowed
         has_empty = jnp.any(empty, 1)
         first_empty = jnp.argmax(empty, 1)
@@ -258,7 +304,7 @@ def simulate_epoch(cfg: LLCConfig, state: LLCState, line_m: jnp.ndarray,
         upd_idx = jnp.where(inc, hit_sig, vic_sig)
         delta = jnp.where(inc, 1, jnp.where(dec, -1, 0))
         own_accel = jnp.where(inc, hit_owner, vic_owner) == 1
-        to_accel_tbl = own_accel & (not cfg.shared_predictor)
+        to_accel_tbl = own_accel & jnp.logical_not(shared)
         shct_core = jnp.clip(
             st.shct_core.at[upd_idx].add(
                 jnp.where(to_accel_tbl, 0, delta)), 0, cmax)
@@ -291,6 +337,33 @@ def simulate_epoch(cfg: LLCConfig, state: LLCState, line_m: jnp.ndarray,
     (state, stats, percore), _ = jax.lax.scan(
         round_step, (state, stats0, pc0), (line_m, meta_m))
     return state, stats, percore
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",),
+                   donate_argnames=("state",))
+def simulate_epoch(cfg: LLCConfig, state: LLCState, line_m: jnp.ndarray,
+                   meta_m: jnp.ndarray
+                   ) -> Tuple[LLCState, jnp.ndarray, jnp.ndarray]:
+    """Run one epoch (round-major event matrices) through the LLC.
+
+    Returns (state, stats[len(STAT_NAMES)] int32, percore[NUM_CORES, 2]
+    (hits, misses) int32)."""
+    return _scan_rounds(cfg, _const_knobs(cfg), state, line_m, meta_m)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",),
+                   donate_argnames=("states",))
+def simulate_epoch_lanes(cfg: LLCConfig, knobs: LaneKnobs, states: LLCState,
+                         line_b: jnp.ndarray, meta_b: jnp.ndarray
+                         ) -> Tuple[LLCState, jnp.ndarray, jnp.ndarray]:
+    """Lane-batched epoch: L policies advance through one dispatch.
+
+    `cfg` supplies the shared geometry (any lane's config works — the
+    caller guarantees `geometry_key` agreement); per-lane policy knobs and
+    states carry a leading lane axis, as do the [L, R, S] event matrices.
+    Returns (states, stats [L, len(STAT_NAMES)], percore [L, C, 2])."""
+    return jax.vmap(functools.partial(_scan_rounds, cfg))(
+        knobs, states, line_b, meta_b)
 
 
 def occupancy(state: LLCState) -> Tuple[int, int]:

@@ -102,7 +102,7 @@ def reuse_signature_jax(lines: jnp.ndarray) -> Dict[str, jnp.ndarray]:
     seg_start = jnp.concatenate(
         [jnp.array([True]), sorted_lines[1:] != sorted_lines[:-1]])
     idx = jnp.arange(m, dtype=jnp.int32)
-    first_of_run = jnp.maximum.accumulate(jnp.where(seg_start, idx, -1))
+    first_of_run = jax.lax.cummax(jnp.where(seg_start, idx, -1), axis=0)
     rc_sorted = idx - first_of_run + 1
     rc_run = jnp.zeros(m, jnp.int32).at[order].set(rc_sorted)
     return {"ri": ri, "rc_run": rc_run}

@@ -21,6 +21,7 @@ import hashlib
 import json
 import os
 import pickle
+import uuid
 from typing import Dict, List, Optional
 
 import jax.numpy as jnp
@@ -100,7 +101,9 @@ class SimResult:
 # artifact caching (traces + LERN models are deterministic & reusable)
 # ---------------------------------------------------------------------------
 def _atomic_dump(obj, path: str) -> None:
-    tmp = path + f".{os.getpid()}.tmp"
+    # pid alone is not unique across threads of one process — tag with a
+    # uuid so same-process threaded callers can't collide on the tmp file.
+    tmp = path + f".{os.getpid()}.{uuid.uuid4().hex}.tmp"
     with open(tmp, "wb") as f:
         pickle.dump(obj, f)
     os.replace(tmp, path)
@@ -211,139 +214,191 @@ def _mg1_delay(rho: float, service: float) -> float:
 # ---------------------------------------------------------------------------
 # main simulation
 # ---------------------------------------------------------------------------
-def run(config: str, mix: str, policy: Policy,
-        params: Optional[SimParams] = None,
-        dram: DramModel = DDR3_1600,
-        deadline_cycles: Optional[float] = None,
-        core_traffic: bool = True) -> SimResult:
-    p = params or SimParams()
-    et = float(p.epoch_cycles)
-    rng = np.random.default_rng(p.seed)
+@dataclasses.dataclass
+class Artifacts:
+    """Policy-independent simulation inputs for one (config, mix, params).
 
-    # --- workload artifacts --------------------------------------------------
+    Deterministic in their key, so a multi-policy sweep group loads them
+    once and every lane shares the same arrays (sweep.py)."""
+    trace: Trace
+    profiles: List
+    est: List[int]
+    streams: List[np.ndarray]
+
+
+def load_artifacts(config: str, mix: str, p: SimParams,
+                   core_traffic: bool = True) -> Artifacts:
     tr = load_trace(config, p.subsample_target)
-    m_total = tr.num_accesses
-    need_lern = policy.accel_predictor == "lern"
-    clusters = (trace_clusters(config, policy.lrpt_variant, p.subsample_target)
-                if need_lern else None)
-    afr_hints = (rng.random(m_total) < policy.afr_p) if policy.accel_predictor == "random" else None
-
     profiles = [cores_mod.PROFILES[b] for b in cores_mod.MIXES[mix]]
-    n_cores = len(profiles)
-    streams = []
-    writes = []
+    streams: List[np.ndarray] = []
+    est: List[int] = []
     if core_traffic:
+        et = float(p.epoch_cycles)
         est = [max(1024, cores_mod.epoch_accesses(pr, pr.ipc0, et)
                    * p.max_epochs) for pr in profiles]
         for k, pr in enumerate(profiles):
             s = cores_mod.generate_stream_fast(pr, est[k], k, seed=p.seed)
             streams.append(s.astype(np.int64))
-            writes.append(rng.random(est[k]) < pr.write_frac)
+    return Artifacts(trace=tr, profiles=profiles, est=est, streams=streams)
 
-    # --- deadline ------------------------------------------------------------
-    if deadline_cycles is None:
-        deadline_cycles = calibrated_deadline(config, p, dram)
-    deadline = float(deadline_cycles)
-    period = deadline  # 10-IPS-style periodic arrival
 
-    # --- LLC / predictor configuration --------------------------------------
-    cw, aw = (policy.way_partition or (0xFFFF, 0xFFFF))
-    llc_cfg = LLCConfig(
-        size_bytes=p.llc_size_bytes, ways=p.llc_ways,
-        core_bypass=policy.core_bypass, accel_mode=policy.accel_mode,
-        shared_predictor=policy.shared_predictor,
-        core_way_mask=cw, accel_way_mask=aw, ship=policy.ship_params)
-    state = llc_mod.init_state(llc_cfg)
+class Lane:
+    """One policy's epoch-by-epoch simulation state.
 
-    apm = APMState(m_total=m_total, deadline=deadline, epoch_len=et,
-                   params=policy.apm)
+    The loop body of the original monolithic ``run`` is split in two so
+    the LLC content simulation can be hoisted out and batched across many
+    policy lanes (core/sweep.py): ``begin_epoch`` covers arbitration,
+    admission, APM thresholds and event-list construction; ``finish_epoch``
+    consumes the LLC stats and does the fluid-timing update and progress
+    bookkeeping.  The caller owns the jax LLC state and the engine calls.
 
-    # --- dynamic state -------------------------------------------------------
-    ipc = np.array([pr.ipc0 for pr in profiles])
-    hr_core = 0.5
-    hr_accel = 0.3
-    amal = 200.0
-    w_dram = 0.0
-    stream_pos = np.zeros(n_cores, dtype=np.int64)
+    Per-lane RNG draws (AFRp hints, core write flags) replay the exact
+    draw order of the original ``run`` so results stay bitwise-identical.
+    """
 
-    input_idx = 0
-    pos = 0                      # accesses completed in current input
-    input_start = 0.0
-    completions: List[float] = []
-    now = 0.0
-    ri_th, rc_th, special = p.al_ri_th, p.al_rc_th, False
-    if policy.hydra:
-        ri_th, rc_th, special = 3, -1, False  # conservative start
+    def __init__(self, config: str, mix: str, policy: Policy, params: SimParams,
+                 dram: DramModel, deadline: float, art: Artifacts,
+                 core_traffic: bool = True):
+        self.config, self.mix = config, mix
+        self.policy, self.p, self.dram = policy, params, dram
+        self.core_traffic = core_traffic
+        p = params
+        self.et = float(p.epoch_cycles)
+        rng = np.random.default_rng(p.seed)
 
-    total_instr = 0.0
-    total_core_hits = 0
-    total_core_miss = 0
-    total_core_byp = 0
-    total_accel_hits = 0
-    total_accel_miss = 0
-    total_accel_byp = 0
-    total_accel_acc = 0
-    total_llc = 0.0
-    total_dram = 0.0
-    hist: Dict[str, List[float]] = {k: [] for k in (
-        "accel_rate", "requirement", "ri_th", "rc_th", "core_ipc", "amal")}
-    occ: List[List[float]] = []
+        self.tr = art.trace
+        self.m_total = self.tr.num_accesses
+        need_lern = policy.accel_predictor == "lern"
+        self.clusters = (trace_clusters(config, policy.lrpt_variant,
+                                        p.subsample_target)
+                         if need_lern else None)
+        self.afr_hints = ((rng.random(self.m_total) < policy.afr_p)
+                          if policy.accel_predictor == "random" else None)
 
-    epoch = 0
-    llc_capacity = p.llc_rate * et
-    s_llc = 1.0 / p.llc_rate
+        self.profiles = art.profiles
+        self.n_cores = len(art.profiles)
+        self.streams = art.streams
+        self.writes: List[np.ndarray] = []
+        if core_traffic:
+            for k, pr in enumerate(art.profiles):
+                self.writes.append(rng.random(art.est[k]) < pr.write_frac)
 
-    dram_cap = dram.rate * et
-    cm_prev = 0.0
-    pf_prev = 0.0
-    while epoch < p.max_epochs and input_idx < p.n_inputs:
+        self.deadline = float(deadline)
+        self.period = self.deadline  # 10-IPS-style periodic arrival
+
+        cw, aw = (policy.way_partition or (0xFFFF, 0xFFFF))
+        self.llc_cfg = LLCConfig(
+            size_bytes=p.llc_size_bytes, ways=p.llc_ways,
+            core_bypass=policy.core_bypass, accel_mode=policy.accel_mode,
+            shared_predictor=policy.shared_predictor,
+            core_way_mask=cw, accel_way_mask=aw, ship=policy.ship_params)
+
+        self.apm = APMState(m_total=self.m_total, deadline=self.deadline,
+                            epoch_len=self.et, params=policy.apm)
+
+        # --- dynamic state (names kept from the original loop) -------------
+        self.ipc = np.array([pr.ipc0 for pr in art.profiles])
+        self.hr_core = 0.5
+        self.hr_accel = 0.3
+        self.amal = 200.0
+        self.stream_pos = np.zeros(self.n_cores, dtype=np.int64)
+
+        self.input_idx = 0
+        self.pos = 0                 # accesses completed in current input
+        self.input_start = 0.0
+        self.completions: List[float] = []
+        self.now = 0.0
+        self.ri_th, self.rc_th, self.special = p.al_ri_th, p.al_rc_th, False
+        if policy.hydra:
+            self.ri_th, self.rc_th, self.special = 3, -1, False  # conservative
+
+        self.total_instr = 0.0
+        self.total_core_hits = 0
+        self.total_core_miss = 0
+        self.total_core_byp = 0
+        self.total_accel_hits = 0
+        self.total_accel_miss = 0
+        self.total_accel_byp = 0
+        self.total_accel_acc = 0
+        self.total_llc = 0.0
+        self.total_dram = 0.0
+        self.hist: Dict[str, List[float]] = {k: [] for k in (
+            "accel_rate", "requirement", "ri_th", "rc_th", "core_ipc", "amal")}
+        self.occ: List[List[float]] = []
+
+        self.epoch = 0
+        self.llc_capacity = p.llc_rate * self.et
+        self.s_llc = 1.0 / p.llc_rate
+        self.dram_cap = dram.rate * self.et
+        self.cm_prev = 0.0
+        self.pf_prev = 0.0
+        # per-epoch scratch carried from begin_epoch to finish_epoch
+        self._n_a = 0
+        self._shed_core = np.ones(self.n_cores)
+        self._accel_prio = False
+
+    @property
+    def active(self) -> bool:
+        return (self.epoch < self.p.max_epochs
+                and self.input_idx < self.p.n_inputs)
+
+    def begin_epoch(self):
+        """Advance to this epoch's event list: ``(line, meta)`` ordered
+        arrays for build_rounds, or ``None`` when the epoch is empty."""
+        p, policy, apm, et = self.p, self.policy, self.apm, self.et
+        tr = self.tr
+
         # ---- arbitration mode -----------------------------------------
-        arrived = now >= input_start
-        remaining = m_total - pos
+        arrived = self.now >= self.input_start
+        remaining = self.m_total - self.pos
         flash_accel_prio = False
         if policy.arbitration == "flash":
             req = apm.ma_global
-            done_rate = (pos / max((now - input_start) / et, 1.0)
+            done_rate = (self.pos / max((self.now - self.input_start) / et, 1.0)
                          if arrived else req)
             flash_accel_prio = done_rate < req
         accel_prio = (policy.arbitration == "arp") or flash_accel_prio
+        self._accel_prio = accel_prio
 
         # ---- accelerator admission ------------------------------------
         # bounded by (a) DMA queue depth / achieved latency, (b) its DRAM
         # share (misses must fit the epoch's DRAM budget), (c) LLC slot cap.
         if arrived and remaining > 0:
-            miss_rate_a = max(1.0 - hr_accel, 0.05)
+            miss_rate_a = max(1.0 - self.hr_accel, 0.05)
             if accel_prio:
-                dram_share_a = dram_cap          # fills issued first
+                dram_share_a = self.dram_cap     # fills issued first
             else:
-                dram_share_a = max(dram_cap - cm_prev - pf_prev, 0.1 * dram_cap)
+                dram_share_a = max(self.dram_cap - self.cm_prev - self.pf_prev,
+                                   0.1 * self.dram_cap)
             demand_a = min(remaining,
-                           int(p.mlp_accel * et / max(amal, 1.0)),
+                           int(p.mlp_accel * et / max(self.amal, 1.0)),
                            int(dram_share_a / miss_rate_a),
                            p.accel_epoch_cap)
         else:
             demand_a = 0
 
         # ---- core demand ------------------------------------------------
-        n_c = np.array([cores_mod.epoch_accesses(pr, ipc[k], et)
-                        if core_traffic else 0
-                        for k, pr in enumerate(profiles)], dtype=np.int64)
+        n_c = np.array([cores_mod.epoch_accesses(pr, self.ipc[k], et)
+                        if self.core_traffic else 0
+                        for k, pr in enumerate(self.profiles)], dtype=np.int64)
 
         # ---- LLC controller bandwidth / shedding -------------------------
         total_demand = demand_a + int(n_c.sum())
-        shed_core = np.ones(n_cores)
+        shed_core = np.ones(self.n_cores)
         n_a = demand_a
-        if total_demand > llc_capacity:
+        if total_demand > self.llc_capacity:
             if accel_prio:
-                n_a = min(demand_a, int(llc_capacity))
-                rem = llc_capacity - n_a
+                n_a = min(demand_a, int(self.llc_capacity))
+                rem = self.llc_capacity - n_a
                 f = rem / max(int(n_c.sum()), 1)
                 shed_core[:] = min(f, 1.0)
             else:
-                f = llc_capacity / total_demand
+                f = self.llc_capacity / total_demand
                 n_a = int(demand_a * f)
                 shed_core[:] = f
         n_c = (n_c * shed_core).astype(np.int64)
+        self._n_a = n_a
+        self._shed_core = shed_core
 
         # ---- HyDRA / APM epoch decision -----------------------------------
         switch_point = -1
@@ -351,18 +406,19 @@ def run(config: str, mix: str, policy: Policy,
             # §III-C1: bypass starts after t x required accesses complete
             switch_point = int(policy.asth_t * apm.ma_global)
         if policy.hydra and arrived and remaining > 0:
-            rt = max((input_start + deadline) - now, et)
-            elapsed = max(deadline - rt, 0.0)
-            ma_past = ((m_total - remaining) * et / elapsed
+            rt = max((self.input_start + self.deadline) - self.now, et)
+            elapsed = max(self.deadline - rt, 0.0)
+            ma_past = ((self.m_total - remaining) * et / elapsed
                        if elapsed >= et else apm.ma_global)
-            mr_i = 1.0 - hr_core
+            mr_i = 1.0 - self.hr_core
             ma_i = apm.epoch_requirement(remaining, rt, mr_i, ma_past)
             th = apm.bypass_thresholds(ma_i)
-            ma_hat = p.mlp_accel * et / max(amal, 1.0)
-            ri_th, rc_th, special = apm.reuse_thresholds(ma_hat, ma_i, th)
-            hist["requirement"].append(ma_i)
+            ma_hat = p.mlp_accel * et / max(self.amal, 1.0)
+            self.ri_th, self.rc_th, self.special = apm.reuse_thresholds(
+                ma_hat, ma_i, th)
+            self.hist["requirement"].append(ma_i)
         else:
-            hist["requirement"].append(apm.ma_global if arrived else 0.0)
+            self.hist["requirement"].append(apm.ma_global if arrived else 0.0)
 
         # ---- build the epoch event list -----------------------------------
         ev_line = []
@@ -373,16 +429,17 @@ def run(config: str, mix: str, policy: Policy,
         ev_src = []
         ev_when = []
         if n_a > 0:
-            sl = slice(pos, pos + n_a)
+            sl = slice(self.pos, self.pos + n_a)
             lines_a = tr.line[sl].astype(np.int64)
             writes_a = tr.write[sl]
-            if policy.accel_mode == A_HINT and clusters is not None:
-                layer_now = int(tr.layer[pos])
+            if policy.accel_mode == A_HINT and self.clusters is not None:
+                layer_now = int(tr.layer[self.pos])
                 hints = bypass_mask(
-                    clusters["rc"][sl], clusters["ri"][sl], ri_th, rc_th,
-                    special, float(clusters["cold_center"][layer_now]))
+                    self.clusters["rc"][sl], self.clusters["ri"][sl],
+                    self.ri_th, self.rc_th, self.special,
+                    float(self.clusters["cold_center"][layer_now]))
             elif policy.accel_mode == A_RAND:
-                hints = afr_hints[sl]
+                hints = self.afr_hints[sl]
             else:
                 hints = np.zeros(n_a, dtype=bool)
             ev_line.append(lines_a)
@@ -400,62 +457,63 @@ def run(config: str, mix: str, policy: Policy,
                 ev_pf.append(np.ones(n_a, bool))
                 ev_src.append(np.zeros(n_a, np.int64))
                 ev_when.append(np.linspace(0, 1, n_a, endpoint=False) + 1e-4)
-        for k in range(n_cores):
+        for k in range(self.n_cores):
             nk = int(n_c[k])
             if nk == 0:
                 continue
-            sl = slice(int(stream_pos[k]), int(stream_pos[k]) + nk)
-            ev_line.append(streams[k][sl])
+            sl = slice(int(self.stream_pos[k]), int(self.stream_pos[k]) + nk)
+            ev_line.append(self.streams[k][sl])
             ev_accel.append(np.zeros(nk, bool))
-            ev_write.append(writes[k][sl])
+            ev_write.append(self.writes[k][sl])
             ev_hint.append(np.zeros(nk, bool))
             ev_pf.append(np.zeros(nk, bool))
             ev_src.append(np.full(nk, k, np.int64))
             ev_when.append(np.linspace(0, 1, nk, endpoint=False))
-            stream_pos[k] += nk
+            self.stream_pos[k] += nk
 
         n_ev = sum(len(x) for x in ev_line)
-        if n_ev > 0:
-            order = np.argsort(np.concatenate(ev_when), kind="stable")
-            line = np.concatenate(ev_line)[order]
-            isacc = np.concatenate(ev_accel)[order]
-            wr = np.concatenate(ev_write)[order]
-            hint = np.concatenate(ev_hint)[order]
-            pf = np.concatenate(ev_pf)[order]
-            src = np.concatenate(ev_src)[order]
-            # exact per-event deadline switch: bypass active once the count
-            # of accel accesses this epoch exceeds switch_point (§III-C1)
-            acc_seen = np.cumsum(isacc & ~pf)
-            dlok = acc_seen > switch_point
-            meta = pack_meta(isacc, wr, hint, pf, dlok, src)
-            stats = np.zeros(len(llc_mod.STAT_NAMES), np.int64)
-            percore = np.zeros((llc_mod.NUM_CORES, 2), np.int64)
-            for line_m, meta_m in build_rounds(llc_cfg, line, meta):
-                state, st_c, pc_c = llc_mod.simulate_epoch(
-                    llc_cfg, state, jnp.asarray(line_m), jnp.asarray(meta_m))
-                stats = stats + np.asarray(st_c)
-                percore = percore + np.asarray(pc_c)
-        else:
-            stats = np.zeros(len(llc_mod.STAT_NAMES), np.int64)
-            percore = np.zeros((llc_mod.NUM_CORES, 2), np.int64)
-        st = dict(zip(llc_mod.STAT_NAMES, stats.tolist()))
+        if n_ev == 0:
+            return None
+        order = np.argsort(np.concatenate(ev_when), kind="stable")
+        line = np.concatenate(ev_line)[order]
+        isacc = np.concatenate(ev_accel)[order]
+        wr = np.concatenate(ev_write)[order]
+        hint = np.concatenate(ev_hint)[order]
+        pf = np.concatenate(ev_pf)[order]
+        src = np.concatenate(ev_src)[order]
+        # exact per-event deadline switch: bypass active once the count
+        # of accel accesses this epoch exceeds switch_point (§III-C1)
+        acc_seen = np.cumsum(isacc & ~pf)
+        dlok = acc_seen > switch_point
+        meta = pack_meta(isacc, wr, hint, pf, dlok, src)
+        return line, meta
+
+    def finish_epoch(self, stats: np.ndarray, percore: np.ndarray,
+                     llc_state=None) -> None:
+        """Consume the epoch's LLC stats: fluid-timing update + progress."""
+        p, et = self.p, self.et
+        dram = self.dram
+        n_a = self._n_a
+        accel_prio = self._accel_prio
+        st = dict(zip(llc_mod.STAT_NAMES, np.asarray(stats).tolist()))
 
         # ---- timing update -------------------------------------------------
         ch, cm = st["core_hits"], st["core_misses"]
         ah, am = st["accel_hits"], st["accel_misses"]
-        hr_core = ch / max(ch + cm, 1)
-        hr_accel = ah / max(ah + am, 1)
+        self.hr_core = ch / max(ch + cm, 1)
+        self.hr_accel = ah / max(ah + am, 1)
         # LLC controller utilization: bypassed fills cost a tag lookup only;
         # bypassed accel writes use the direct path (zero LLC service).
         llc_units = (ch + cm + ah + am
                      - 0.7 * (st["core_bypasses"] + st["accel_bypasses"])
                      - 0.3 * st["accel_writes_bypassed"])
-        rho_llc = llc_units / llc_capacity
-        rho_a_llc = (ah + am) / llc_capacity
+        rho_llc = llc_units / self.llc_capacity
+        rho_a_llc = (ah + am) / self.llc_capacity
         dram_traffic = cm + am + st["prefetch_fills"]
         w_cap_dram = p.w_cap * dram.latency_cycles
         w_dram_fifo = min(dram.queue_delay(dram_traffic, et), w_cap_dram)
         rho_a_dram = dram.utilization(am, et)
+        s_llc = self.s_llc
         if accel_prio:
             # accel requests (and their fills) are issued first by the LLC
             # controller; cores queue behind them on both paths.
@@ -472,59 +530,100 @@ def run(config: str, mix: str, policy: Policy,
             w_dram_a = w_dram_c = w_dram_fifo
         miss_lat_c = p.llc_hit_lat + w_llc_c + dram.latency_cycles + w_dram_c
         miss_lat_a = p.llc_hit_lat + w_llc_a + dram.latency_cycles + w_dram_a
-        cm_prev, pf_prev = float(cm), float(st["prefetch_fills"])
-        for k, pr in enumerate(profiles):
+        self.cm_prev, self.pf_prev = float(cm), float(st["prefetch_fills"])
+        for k, pr in enumerate(self.profiles):
             hk = percore[k, 0] / max(percore[k, 0] + percore[k, 1], 1)
-            ipc[k] = cores_mod.core_ipc(pr, hk, p.llc_hit_lat, miss_lat_c,
-                                        w_llc_c)
+            self.ipc[k] = cores_mod.core_ipc(pr, hk, p.llc_hit_lat,
+                                             miss_lat_c, w_llc_c)
         if n_a > 0:
-            amal = (hr_accel * (p.llc_hit_lat + w_llc_a)
-                    + (1 - hr_accel) * miss_lat_a)
+            self.amal = (self.hr_accel * (p.llc_hit_lat + w_llc_a)
+                         + (1 - self.hr_accel) * miss_lat_a)
 
-        total_instr += float(np.sum(ipc * shed_core) * et)
-        total_core_hits += ch
-        total_core_miss += cm
-        total_core_byp += st["core_bypasses"]
-        total_accel_hits += ah
-        total_accel_miss += am
-        total_accel_byp += st["accel_bypasses"]
-        total_accel_acc += n_a
-        total_llc += llc_units
-        total_dram += dram_traffic
+        self.total_instr += float(np.sum(self.ipc * self._shed_core) * et)
+        self.total_core_hits += ch
+        self.total_core_miss += cm
+        self.total_core_byp += st["core_bypasses"]
+        self.total_accel_hits += ah
+        self.total_accel_miss += am
+        self.total_accel_byp += st["accel_bypasses"]
+        self.total_accel_acc += n_a
+        self.total_llc += llc_units
+        self.total_dram += dram_traffic
 
-        hist["accel_rate"].append(float(n_a))
-        hist["ri_th"].append(float(ri_th))
-        hist["rc_th"].append(float(rc_th))
-        hist["core_ipc"].append(float(np.sum(ipc * shed_core)))
-        hist["amal"].append(float(amal))
-        if p.record_occupancy:
-            occ.append(list(llc_mod.occupancy(state)))
+        self.hist["accel_rate"].append(float(n_a))
+        self.hist["ri_th"].append(float(self.ri_th))
+        self.hist["rc_th"].append(float(self.rc_th))
+        self.hist["core_ipc"].append(float(np.sum(self.ipc * self._shed_core)))
+        self.hist["amal"].append(float(self.amal))
+        if p.record_occupancy and llc_state is not None:
+            self.occ.append(list(llc_mod.occupancy(llc_state)))
 
         # ---- progress bookkeeping ------------------------------------------
-        now += et
+        self.now += et
         if n_a > 0:
-            pos += n_a
-            if pos >= m_total:
-                completions.append(now - input_start)
-                input_idx += 1
-                pos = 0
-                input_start = max(input_start + period, now)
-        epoch += 1
+            self.pos += n_a
+            if self.pos >= self.m_total:
+                self.completions.append(self.now - self.input_start)
+                self.input_idx += 1
+                self.pos = 0
+                self.input_start = max(self.input_start + self.period, self.now)
+        self.epoch += 1
 
-    dmr = (float(np.mean([c > deadline for c in completions]))
-           if completions else 1.0)
-    n_epochs = max(epoch, 1)
-    return SimResult(
-        policy=policy.name, config=config, mix=mix,
-        ipc_total=total_instr / (n_epochs * et),
-        dmr=dmr,
-        core_br=total_core_byp / max(total_core_hits + total_core_miss, 1),
-        accel_br=total_accel_byp / max(total_accel_acc, 1),
-        core_hit_rate=total_core_hits / max(total_core_hits + total_core_miss, 1),
-        accel_hit_rate=total_accel_hits / max(total_accel_acc, 1),
-        completion_cycles=completions, deadline_cycles=deadline,
-        epochs=epoch, history=hist, occupancy=occ,
-        llc_accesses=total_llc, dram_accesses=total_dram)
+    def result(self) -> SimResult:
+        completions, deadline = self.completions, self.deadline
+        dmr = (float(np.mean([c > deadline for c in completions]))
+               if completions else 1.0)
+        n_epochs = max(self.epoch, 1)
+        core_acc = max(self.total_core_hits + self.total_core_miss, 1)
+        return SimResult(
+            policy=self.policy.name, config=self.config, mix=self.mix,
+            ipc_total=self.total_instr / (n_epochs * self.et),
+            dmr=dmr,
+            core_br=self.total_core_byp / core_acc,
+            accel_br=self.total_accel_byp / max(self.total_accel_acc, 1),
+            core_hit_rate=self.total_core_hits / core_acc,
+            accel_hit_rate=self.total_accel_hits / max(self.total_accel_acc, 1),
+            completion_cycles=completions, deadline_cycles=deadline,
+            epochs=self.epoch, history=self.hist, occupancy=self.occ,
+            llc_accesses=self.total_llc, dram_accesses=self.total_dram)
+
+
+def drive_lane(lane: Lane, state=None) -> SimResult:
+    """Drive one Lane to completion through the static-config LLC engine.
+
+    The sequential reference loop — the batched sweep path (core/sweep.py)
+    must match it bitwise (tests/test_sweep.py) and reuses it for
+    single-lane groups (``state`` carries a mid-run lane's LLC content)."""
+    llc_cfg = lane.llc_cfg
+    if state is None:
+        state = llc_mod.init_state(llc_cfg)
+    while lane.active:
+        ev = lane.begin_epoch()
+        stats = np.zeros(len(llc_mod.STAT_NAMES), np.int64)
+        percore = np.zeros((llc_mod.NUM_CORES, 2), np.int64)
+        if ev is not None:
+            line, meta = ev
+            for line_m, meta_m in build_rounds(llc_cfg, line, meta):
+                state, st_c, pc_c = llc_mod.simulate_epoch(
+                    llc_cfg, state, jnp.asarray(line_m), jnp.asarray(meta_m))
+                stats = stats + np.asarray(st_c)
+                percore = percore + np.asarray(pc_c)
+        lane.finish_epoch(stats, percore, llc_state=state)
+    return lane.result()
+
+
+def run(config: str, mix: str, policy: Policy,
+        params: Optional[SimParams] = None,
+        dram: DramModel = DDR3_1600,
+        deadline_cycles: Optional[float] = None,
+        core_traffic: bool = True) -> SimResult:
+    """Sequential single-point reference: load artifacts, drive one Lane."""
+    p = params or SimParams()
+    art = load_artifacts(config, mix, p, core_traffic)
+    if deadline_cycles is None:
+        deadline_cycles = calibrated_deadline(config, p, dram)
+    return drive_lane(Lane(config, mix, policy, p, dram,
+                           float(deadline_cycles), art, core_traffic))
 
 
 def calibrated_deadline(config: str, p: SimParams, dram: DramModel) -> float:
@@ -549,16 +648,25 @@ def calibrated_deadline(config: str, p: SimParams, dram: DramModel) -> float:
     return t0 * p.deadline_factor
 
 
-def run_cached(config: str, mix: str, policy: Policy,
-               params: Optional[SimParams] = None,
-               dram: DramModel = DDR3_1600, **kw) -> SimResult:
-    """Disk-cached wrapper keyed by all inputs (benchmarks call this)."""
+def result_cache_path(config: str, mix: str, policy: Policy,
+                      params: Optional[SimParams] = None,
+                      dram: DramModel = DDR3_1600, **kw) -> str:
+    """Disk-cache location of one simulated point, keyed by all inputs.
+    Shared between run_cached and the sweep engine's dedup layer."""
     p = params or SimParams()
     key = json.dumps({"c": config, "m": mix, "pol": dataclasses.asdict(policy),
                       "par": dataclasses.asdict(p), "d": dram.name,
                       "kw": {k: str(v) for k, v in kw.items()}},
                      sort_keys=True, default=str)
-    path = _cache_path("sim", hashlib.md5(key.encode()).hexdigest())
+    return _cache_path("sim", hashlib.md5(key.encode()).hexdigest())
+
+
+def run_cached(config: str, mix: str, policy: Policy,
+               params: Optional[SimParams] = None,
+               dram: DramModel = DDR3_1600, **kw) -> SimResult:
+    """Disk-cached wrapper keyed by all inputs (benchmarks call this)."""
+    p = params or SimParams()
+    path = result_cache_path(config, mix, policy, p, dram, **kw)
     if os.path.exists(path):
         with open(path, "rb") as f:
             return pickle.load(f)

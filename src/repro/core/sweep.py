@@ -1,0 +1,260 @@
+"""Batched multi-policy sweep engine.
+
+The paper's evaluation is a large cross-product — policies x configs x
+mixes x DRAM/LLC variants (Figs. 10-20) — and every point used to go
+through ``sim.run`` one at a time.  This module batches that cross-product
+at two levels:
+
+* **Within a (config, mix, params, dram) group** all requested policies
+  are simulated in one pass: the trace, LERN clusters and core streams are
+  loaded once (``sim.load_artifacts``), each policy advances as a
+  ``sim.Lane``, and every epoch's LLC round chunks are pushed through a
+  single vmapped dispatch (``llc.simulate_epoch_lanes``) instead of one
+  dispatch per policy.  Lanes whose LLC geometry diverges (e.g. the
+  SHIP_LARGE predictor-size study) are partitioned into geometry-compatible
+  sub-batches, degenerating to a per-lane loop when nothing matches.
+  Results are bitwise-identical to sequential ``sim.run``
+  (tests/test_sweep.py).
+
+* **Across groups** ``map_points`` fans independent groups over a
+  spawn-based process pool.  The existing sim disk cache is the dedup
+  layer: cached points are skipped up front, finished groups are written
+  back with atomic renames so concurrent workers (or concurrent benchmark
+  invocations) never observe torn results.  Deadline calibrations — the
+  one artifact shared *across* groups of one config — are precomputed
+  first so workers don't race to simulate them redundantly.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import pickle
+from concurrent.futures import ProcessPoolExecutor
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from . import llc
+from . import sim
+from .dram import DDR3_1600, DramModel
+from .policies import Policy
+
+# Default lane width: keeps vmap working-set small and gives the process
+# pool enough independent tasks to fill its workers even for single-mix
+# figure sweeps.
+MAX_LANES = 4
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepPoint:
+    """One cell of the evaluation cross-product."""
+    config: str
+    mix: str
+    policy: Policy
+    params: Optional[sim.SimParams] = None
+    dram: DramModel = DDR3_1600
+
+    def resolved_params(self) -> sim.SimParams:
+        return self.params or sim.SimParams()
+
+    def cache_path(self) -> str:
+        return sim.result_cache_path(self.config, self.mix, self.policy,
+                                     self.resolved_params(), self.dram)
+
+
+# ---------------------------------------------------------------------------
+# one-pass multi-policy group simulation
+# ---------------------------------------------------------------------------
+def simulate_group(config: str, mix: str, pols: Sequence[Policy],
+                   params: Optional[sim.SimParams] = None,
+                   dram: DramModel = DDR3_1600,
+                   deadline_cycles: Optional[float] = None,
+                   core_traffic: bool = True) -> List[sim.SimResult]:
+    """Simulate several policies on one (config, mix) trace in one pass.
+
+    Order of results matches ``pols``.  Equivalent to (and bitwise
+    consistent with) ``[sim.run(config, mix, p, ...) for p in pols]``.
+    """
+    p = params or sim.SimParams()
+    if deadline_cycles is None:
+        deadline_cycles = sim.calibrated_deadline(config, p, dram)
+    art = sim.load_artifacts(config, mix, p, core_traffic)
+    lanes = [sim.Lane(config, mix, pol, p, dram, float(deadline_cycles), art,
+                      core_traffic) for pol in pols]
+    # partition into geometry-compatible sub-batches (stable order)
+    batches: Dict[Tuple, List[sim.Lane]] = {}
+    for lane in lanes:
+        batches.setdefault(llc.geometry_key(lane.llc_cfg), []).append(lane)
+    for batch in batches.values():
+        _drive_lanes(batch)
+    return [lane.result() for lane in lanes]
+
+
+def _drive_lanes(lanes: List[sim.Lane]) -> None:
+    """Advance a geometry-compatible batch of lanes to completion.
+
+    Each epoch: every active lane builds its event list on the host, the
+    per-lane round chunks are padded to a common [L, R, S] block, and one
+    ``simulate_epoch_lanes`` dispatch advances all LLC states.  Padded
+    rounds are invalid events (meta 0) — no-ops for cache content, so
+    per-lane results match the unpadded sequential engine exactly.
+    """
+    import jax
+    import jax.numpy as jnp  # deferred: keep module import light for the pool
+
+    cfg0 = lanes[0].llc_cfg
+    num_sets = cfg0.num_sets
+    n_stats = len(llc.STAT_NAMES)
+    pending = [lane for lane in lanes if lane.active]
+    knobs = llc.lane_knobs([lane.llc_cfg for lane in pending])
+    states = llc.stack_states(cfg0, len(pending))
+
+    while pending:
+        if len(pending) == 1:
+            # lone survivor (or single-lane group): static engine, shared
+            # kernels with sim.run, no vmap padding; continue from the
+            # lane's current LLC content
+            sim.drive_lane(pending[0], state=_lane_state(states, 0))
+            return
+        n_lanes = len(pending)
+        evs = [lane.begin_epoch() for lane in pending]
+        chunk_lists = [list(llc.build_rounds(cfg0, *ev))
+                       if ev is not None else [] for ev in evs]
+        stats = np.zeros((n_lanes, n_stats), np.int64)
+        percore = np.zeros((n_lanes, llc.NUM_CORES, 2), np.int64)
+        n_chunks = max((len(cl) for cl in chunk_lists), default=0)
+        for c in range(n_chunks):
+            r_pad = max(cl[c][0].shape[0]
+                        for cl in chunk_lists if len(cl) > c)
+            line_b = np.full((n_lanes, r_pad, num_sets), -1, np.int32)
+            meta_b = np.zeros((n_lanes, r_pad, num_sets), np.int32)
+            for i, cl in enumerate(chunk_lists):
+                if len(cl) > c:
+                    lm, mm = cl[c]
+                    line_b[i, :lm.shape[0]] = lm
+                    meta_b[i, :mm.shape[0]] = mm
+            states, st_b, pc_b = llc.simulate_epoch_lanes(
+                cfg0, knobs, states, jnp.asarray(line_b), jnp.asarray(meta_b))
+            stats += np.asarray(st_b, np.int64)
+            percore += np.asarray(pc_b, np.int64)
+        for i, lane in enumerate(pending):
+            lane_state = (_lane_state(states, i)
+                          if lane.p.record_occupancy else None)
+            lane.finish_epoch(stats[i], percore[i], llc_state=lane_state)
+        # drop finished lanes so long-running survivors stop paying for
+        # all-padding dispatches on the finished lanes' slots
+        still = [i for i, lane in enumerate(pending) if lane.active]
+        if len(still) < n_lanes:
+            pending = [pending[i] for i in still]
+            if pending:
+                sel = np.asarray(still)
+                knobs = jax.tree.map(lambda x: x[sel], knobs)
+                states = jax.tree.map(lambda x: x[sel], states)
+
+
+def _lane_state(states: llc.LLCState, i: int) -> llc.LLCState:
+    import jax
+    return jax.tree.map(lambda x: x[i], states)
+
+
+# ---------------------------------------------------------------------------
+# cross-group orchestration (process pool + disk-cache dedup)
+# ---------------------------------------------------------------------------
+def _params_key(p: sim.SimParams, dram: DramModel) -> str:
+    return json.dumps({"par": dataclasses.asdict(p), "d": dram.name},
+                      sort_keys=True, default=str)
+
+
+def _worker_init(cache_dir: str) -> None:
+    # sim is already imported (unpickling this initializer imports sweep),
+    # so its import-time XLA-cache config came from the inherited env;
+    # propagate a programmatic CACHE_DIR override (e.g. test monkeypatch)
+    # to the artifact caches here, and to the persistent XLA cache too.
+    sim.CACHE_DIR = cache_dir
+    if os.environ.get("REPRO_JIT_CACHE", "1") == "1":
+        import jax
+        jax.config.update("jax_compilation_cache_dir",
+                          os.path.join(cache_dir, "xla"))
+
+
+def _calibrate_task(task) -> float:
+    config, params, dram = task
+    return sim.calibrated_deadline(config, params, dram)
+
+
+def _group_task(task) -> List[sim.SimResult]:
+    """Pool task: simulate one policy group and persist each point."""
+    config, mix, pols, params, dram, paths = task
+    results = simulate_group(config, mix, list(pols), params, dram)
+    for res, path in zip(results, paths):
+        sim._atomic_dump(res, path)
+    return results
+
+
+def map_points(points: Sequence[SweepPoint], jobs: int = 1,
+               max_lanes: int = MAX_LANES) -> List[sim.SimResult]:
+    """Evaluate a list of sweep points, batched and (optionally) parallel.
+
+    Cached points are loaded and skipped; the remainder are grouped by
+    (config, mix, params, dram), chunked into <= ``max_lanes`` policy
+    lanes, and executed — inline for ``jobs <= 1``, else on a spawn-based
+    process pool of ``jobs`` workers.  Every finished point is written to
+    the sim disk cache, so later ``sim.run_cached`` calls (and concurrent
+    sweeps) are free.  Returns results in ``points`` order.
+    """
+    results: List[Optional[sim.SimResult]] = [None] * len(points)
+    seen_paths: Dict[str, List[int]] = {}
+    groups: Dict[str, List[Tuple[int, SweepPoint, str]]] = {}
+    for idx, pt in enumerate(points):
+        path = pt.cache_path()
+        if path in seen_paths:          # duplicate point: fill from twin
+            seen_paths[path].append(idx)
+            continue
+        seen_paths[path] = [idx]
+        if os.path.exists(path):
+            with open(path, "rb") as f:
+                results[idx] = pickle.load(f)
+            continue
+        key = f"{pt.config}|{pt.mix}|{_params_key(pt.resolved_params(), pt.dram)}"
+        groups.setdefault(key, []).append((idx, pt, path))
+
+    tasks = []
+    task_idxs: List[List[int]] = []
+    calib: Dict[str, Tuple] = {}
+    for members in groups.values():
+        first = members[0][1]
+        params, dram = first.resolved_params(), first.dram
+        ck = f"{first.config}|{_params_key(params, dram)}"
+        calib.setdefault(ck, (first.config, params, dram))
+        for lo in range(0, len(members), max_lanes):
+            chunk = members[lo:lo + max_lanes]
+            tasks.append((first.config, first.mix,
+                          tuple(pt.policy for _, pt, _ in chunk),
+                          params, dram, tuple(path for _, _, path in chunk)))
+            task_idxs.append([idx for idx, _, _ in chunk])
+
+    if tasks:
+        if jobs <= 1 or len(tasks) == 1:
+            task_results = [_group_task(t) for t in tasks]
+        else:
+            import multiprocessing as mp
+            ctx = mp.get_context("spawn")
+            workers = min(jobs, len(tasks))
+            with ProcessPoolExecutor(max_workers=workers, mp_context=ctx,
+                                     initializer=_worker_init,
+                                     initargs=(sim.CACHE_DIR,)) as ex:
+                # phase 1: deadline calibration, one task per unique
+                # (config, params, dram) — otherwise every group of a
+                # config would redundantly simulate the standalone run
+                list(ex.map(_calibrate_task, calib.values()))
+                # phase 2: the groups themselves
+                task_results = list(ex.map(_group_task, tasks))
+        for idxs, rs in zip(task_idxs, task_results):
+            for idx, res in zip(idxs, rs):
+                results[idx] = res
+
+    for path, idxs in seen_paths.items():
+        for idx in idxs[1:]:
+            results[idx] = results[idxs[0]]
+    return results  # type: ignore[return-value]

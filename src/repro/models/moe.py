@@ -131,7 +131,7 @@ def moe_ffn_sorted(p: Params, x: jnp.ndarray, *, top_k: int,
         idx = jnp.arange(s * top_k, dtype=jnp.int32)
         first = jnp.concatenate([jnp.array([True]),
                                  sorted_e[1:] != sorted_e[:-1]])
-        grp_start = jnp.maximum.accumulate(jnp.where(first, idx, -1))
+        grp_start = jax.lax.cummax(jnp.where(first, idx, -1), axis=0)
         rank = idx - grp_start
         keep = rank < cap
         dst = jnp.where(keep, sorted_e * cap + rank, n_exp * cap)

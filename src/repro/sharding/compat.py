@@ -1,0 +1,34 @@
+"""jax version compatibility shims for the sharding layer.
+
+The repo is developed against a range of jax releases; two public APIs
+changed shape across the 0.4.x -> 0.5+ boundary:
+
+* ``AbstractMesh``: jax <= 0.4.x takes one ``shape_tuple`` argument of
+  ``((name, size), ...)`` pairs; newer jax takes ``(axis_sizes, axis_names)``.
+* ``shard_map``: promoted from ``jax.experimental.shard_map`` to
+  ``jax.shard_map``; the experimental module was eventually removed.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+from jax.sharding import AbstractMesh
+
+try:  # jax >= 0.6-ish: top-level export
+    shard_map = jax.shard_map
+except AttributeError:  # older jax: experimental home
+    from jax.experimental.shard_map import shard_map  # noqa: F401
+
+
+def abstract_mesh(axis_sizes: Sequence[int],
+                  axis_names: Sequence[str]) -> AbstractMesh:
+    """Construct an AbstractMesh on any supported jax version."""
+    sizes = tuple(int(s) for s in axis_sizes)
+    names = tuple(axis_names)
+    if len(sizes) != len(names):
+        raise ValueError(f"{len(sizes)} axis sizes vs {len(names)} names")
+    try:
+        return AbstractMesh(sizes, names)          # jax >= 0.5
+    except TypeError:
+        return AbstractMesh(tuple(zip(names, sizes)))  # jax <= 0.4.x

@@ -1,6 +1,8 @@
 """APM: margins (Fig. 8), Algorithm 1 threshold bands, Fig. 9 mapping."""
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.apm import APMParams, APMState, bypass_mask

@@ -3,6 +3,8 @@ semantics, way partitioning, occupancy invariants (paper Fig. 1/§V-C)."""
 import numpy as np
 import jax.numpy as jnp
 import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import llc as L

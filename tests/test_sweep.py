@@ -1,0 +1,141 @@
+"""Sweep engine: batched multi-policy == sequential sim.run (bitwise),
+lane-batched LLC engine == static engine, atomic cache writes under
+concurrency."""
+import dataclasses
+import os
+import pickle
+import threading
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import llc, policies, sim, sweep
+
+TINY = dataclasses.replace(sim.SimParams(), n_inputs=1, max_epochs=40,
+                           subsample_target=50_000)
+DEADLINE = 2.0e6  # explicit: skips the calibration run, keeps the test fast
+
+
+# ---------------------------------------------------------------------------
+# determinism: batched lanes vs per-point sequential reference
+# ---------------------------------------------------------------------------
+def test_group_matches_sequential_bitwise():
+    pols = [policies.get(n) for n in ("fifo-nb", "arp-cs-as-d")]
+    for mix in ("moti1", "moti2"):
+        grp = sweep.simulate_group("config1", mix, pols, TINY,
+                                   deadline_cycles=DEADLINE)
+        for pol, got in zip(pols, grp):
+            want = sim.run("config1", mix, pol, TINY,
+                           deadline_cycles=DEADLINE)
+            assert got.summary() == want.summary(), (mix, pol.name)
+            assert got.completion_cycles == want.completion_cycles
+            assert got.epochs == want.epochs
+            assert got.history == want.history
+
+
+def test_group_diverging_lane_lengths():
+    """Lanes finishing at different epochs: the finished lane is pruned
+    from the batch (and a lone survivor hands off to the static engine)
+    without perturbing anyone's results."""
+    p = dataclasses.replace(TINY, max_epochs=200)
+    pols = [policies.get(n) for n in ("arp-nb", "fifo-nb")]
+    grp = sweep.simulate_group("config1", "moti1", pols, p,
+                               deadline_cycles=DEADLINE)
+    seq = [sim.run("config1", "moti1", pol, p, deadline_cycles=DEADLINE)
+           for pol in pols]
+    assert grp[0].epochs != grp[1].epochs  # the premise: lanes diverge
+    for pol, got, want in zip(pols, grp, seq):
+        assert got.summary() == want.summary(), pol.name
+        assert got.epochs == want.epochs
+        assert got.history == want.history
+
+
+def test_group_geometry_fallback():
+    """Lanes with diverging LLC geometry (SHIP_LARGE tables) are split into
+    sub-batches and still match the sequential reference."""
+    pols = [policies.get(n) for n in ("arp-cs-as", "arp-cs-as-large")]
+    grp = sweep.simulate_group("config1", "moti1", pols, TINY,
+                               deadline_cycles=DEADLINE)
+    for pol, got in zip(pols, grp):
+        want = sim.run("config1", "moti1", pol, TINY,
+                       deadline_cycles=DEADLINE)
+        assert got.summary() == want.summary(), pol.name
+
+
+def test_map_points_order_cache_and_dedup(tmp_path, monkeypatch):
+    monkeypatch.setattr(sim, "CACHE_DIR", str(tmp_path))
+    pols = [policies.get(n) for n in ("fifo-nb", "arp-nb")]
+    pts = [sweep.SweepPoint("config1", "moti1", pol, TINY) for pol in pols]
+    pts.append(pts[0])  # duplicate point: must dedup, not resimulate
+    rs = sweep.map_points(pts, jobs=1)
+    assert [r.policy for r in rs] == ["fifo-nb", "arp-nb", "fifo-nb"]
+    assert rs[0].summary() == rs[2].summary()
+    # results landed in the sim disk cache: run_cached is now a pure read
+    for pt, r in zip(pts, rs):
+        assert os.path.exists(pt.cache_path())
+        c = sim.run_cached("config1", "moti1", pt.policy, TINY)
+        assert c.summary() == r.summary()
+
+
+# ---------------------------------------------------------------------------
+# lane-batched LLC engine vs static single-policy engine
+# ---------------------------------------------------------------------------
+def test_lanes_engine_matches_static():
+    tiny = dict(size_bytes=64 * 64 * 4, ways=4)  # 16 sets x 4 ways
+    cfgs = [
+        llc.LLCConfig(**tiny),
+        llc.LLCConfig(**tiny, core_bypass=True, accel_mode=llc.A_SHIP),
+        llc.LLCConfig(**tiny, accel_mode=llc.A_HINT, shared_predictor=True),
+        llc.LLCConfig(**tiny, core_way_mask=0xC, accel_way_mask=0x3),
+    ]
+    rng = np.random.default_rng(7)
+    n = 400
+    line = rng.integers(0, 256, n).astype(np.int64)
+    meta = llc.pack_meta(rng.random(n) < 0.5, rng.random(n) < 0.2,
+                         rng.random(n) < 0.5, np.zeros(n, bool),
+                         np.ones(n, bool), rng.integers(0, 8, n))
+    chunks = list(llc.build_rounds(cfgs[0], line, meta))
+    knobs = llc.lane_knobs(cfgs)
+    states = llc.stack_states(cfgs[0], len(cfgs))
+    singles = [llc.init_state(c) for c in cfgs]
+    for lm, mm in chunks:
+        lb = jnp.asarray(np.broadcast_to(lm, (len(cfgs),) + lm.shape))
+        mb = jnp.asarray(np.broadcast_to(mm, (len(cfgs),) + mm.shape))
+        states, st_b, pc_b = llc.simulate_epoch_lanes(
+            cfgs[0], knobs, states, lb, mb)
+        for i, c in enumerate(cfgs):
+            singles[i], st, pc = llc.simulate_epoch(
+                c, singles[i], jnp.asarray(lm), jnp.asarray(mm))
+            assert np.array_equal(np.asarray(st), np.asarray(st_b)[i]), i
+            assert np.array_equal(np.asarray(pc), np.asarray(pc_b)[i]), i
+    for i in range(len(cfgs)):
+        for a, b in zip(singles[i], [np.asarray(x)[i] for x in states]):
+            assert np.array_equal(np.asarray(a), b)
+
+
+# ---------------------------------------------------------------------------
+# cache-layer contention: concurrent _atomic_dump writers + readers
+# ---------------------------------------------------------------------------
+def test_atomic_dump_concurrent_writers(tmp_path):
+    path = str(tmp_path / "contended.pkl")
+    sim._atomic_dump({"w": -1, "i": -1}, path)
+    errors = []
+
+    def worker(w):
+        try:
+            for i in range(100):
+                sim._atomic_dump({"w": w, "i": i}, path)
+                with open(path, "rb") as f:
+                    obj = pickle.load(f)   # must always be a complete object
+                assert set(obj) == {"w", "i"}
+        except Exception as e:  # noqa: BLE001 — collected for the assert
+            errors.append(e)
+
+    threads = [threading.Thread(target=worker, args=(w,)) for w in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors, errors
+    # no orphaned temp files left behind
+    assert [p for p in os.listdir(tmp_path) if p.endswith(".tmp")] == []
