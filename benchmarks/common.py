@@ -32,6 +32,9 @@ SMOKE = False     # CI-sized suite (run.py --smoke)
 # sweep.json artifact (schema: hydra-sweep/v1)
 SWEEP_ROWS: List[Dict] = []
 
+# perf-trajectory artifact of the lern-train benchmark (fig05_clustering)
+BENCH_LERN_PATH = "bench_lern.json"
+
 
 def set_jobs(n: int) -> None:
     global JOBS

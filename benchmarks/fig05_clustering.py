@@ -1,11 +1,14 @@
-"""Fig. 5 — K-means feature separability: silhouette scores + 2-D PCA."""
+"""Fig. 5 — K-means feature separability: silhouette scores + 2-D PCA —
+plus the ``lern-train`` benchmark: host-numpy vs device-batched LERN
+training, recorded as the ``bench_lern.json`` perf-trajectory artifact."""
+import json
 import time
 
 import numpy as np
 
-from repro.core import sim
+from repro.core import lern, sim
 from repro.core.kmeans import pca_2d
-from .common import BASE_PARAMS, emit
+from .common import BASE_PARAMS, BENCH_LERN_PATH, configs, emit
 
 
 def run(quick: bool = True):
@@ -18,9 +21,62 @@ def run(quick: bool = True):
         proj = pca_2d(lc.features_ri.astype(np.float64))
         spread = float(np.linalg.norm(proj.std(0)))
         rows.append(emit(f"fig05/config3-layer{li}", t0,
-                         {"silhouette": lc.silhouette_ri,
+                         {"silhouette": lc.silhouette(),
                           "pca_spread": spread,
                           "n_points": lc.features_ri.shape[0]}))
         if quick and li >= 6:
             break
+    rows.extend(bench_lern_train(quick))
     return rows
+
+
+def bench_lern_train(quick: bool = True):
+    """Time one full LERN training pass per config, host vs device.
+
+    ``host_s`` is the seed-era host pipeline (``lern.train_host_numpy``:
+    per-layer Python loop, numpy features, exact-shape fits, inline
+    silhouette) — the serial stage the device-resident refactor removed
+    from in front of the sweep engine.  ``aligned_s`` is the shared-shape
+    parity reference (``lern.train``), reported for transparency.  All
+    paths are measured warm (one throwaway run first, so jit compilation
+    and the trace cache are excluded).  Emits ``bench_lern.json`` (schema
+    hydra-bench-lern/v1)."""
+    rows = []
+    entries = []
+    for cfg in configs(quick):
+        tr = sim.load_trace(cfg, BASE_PARAMS.subsample_target)
+        t_host = _best_of(lambda: lern.train_host_numpy(tr), reps=2)
+        t_aligned = _best_of(lambda: lern.train(tr), reps=2)
+        t_dev = _best_of(lambda: lern.train_model_batched(tr), reps=2)
+        speedup = t_host / max(t_dev, 1e-9)
+        t0 = time.time() - t_dev  # report the device path's time as the row
+        rows.append(emit(f"lern_train/{cfg}", t0,
+                         {"host_s": t_host, "aligned_s": t_aligned,
+                          "device_s": t_dev, "speedup": speedup,
+                          "accesses": tr.num_accesses,
+                          "layers": len(tr.layer_names)}))
+        entries.append({"config": cfg, "host_s": round(t_host, 4),
+                        "aligned_s": round(t_aligned, 4),
+                        "device_s": round(t_dev, 4),
+                        "speedup": round(speedup, 3),
+                        "accesses": int(tr.num_accesses),
+                        "layers": len(tr.layer_names)})
+    if entries:
+        geo = float(np.exp(np.mean([np.log(e["speedup"]) for e in entries])))
+        with open(BENCH_LERN_PATH, "w") as f:
+            json.dump({"schema": "hydra-bench-lern/v1",
+                       "geomean_speedup": round(geo, 3),
+                       "entries": entries}, f, indent=1)
+        print(f"# wrote {len(entries)} configs to {BENCH_LERN_PATH} "
+              f"(geomean device speedup {geo:.2f}x)", flush=True)
+    return rows
+
+
+def _best_of(fn, reps: int = 2) -> float:
+    fn()  # warm-up: jit compilation + artifact caches
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.time()
+        fn()
+        best = min(best, time.time() - t0)
+    return best

@@ -8,6 +8,11 @@ Prints ``name,us_per_call,derived`` CSV rows and writes every row to a
 machine-readable ``sweep.json`` artifact (schema hydra-sweep/v1) for CI
 and bench-trajectory tracking.  Results are disk-cached (.cache/sim);
 ``--jobs N`` fans uncached sweep points over N worker processes.
+
+``fig05_clustering`` additionally times host-numpy vs device-batched LERN
+training (the ``lern_train/*`` rows) and writes ``bench_lern.json``
+(schema hydra-bench-lern/v1) — the perf-trajectory record for the
+device-resident training pipeline.
 """
 import argparse
 import importlib

@@ -19,7 +19,7 @@ def main():
     ss = sim.SimParams().subsample_target
     model = sim.load_lern(args.config, "full", ss)
     tr = sim.load_trace(args.config, ss)
-    print(f"layers: {len(model.layers)}; accesses: {tr.num_accesses}")
+    print(f"layers: {model.n_layers}; accesses: {tr.num_accesses}")
     print(f"prediction accuracy (§IV-D): "
           f"{prediction_accuracy(model, tr):.3f}")
     dist = cluster_distribution(model, tr)
@@ -28,7 +28,7 @@ def main():
     print("mean RC distribution [Cold, Light, Mod, Hot, NoReuse]:",
           np.round(dist["rc"].mean(0), 3))
     for li, lc in enumerate(model.layers[:4]):
-        print(f"layer {li} ({tr.layer_names[li]}): sil={lc.silhouette_ri:.2f}"
+        print(f"layer {li} ({tr.layer_names[li]}): sil={lc.silhouette():.2f}"
               f" rc_centers={np.round(lc.rc_centers, 1)}")
 
 

@@ -1,9 +1,14 @@
 """K-Means clustering + semantic cluster annotation (paper §IV-C).
 
-JAX Lloyd's algorithm with k-means++ init.  The distance/assignment hot loop
-can optionally run through the Pallas TPU kernel (``repro.kernels.kmeans``);
-by default the pure-jnp path is used (identical math — the kernel is
-validated against it in tests).
+JAX Lloyd's algorithm with k-means++ init.  The canonical implementation is
+``kmeans_fit_masked``: fixed-shape and mask-aware, so it vmaps into the
+batched LERN training program (``lern.train_model_batched``) — all layers of
+a model fit as one padded device call (``kmeans_fit_batched``).  The
+assignment hot loop runs through the Pallas TPU kernel
+(``repro.kernels.kmeans_assign``) when it would compile (TPU backend); on
+interpret-mode backends the identical-math jnp decomposition is used
+(cross-checked in tests).  ``kmeans_fit`` is the unmasked convenience
+wrapper.
 
 Annotation (paper §IV-C):
 * RC clusters: rank 1-D centers ascending -> Cold(0) Light(1) Moderate(2) Hot(3)
@@ -26,69 +31,135 @@ import numpy as np
 class KMeansResult(NamedTuple):
     centers: jnp.ndarray     # [K, D] (in the normalized feature space)
     assign: jnp.ndarray      # [N] cluster index per point
-    inertia: jnp.ndarray     # [] sum of squared distances
+    inertia: jnp.ndarray     # [] sum of squared distances (masked)
     n_iter: int
 
 
-def _plus_plus_init(key, x, k):
-    """k-means++ seeding (deterministic given key)."""
-    n = x.shape[0]
-    idx0 = jax.random.randint(key, (), 0, n)
-    centers = jnp.zeros((k, x.shape[1]), x.dtype).at[0].set(x[idx0])
-
-    def body(i, carry):
-        centers, key = carry
-        key, sub = jax.random.split(key)
-        d2 = jnp.min(
-            jnp.sum((x[:, None, :] - centers[None, :, :]) ** 2, -1)
-            + jnp.where(jnp.arange(centers.shape[0]) < i, 0.0, jnp.inf)[None, :],
-            axis=1)
-        p = d2 / jnp.maximum(jnp.sum(d2), 1e-12)
-        nxt = jax.random.choice(sub, n, p=p)
-        return centers.at[i].set(x[nxt]), key
-
-    centers, _ = jax.lax.fori_loop(1, k, body, (centers, key))
-    return centers
-
-
 def assign_jnp(x: jnp.ndarray, centers: jnp.ndarray) -> jnp.ndarray:
-    """Nearest-center assignment via the ||x||^2 - 2 x.c + ||c||^2 expansion
-    (MXU-friendly matmul form; same decomposition the Pallas kernel uses)."""
-    x2 = jnp.sum(x * x, -1, keepdims=True)
+    """Nearest-center assignment via the -2 x.c + ||c||^2 expansion (the
+    row-constant ||x||^2 term is dropped from the argmin — exactly the
+    decomposition the Pallas kernel computes, so both paths agree)."""
     c2 = jnp.sum(centers * centers, -1)
-    d2 = x2 - 2.0 * (x @ centers.T) + c2[None, :]
+    d2 = c2[None, :] - 2.0 * (x @ centers.T)
     return jnp.argmin(d2, axis=1).astype(jnp.int32)
 
 
+def _default_use_kernel() -> bool:
+    """Kernel where it compiles (TPU); jnp math elsewhere (interpret-mode
+    Pallas inside a 50-iteration scan would dominate the fit)."""
+    from repro.kernels.common import INTERPRET
+    return not INTERPRET
+
+
+def _pick_masked(key, weights):
+    """Inverse-CDF draw from unnormalized ``weights`` (masked entries 0).
+
+    Avoids jax.random.choice so the draw depends only on ``weights`` and
+    ``key`` — identical under vmap and for any mask pattern."""
+    cum = jnp.cumsum(weights)
+    u = jax.random.uniform(key, (), weights.dtype) * cum[-1]
+    idx = jnp.sum((cum < u).astype(jnp.int32))
+    return jnp.clip(idx, 0, weights.shape[0] - 1)
+
+
+def _plus_plus_init_masked(key, x, mask, k):
+    """k-means++ seeding over the masked points (deterministic given key).
+
+    The first center is drawn uniformly from the valid points; subsequent
+    centers with probability proportional to the masked d² weights."""
+    fmask = mask.astype(x.dtype)
+    keys = jax.random.split(key, k)
+    # uniform first pick: the t-th valid point, t ~ U{0..n_valid-1}
+    n_valid = jnp.sum(mask.astype(jnp.int32))
+    t = jnp.floor(jax.random.uniform(keys[0], (), x.dtype)
+                  * n_valid.astype(x.dtype)).astype(jnp.int32)
+    cm = jnp.cumsum(mask.astype(jnp.int32))
+    idx0 = jnp.argmax(cm > t)        # first position with cm == t+1
+    centers = jnp.zeros((k, x.shape[1]), x.dtype).at[0].set(x[idx0])
+
+    def body(i, centers):
+        d2 = jnp.min(
+            jnp.sum((x[:, None, :] - centers[None, :, :]) ** 2, -1)
+            + jnp.where(jnp.arange(k) < i, 0.0, jnp.inf)[None, :],
+            axis=1)
+        nxt = _pick_masked(keys[i], d2 * fmask)
+        return centers.at[i].set(x[nxt])
+
+    return jax.lax.fori_loop(1, k, body, centers)
+
+
 @functools.partial(jax.jit, static_argnames=("k", "iters", "use_kernel"))
-def kmeans_fit(x: jnp.ndarray, k: int = 4, iters: int = 50, seed: int = 0,
-               use_kernel: bool = False) -> KMeansResult:
-    """Lloyd iterations with empty-cluster re-seeding to the farthest point."""
-    key = jax.random.PRNGKey(seed)
-    centers = _plus_plus_init(key, x, k)
+def kmeans_fit_masked(x: jnp.ndarray, mask: jnp.ndarray, key: jnp.ndarray,
+                      k: int = 4, iters: int = 50,
+                      use_kernel: Optional[bool] = None) -> KMeansResult:
+    """Lloyd iterations over the points where ``mask`` is True.
+
+    Fixed-shape and value-only in ``mask``/``key``, so it vmaps over a
+    leading batch axis (``kmeans_fit_batched``).  Masked-out rows of ``x``
+    should be zeroed by the caller (they never influence the fit, but keep
+    the arithmetic NaN-free); their ``assign`` entries are meaningless.
+    Empty clusters re-seed at the farthest valid point.
+    """
+    if use_kernel is None:
+        use_kernel = _default_use_kernel()
     if use_kernel:
         from repro.kernels.kmeans_assign import ops as _kops
         assign_fn = _kops.assign
     else:
         assign_fn = assign_jnp
+    fmask = mask.astype(x.dtype)
+    x2 = jnp.sum(x * x, -1)  # [N], constant across iterations
+    centers0 = _plus_plus_init_masked(key, x, mask, k)
 
     def step(carry, _):
         centers = carry
-        a = assign_fn(x, centers)
-        one_hot = jax.nn.one_hot(a, k, dtype=x.dtype)       # [N, K]
+        # scores via the matmul decomposition (no [N, K, D] broadcast):
+        # d2 = ||x||^2 - 2 x.c + ||c||^2; the ||x||^2 term only matters for
+        # the farthest-point reseed, not the argmin
+        c2 = jnp.sum(centers * centers, -1)
+        sc = c2[None, :] - 2.0 * (x @ centers.T)            # [N, K]
+        if use_kernel:
+            a = assign_fn(x, centers)
+        else:
+            a = jnp.argmin(sc, axis=1).astype(jnp.int32)
+        one_hot = jax.nn.one_hot(a, k, dtype=x.dtype) * fmask[:, None]
         counts = jnp.sum(one_hot, 0)                        # [K]
         sums = one_hot.T @ x                                # [K, D]
         new = sums / jnp.maximum(counts, 1.0)[:, None]
-        # re-seed empty clusters at the globally farthest point
-        d2 = jnp.sum((x[:, None, :] - centers[None, :, :]) ** 2, -1)
-        far = x[jnp.argmax(jnp.min(d2, 1))]
+        # re-seed empty clusters at the farthest valid point
+        far_score = jnp.where(mask, x2 + jnp.min(sc, 1), -jnp.inf)
+        far = x[jnp.argmax(far_score)]
         new = jnp.where((counts > 0)[:, None], new, far[None, :])
         return new, None
 
-    centers, _ = jax.lax.scan(step, centers, None, length=iters)
+    centers, _ = jax.lax.scan(step, centers0, None, length=iters)
     a = assign_fn(x, centers)
     d2 = jnp.sum((x - centers[a]) ** 2, -1)
-    return KMeansResult(centers, a, jnp.sum(d2), iters)
+    return KMeansResult(centers, a, jnp.sum(d2 * fmask), iters)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "iters", "use_kernel"))
+def kmeans_fit_batched(x: jnp.ndarray, mask: jnp.ndarray, keys: jnp.ndarray,
+                       k: int = 4, iters: int = 50,
+                       use_kernel: Optional[bool] = None) -> KMeansResult:
+    """vmap of ``kmeans_fit_masked`` over a leading batch axis.
+
+    x [B, N, D], mask [B, N], keys [B, 2] -> KMeansResult with a leading
+    B axis on every field.  Each batch row is bitwise-identical to the
+    single-problem fit at the same padded shape — this is what lets the
+    batched LERN trainer reproduce the per-layer pipeline exactly.
+    """
+    fit = functools.partial(kmeans_fit_masked, k=k, iters=iters,
+                            use_kernel=use_kernel)
+    return jax.vmap(fit)(x, mask, keys)
+
+
+def kmeans_fit(x: jnp.ndarray, k: int = 4, iters: int = 50, seed: int = 0,
+               use_kernel: Optional[bool] = None) -> KMeansResult:
+    """Unmasked convenience wrapper over ``kmeans_fit_masked``."""
+    return kmeans_fit_masked(x, jnp.ones(x.shape[0], bool),
+                             jax.random.PRNGKey(seed), k=k, iters=iters,
+                             use_kernel=use_kernel)
 
 
 def normalize(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:

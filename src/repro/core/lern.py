@@ -1,111 +1,469 @@
 """LERN — clustering-based learning & prediction of accelerator reuse
-(paper §IV).  Offline pipeline:
+(paper §IV).  Pipeline:
 
     per-layer trace -> cache-line collapse (optionally through the L-RPT
     hash, §VI-J) -> reuse signature -> (F_RI, F_RC) features -> two
     K-means(k=4) -> semantic annotation -> per-line (RC_cluster, RI_cluster)
-    mapping, loaded layer-by-layer into the L-RPT at runtime.
+    lookup tables, loaded layer-by-layer into the L-RPT at runtime.
+
+Three training entry points:
+
+* ``train_model_batched`` — the production path.  All layers of a
+  (model x accel-config) train as one device program pair: flat
+  whole-trace feature extraction (``reuse.reuse_features_flat``: one
+  composite (layer, line) sort + ``ri_histogram`` Pallas binning) and one
+  jitted k-means call over every layer (``_fit_groups``: layers vmapped
+  in power-of-two capacity buckets).  No per-layer Python loop touches
+  the hot path; only the O(k) semantic annotation runs on the host.
+* ``train`` — the host-reference path: per-layer numpy feature oracle +
+  the same shared jitted fit at the same bucket shapes.  Because every
+  floating-point step lives in ``_fit_layer`` (shared) and the feature
+  tables are integers, the two paths agree bitwise (tests/test_lern_batched).
+* ``train_host_numpy`` — the seed-era per-layer pipeline, kept only as
+  the bench_lern.json perf baseline.
 
 Lines with a single occurrence are assigned the No-Reuse cluster (-1, -1).
+The model stores stacked per-layer lookup arrays (``uniq`` / ``rc_cluster``
+/ ``ri_cluster`` — [L, N] device-friendly tables consumed directly by
+``lrpt.pack_tables`` and ``sim.trace_clusters``); ``model.layers`` offers
+per-layer views for analysis code.
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Callable, Dict, List, Optional
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
 from . import kmeans as km
-from .reuse import NUM_RI_BINS, RI_BIN_EDGES, reuse_signature_np, ri_histogram_np
+from .reuse import (NUM_RI_BINS, PAD_LINE, RI_BIN_EDGES, lines_to_device,
+                    reuse_features_flat, reuse_signature_np, ri_histogram_np)
 from .tracegen import Trace
 
 # correct-bin sets per RI cluster label for the §IV-D accuracy metric:
 # Immediate<->{bin0}, Near<->{bin0,bin1}, Far<->{bin1,bin2}, Remote<->{bin2,bin3}
 _CORRECT_BINS = {0: (0,), 1: (0, 1), 2: (1, 2), 3: (2, 3)}
 
+MIN_MULTI = 8  # need enough multi-occurrence lines for 4 clusters
+
+
+def _bucket(n: int) -> int:
+    """Next power of two (>= 8): the fixed-shape padding capacity."""
+    return max(8, 1 << (int(n) - 1).bit_length())
+
 
 @dataclasses.dataclass
 class LayerClusters:
-    """Offline-learnt mapping for one layer."""
+    """Per-layer view over the trained model (analysis/tests interface)."""
     uniq: np.ndarray         # [N] unique (possibly hashed) line addresses
     rc_cluster: np.ndarray   # [N] 0..3 or -1 (No Reuse)
     ri_cluster: np.ndarray   # [N] 0..3 or -1
     rc_centers: np.ndarray   # [4] de-normalized, label-ordered (Cold..Hot)
     ri_centers: np.ndarray   # [4, 4] de-normalized, label-ordered
-    silhouette_ri: float
-    features_ri: np.ndarray  # [N, 4] (for Fig. 5 PCA plots)
+    features_ri: np.ndarray  # [n_multi, 4] raw histograms (Fig. 5 PCA plots)
+    _sil: Optional[float] = None
+
+    def silhouette(self) -> float:
+        """RI-cluster silhouette (Fig. 5), computed lazily from the stored
+        features — keeps the O(n^2) score out of the training hot path."""
+        if self._sil is None:
+            labels = self.ri_cluster[self.rc_cluster >= 0]
+            if labels.shape[0] != self.features_ri.shape[0] or \
+                    labels.shape[0] < MIN_MULTI:
+                self._sil = 0.0
+            else:
+                raw = self.features_ri.astype(np.float64)
+                xri = raw / np.maximum(raw.sum(1, keepdims=True), 1e-9)
+                self._sil = km.silhouette_score(xri, labels)
+        return self._sil
 
 
 @dataclasses.dataclass
 class LernModel:
-    """Trained LERN predictor for one (ML model x accel config)."""
-    layers: List[LayerClusters]
+    """Trained LERN predictor for one (ML model x accel config).
+
+    The lookup tables are stacked fixed-shape arrays (padded with
+    PAD_LINE / -1) so the L-RPT loader and the sweep engine's artifact
+    loader consume them as flat device-friendly gathers instead of
+    per-layer Python dicts."""
+    uniq: np.ndarray        # [L, N] int64, per-layer sorted, PAD_LINE-padded
+    rc_cluster: np.ndarray  # [L, N] int8, -1 = No Reuse / padding
+    ri_cluster: np.ndarray  # [L, N] int8
+    n_uniq: np.ndarray      # [L] int32
+    rc_centers: np.ndarray  # [L, 4] float32, label-ordered (Cold..Hot)
+    ri_centers: np.ndarray  # [L, 4, 4] float32, label-ordered
+    features_ri: List[np.ndarray]  # ragged [n_multi_i, 4] (Fig. 5)
     hash_fn: Optional[Callable[[np.ndarray], np.ndarray]] = None
 
-    def layer_table(self, layer_idx: int) -> Dict[int, tuple]:
-        lc = self.layers[layer_idx]
-        return {int(a): (int(rc), int(ri))
-                for a, rc, ri in zip(lc.uniq, lc.rc_cluster, lc.ri_cluster)}
+    @property
+    def n_layers(self) -> int:
+        return self.uniq.shape[0]
+
+    @property
+    def layers(self) -> List[LayerClusters]:
+        """Per-layer views (sliced to the real unique count)."""
+        views = getattr(self, "_views", None)
+        if views is None:
+            views = [LayerClusters(
+                uniq=self.uniq[li, :n], rc_cluster=self.rc_cluster[li, :n],
+                ri_cluster=self.ri_cluster[li, :n],
+                rc_centers=self.rc_centers[li], ri_centers=self.ri_centers[li],
+                features_ri=self.features_ri[li])
+                for li, n in enumerate(self.n_uniq)]
+            object.__setattr__(self, "_views", views)
+        return views
+
+    @classmethod
+    def from_layers(cls, layers: List[LayerClusters],
+                    hash_fn: Optional[Callable] = None) -> "LernModel":
+        """Stack per-layer results into the fixed-shape model tables."""
+        n_tab = _bucket(max((lc.uniq.shape[0] for lc in layers), default=1))
+        n_l = len(layers)
+        uniq = np.full((n_l, n_tab), int(PAD_LINE), np.int64)
+        rc = np.full((n_l, n_tab), -1, np.int8)
+        ri = np.full((n_l, n_tab), -1, np.int8)
+        n_uniq = np.zeros(n_l, np.int32)
+        rc_c = np.zeros((n_l, 4), np.float32)
+        ri_c = np.zeros((n_l, 4, NUM_RI_BINS), np.float32)
+        for li, lc in enumerate(layers):
+            n = lc.uniq.shape[0]
+            uniq[li, :n] = lc.uniq
+            rc[li, :n] = lc.rc_cluster
+            ri[li, :n] = lc.ri_cluster
+            n_uniq[li] = n
+            rc_c[li] = lc.rc_centers
+            ri_c[li] = lc.ri_centers
+        return cls(uniq=uniq, rc_cluster=rc, ri_cluster=ri, n_uniq=n_uniq,
+                   rc_centers=rc_c, ri_centers=ri_c,
+                   features_ri=[lc.features_ri for lc in layers],
+                   hash_fn=hash_fn)
+
+    def replace_layers(self, layer_idxs, other: "LernModel") -> "LernModel":
+        """New model with ``layer_idxs`` rows swapped in from ``other``
+        (the online-LERN retrain hook updates tables in place this way)."""
+        n_tab = max(self.uniq.shape[1], other.uniq.shape[1])
+
+        def expand(a: np.ndarray, pad) -> np.ndarray:
+            out = np.full((a.shape[0], n_tab), pad, a.dtype)
+            out[:, :a.shape[1]] = a
+            return out
+
+        uniq = expand(self.uniq, int(PAD_LINE))
+        rc = expand(self.rc_cluster, -1)
+        ri = expand(self.ri_cluster, -1)
+        n_uniq = self.n_uniq.copy()
+        rc_c = self.rc_centers.copy()
+        ri_c = self.ri_centers.copy()
+        feats = list(self.features_ri)
+        for li in layer_idxs:
+            n = int(other.n_uniq[li])
+            uniq[li], rc[li], ri[li] = int(PAD_LINE), -1, -1
+            uniq[li, :n] = other.uniq[li, :n]
+            rc[li, :n] = other.rc_cluster[li, :n]
+            ri[li, :n] = other.ri_cluster[li, :n]
+            n_uniq[li] = n
+            rc_c[li] = other.rc_centers[li]
+            ri_c[li] = other.ri_centers[li]
+            feats[li] = other.features_ri[li]
+        return LernModel(uniq=uniq, rc_cluster=rc, ri_cluster=ri,
+                         n_uniq=n_uniq, rc_centers=rc_c, ri_centers=ri_c,
+                         features_ri=feats, hash_fn=self.hash_fn)
 
 
-def train_layer(lines: np.ndarray, seed: int = 0) -> LayerClusters:
-    """Run the LERN pipeline on one layer's line trace."""
-    sig = reuse_signature_np(lines)
-    f_ri, f_rc = ri_histogram_np(lines, sig)
-    n = sig["uniq"].shape[0]
+# ---------------------------------------------------------------------------
+# shared jitted per-layer fit (the single source of floating-point truth)
+# ---------------------------------------------------------------------------
+@functools.partial(jax.jit, static_argnames=("use_kernel",))
+def _fit_layer(f_ri: jnp.ndarray, f_rc: jnp.ndarray, n_multi: jnp.ndarray,
+               key: jnp.ndarray, use_kernel: Optional[bool] = None) -> Dict:
+    """Fit RC + RI clusters for one layer's compacted feature tables.
+
+    ``f_ri`` [N, 4] / ``f_rc`` [N] hold the multi-occurrence lines in the
+    first ``n_multi`` rows (uniq order), zero-padded to the fixed capacity
+    N.  Fixed-shape and mask-driven, so ``train_model_batched`` vmaps it
+    over layers while ``train_layer`` calls it per layer at the same
+    padded shape — both bitwise-identical.
+    """
+    n = f_rc.shape[0]
+    cmask = jnp.arange(n, dtype=jnp.int32) < n_multi
+    # --- RC clustering (1-D, log1p + min-max normalized) -------------------
+    xrc = jnp.log1p(f_rc.astype(jnp.float32))[:, None]
+    lo = jnp.min(jnp.where(cmask[:, None], xrc, jnp.inf), 0)
+    hi = jnp.max(jnp.where(cmask[:, None], xrc, -jnp.inf), 0)
+    xn = jnp.where(cmask[:, None],
+                   (xrc - lo) / jnp.maximum(hi - lo, 1e-9), 0.0)
+    rc_res = km.kmeans_fit_masked(xn, cmask, jax.random.fold_in(key, 0),
+                                  k=4, use_kernel=use_kernel)
+    rc_centers = jnp.expm1(rc_res.centers * (hi - lo) + lo).reshape(-1)
+    # --- RI clustering (4-D histogram rows, L1-normalized) -----------------
+    raw = f_ri.astype(jnp.float32)
+    xri = jnp.where(cmask[:, None],
+                    raw / jnp.maximum(raw.sum(1, keepdims=True), 1e-9), 0.0)
+    ri_res = km.kmeans_fit_masked(xri, cmask, jax.random.fold_in(key, 1),
+                                  k=4, use_kernel=use_kernel)
+    # de-normalized centers: mean raw histogram of each cluster's members
+    oh = jax.nn.one_hot(ri_res.assign, 4, dtype=jnp.float32) \
+        * cmask[:, None].astype(jnp.float32)
+    cnt = jnp.sum(oh, 0)
+    ri_centers = (oh.T @ raw) / jnp.maximum(cnt, 1.0)[:, None]
+    return {"rc_assign": rc_res.assign, "rc_centers": rc_centers,
+            "rc_centers_norm": rc_res.centers.reshape(-1),
+            "ri_assign": ri_res.assign, "ri_centers": ri_centers}
+
+
+@functools.partial(jax.jit, static_argnames=("use_kernel",))
+def _fit_groups(groups, use_kernel: Optional[bool] = None):
+    """All layers' k-means fits as one jitted device program.
+
+    ``groups`` is a tuple of capacity buckets — each a
+    ``(f_ri [G, cap, 4], f_rc [G, cap], n_multi [G], keys [G, 2])`` tuple
+    of layers padded to the same power-of-two point count.  Each bucket is
+    vmapped; the whole tuple compiles (and dispatches) as a single XLA
+    program, so there is no per-layer Python k-means loop and small layers
+    don't pay the largest layer's padding."""
+    fit = functools.partial(_fit_layer, use_kernel=use_kernel)
+    return tuple(jax.vmap(fit)(f_ri, f_rc, nm, keys)
+                 for f_ri, f_rc, nm, keys in groups)
+
+
+def _annotate(fit: Dict, n_multi: int) -> Dict:
+    """Host-side O(k) semantic annotation of one layer's fit result."""
+    label_rc = km.annotate_rc(np.asarray(fit["rc_centers_norm"]))
+    centers_d = np.asarray(fit["ri_centers"])
+    label_ri = km.annotate_ri(centers_d)
+    return {
+        "rc_label": label_rc[np.asarray(fit["rc_assign"][:n_multi])],
+        "ri_label": label_ri[np.asarray(fit["ri_assign"][:n_multi])],
+        "rc_centers": np.asarray(fit["rc_centers"])[np.argsort(label_rc)],
+        "ri_centers": centers_d[np.argsort(label_ri)],
+    }
+
+
+def _fit_host_features(uniq: np.ndarray, f_ri: np.ndarray, f_rc: np.ndarray,
+                       seed: int, cap: Optional[int]) -> LayerClusters:
+    """Cluster one layer from host-extracted integer features through the
+    shared jitted ``_fit_layer`` program at ``cap``-padded shape."""
+    n = uniq.shape[0]
     rc_cluster = np.full(n, -1, dtype=np.int64)
     ri_cluster = np.full(n, -1, dtype=np.int64)
     multi = f_rc > 1  # single-occurrence lines -> No Reuse
+    n_multi = int(multi.sum())
 
-    sil = 0.0
-    rc_centers = np.zeros(4)
-    ri_centers = np.zeros((4, NUM_RI_BINS))
-    if multi.sum() >= 8:  # need enough points for 4 clusters
-        # --- RC clustering (1-D) -------------------------------------------
-        xrc = jnp.asarray(np.log1p(f_rc[multi]).astype(np.float32))[:, None]
-        xn, lo, hi = km.normalize(xrc)
-        res = km.kmeans_fit(xn, k=4, seed=seed)
-        label_of = km.annotate_rc(np.asarray(res.centers))
-        rc_cluster[multi] = label_of[np.asarray(res.assign)]
-        denorm = np.asarray(res.centers) * np.asarray(hi - lo) + np.asarray(lo)
-        rc_centers = np.expm1(denorm.reshape(-1))[np.argsort(label_of)]
-        # --- RI clustering (4-D histogram, normalized) ---------------------
-        xri_raw = f_ri[multi].astype(np.float32)
-        xri = xri_raw / np.maximum(xri_raw.sum(1, keepdims=True), 1e-9)
-        res = km.kmeans_fit(jnp.asarray(xri), k=4, seed=seed)
-        assign = np.asarray(res.assign)
-        # de-normalized centers: mean raw histogram of members
-        centers_d = np.stack([
-            xri_raw[assign == c].mean(0) if (assign == c).any()
-            else np.zeros(NUM_RI_BINS) for c in range(4)])
-        label_of_ri = km.annotate_ri(centers_d)
-        ri_cluster[multi] = label_of_ri[assign]
-        ri_centers = centers_d[np.argsort(label_of_ri)]
-        sil = km.silhouette_score(xri, assign)
+    rc_centers = np.zeros(4, np.float32)
+    ri_centers = np.zeros((4, NUM_RI_BINS), np.float32)
+    if n_multi >= MIN_MULTI:
+        cap = cap or _bucket(n_multi)
+        f_ri_c = np.zeros((cap, NUM_RI_BINS), np.int32)
+        f_rc_c = np.zeros(cap, np.int32)
+        f_ri_c[:n_multi] = f_ri[multi]
+        f_rc_c[:n_multi] = f_rc[multi]
+        fit = _fit_layer(jnp.asarray(f_ri_c), jnp.asarray(f_rc_c),
+                         jnp.int32(n_multi), jax.random.PRNGKey(seed))
+        ann = _annotate(fit, n_multi)
+        rc_cluster[multi] = ann["rc_label"]
+        ri_cluster[multi] = ann["ri_label"]
+        rc_centers, ri_centers = ann["rc_centers"], ann["ri_centers"]
 
-    return LayerClusters(uniq=sig["uniq"], rc_cluster=rc_cluster,
+    return LayerClusters(uniq=uniq, rc_cluster=rc_cluster,
                          ri_cluster=ri_cluster, rc_centers=rc_centers,
-                         ri_centers=ri_centers, silhouette_ri=sil,
+                         ri_centers=ri_centers,
                          features_ri=f_ri[multi] if multi.any()
-                         else np.zeros((0, NUM_RI_BINS)))
+                         else np.zeros((0, NUM_RI_BINS), np.int64))
+
+
+def train_layer(lines: np.ndarray, seed: int = 0,
+                cap: Optional[int] = None) -> LayerClusters:
+    """Host-reference LERN pipeline on one layer's line trace.
+
+    Features come from the numpy oracle; the clustering runs through the
+    same jitted ``_fit_layer`` program as the batched trainer, padded to
+    ``cap`` points.  The default — this layer's own power-of-two bucket —
+    is exactly the capacity its row gets in ``train_model_batched``'s
+    bucket groups, which is what makes the two paths bitwise-equal."""
+    sig = reuse_signature_np(lines)
+    f_ri, f_rc = ri_histogram_np(lines, sig)
+    return _fit_host_features(sig["uniq"], f_ri, f_rc, seed, cap)
+
+
+def _layer_lines(trace: Trace, hash_fn: Optional[Callable]) -> List[np.ndarray]:
+    out = []
+    for li in range(len(trace.layer_names)):
+        lines = trace.line[trace.layer == li]
+        out.append(hash_fn(lines) if hash_fn is not None else lines)
+    return out
 
 
 def train(trace: Trace, hash_fn: Optional[Callable] = None,
           seed: int = 0) -> LernModel:
-    """Train LERN layer-by-layer on one input-set trace.
+    """Host-reference trainer: per-layer numpy features + shared jitted fit.
 
     ``hash_fn`` (paper §VI-J): when the L-RPT is smaller than the address
     space, training runs on *hashed* addresses so the predictor internalizes
-    aliasing (LOptv1..v4)."""
+    aliasing (LOptv1..v4).  Each layer fits at its own power-of-two
+    capacity — the same shape its bucket row has in the batched trainer —
+    so this produces the same model as ``train_model_batched`` (bitwise on
+    the cluster tables)."""
+    layers = [train_layer(lines, seed=seed + li)
+              for li, lines in enumerate(_layer_lines(trace, hash_fn))]
+    return LernModel.from_layers(layers, hash_fn=hash_fn)
+
+
+def train_model_batched(trace: Trace, hash_fn: Optional[Callable] = None,
+                        seed: int = 0,
+                        use_kernel: Optional[bool] = None) -> LernModel:
+    """Device-resident trainer: the whole model as two device programs.
+
+    Program 1 (``reuse.reuse_features_flat``) extracts every layer's
+    integer feature tables from the *flat* concatenated trace — one
+    composite (layer, line) sort, RI-binning through the ``ri_histogram``
+    Pallas kernel (an elementwise pass, so the kernel runs even on
+    interpret backends) — padded to the trace length, not layers x
+    max-layer.  Program 2 (``_fit_groups``) runs every layer's two masked
+    k-means fits as one jitted call, layers grouped into power-of-two
+    capacity buckets (``use_kernel``: None = Pallas assignment where it
+    compiles).  No per-layer Python k-means loop; only the O(k)-sized
+    semantic annotation runs on the host.  Bitwise-equal to ``train`` on
+    the cluster tables (the float pipeline is the shared ``_fit_layer`` at
+    identical padded shapes)."""
+    lines_all = np.asarray(trace.line, np.int64)
+    layer_all = np.asarray(trace.layer, np.int64)
+    if np.any(np.diff(layer_all) < 0):
+        # flat extraction needs each layer contiguous; a stable sort by
+        # layer preserves within-layer order (exact same reuse intervals)
+        order = np.argsort(layer_all, kind="stable")
+        lines_all, layer_all = lines_all[order], layer_all[order]
+    if hash_fn is not None:
+        lines_all = hash_fn(lines_all)
+    n_l = max(len(trace.layer_names), 1)
+    m = lines_all.shape[0]
+    m_pad = max(8, ((m + 4095) // 4096) * 4096)
+    lines32 = np.full(m_pad, int(PAD_LINE), np.int32)
+    lines32[:m] = lines_to_device(lines_all)
+    layer32 = np.full(m_pad, n_l, np.int32)
+    layer32[:m] = layer_all
+
+    # --- device program 1: flat whole-model feature extraction -------------
+    feats = reuse_features_flat(jnp.asarray(lines32), jnp.asarray(layer32),
+                                jnp.int32(m), n_l)
+    uniq_f = np.asarray(feats["uniq"], np.int64)
+    f_ri_f = np.asarray(feats["f_ri"])
+    f_rc_f = np.asarray(feats["f_rc"])
+    n_uniq = np.asarray(feats["n_uniq"], np.int32)
+    offs = np.concatenate([[0], np.cumsum(n_uniq)])
+
+    # --- host: bucket layers by fit capacity (integer work, O(N)) ----------
+    per_layer = []  # (li, multi_mask, n_multi, cap)
+    buckets: Dict[int, List[int]] = {}
+    for li in range(n_l):
+        fl = f_rc_f[offs[li]:offs[li + 1]]
+        multi = fl > 1
+        nm = int(multi.sum())
+        per_layer.append((multi, nm))
+        if nm >= MIN_MULTI:
+            buckets.setdefault(_bucket(nm), []).append(li)
+
+    groups = []
+    group_of: Dict[int, tuple] = {}
+    for cap in sorted(buckets):
+        members = buckets[cap]
+        g_ri = np.zeros((len(members), cap, NUM_RI_BINS), np.int32)
+        g_rc = np.zeros((len(members), cap), np.int32)
+        g_nm = np.zeros(len(members), np.int32)
+        keys = np.zeros((len(members), 2), np.uint32)
+        for gi, li in enumerate(members):
+            multi, nm = per_layer[li]
+            sl = slice(offs[li], offs[li + 1])
+            g_ri[gi, :nm] = f_ri_f[sl][multi]
+            g_rc[gi, :nm] = f_rc_f[sl][multi]
+            g_nm[gi] = nm
+            keys[gi] = np.asarray(jax.random.PRNGKey(seed + li))
+            group_of[li] = (len(groups), gi)
+        groups.append((jnp.asarray(g_ri), jnp.asarray(g_rc),
+                       jnp.asarray(g_nm), jnp.asarray(keys)))
+
+    # --- device program 2: all fits in one jitted call ---------------------
+    fits = _fit_groups(tuple(groups), use_kernel=use_kernel)
+
+    # --- host: annotation + table assembly (O(L * k)) ----------------------
+    n_tab = _bucket(int(n_uniq.max(initial=1)))
+    uniq = np.full((n_l, n_tab), int(PAD_LINE), np.int64)
+    rc = np.full((n_l, n_tab), -1, np.int8)
+    ri = np.full((n_l, n_tab), -1, np.int8)
+    rc_c = np.zeros((n_l, 4), np.float32)
+    ri_c = np.zeros((n_l, 4, NUM_RI_BINS), np.float32)
+    features: List[np.ndarray] = []
+    for li in range(n_l):
+        nu = int(n_uniq[li])
+        multi, nm = per_layer[li]
+        sl = slice(offs[li], offs[li + 1])
+        uniq[li, :nu] = uniq_f[sl]
+        features.append(f_ri_f[sl][multi].astype(np.int64))
+        if li not in group_of:
+            continue
+        g, gi = group_of[li]
+        ann = _annotate(jax.tree.map(lambda a, i=gi: a[i], fits[g]), nm)
+        rc[li, :nu][multi] = ann["rc_label"].astype(np.int8)
+        ri[li, :nu][multi] = ann["ri_label"].astype(np.int8)
+        rc_c[li], ri_c[li] = ann["rc_centers"], ann["ri_centers"]
+    return LernModel(uniq=uniq, rc_cluster=rc, ri_cluster=ri,
+                     n_uniq=n_uniq, rc_centers=rc_c, ri_centers=ri_c,
+                     features_ri=features, hash_fn=hash_fn)
+
+
+def train_host_numpy(trace: Trace, hash_fn: Optional[Callable] = None,
+                     seed: int = 0) -> LernModel:
+    """The pre-refactor host pipeline, kept as the perf baseline.
+
+    Faithful to the seed-era ``train``: a Python loop over layers, numpy
+    feature extraction, two k-means fits per layer at that layer's *exact*
+    point count (a distinct compiled program per layer shape), and the
+    O(n^2) silhouette computed inline.  ``benchmarks/fig05_clustering.py``
+    times this against ``train_model_batched`` for bench_lern.json; it is
+    not bitwise-comparable to the batched path (the fit shapes differ), so
+    parity tests use ``train`` instead."""
     layers = []
     for li in range(len(trace.layer_names)):
-        mask = trace.layer == li
-        lines = trace.line[mask]
+        lines = trace.line[trace.layer == li]
         if hash_fn is not None:
             lines = hash_fn(lines)
-        layers.append(train_layer(lines, seed=seed + li))
-    return LernModel(layers=layers, hash_fn=hash_fn)
+        sig = reuse_signature_np(lines)
+        f_ri, f_rc = ri_histogram_np(lines, sig)
+        n = sig["uniq"].shape[0]
+        rc_cluster = np.full(n, -1, dtype=np.int64)
+        ri_cluster = np.full(n, -1, dtype=np.int64)
+        multi = f_rc > 1
+        sil = 0.0
+        rc_centers = np.zeros(4, np.float32)
+        ri_centers = np.zeros((4, NUM_RI_BINS), np.float32)
+        if int(multi.sum()) >= MIN_MULTI:
+            xrc = jnp.asarray(np.log1p(f_rc[multi]).astype(np.float32))[:, None]
+            xn, lo, hi = km.normalize(xrc)
+            res = km.kmeans_fit(xn, k=4, seed=seed + li)
+            label_of = km.annotate_rc(np.asarray(res.centers))
+            rc_cluster[multi] = label_of[np.asarray(res.assign)]
+            denorm = np.asarray(res.centers) * np.asarray(hi - lo) \
+                + np.asarray(lo)
+            rc_centers = np.expm1(denorm.reshape(-1))[np.argsort(label_of)]
+            xri_raw = f_ri[multi].astype(np.float32)
+            xri = xri_raw / np.maximum(xri_raw.sum(1, keepdims=True), 1e-9)
+            res = km.kmeans_fit(jnp.asarray(xri), k=4, seed=seed + li)
+            assign = np.asarray(res.assign)
+            centers_d = np.stack([
+                xri_raw[assign == c].mean(0) if (assign == c).any()
+                else np.zeros(NUM_RI_BINS) for c in range(4)])
+            label_ri = km.annotate_ri(centers_d)
+            ri_cluster[multi] = label_ri[assign]
+            ri_centers = centers_d[np.argsort(label_ri)]
+            sil = km.silhouette_score(xri, assign)
+        layers.append(LayerClusters(
+            uniq=sig["uniq"], rc_cluster=rc_cluster, ri_cluster=ri_cluster,
+            rc_centers=rc_centers, ri_centers=ri_centers,
+            features_ri=f_ri[multi] if multi.any()
+            else np.zeros((0, NUM_RI_BINS), np.int64), _sil=sil))
+    return LernModel.from_layers(layers, hash_fn=hash_fn)
 
 
 def prediction_accuracy(model: LernModel, trace: Trace) -> float:
@@ -142,7 +500,7 @@ def prediction_accuracy(model: LernModel, trace: Trace) -> float:
 
 def cluster_distribution(model: LernModel, trace: Trace) -> Dict[str, np.ndarray]:
     """Fig. 6: per-layer % of memory *accesses* in each RI / RC cluster."""
-    n_layers = len(model.layers)
+    n_layers = model.n_layers
     ri_dist = np.zeros((n_layers, 5))  # Immediate..Remote, NoReuse
     rc_dist = np.zeros((n_layers, 5))  # Cold..Hot, NoReuse
     for li, lc in enumerate(model.layers):

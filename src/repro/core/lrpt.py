@@ -89,15 +89,20 @@ class LRPT:
     def load_layer(self, model: LernModel, layer_idx: int) -> None:
         """Populate the table with one layer's clusters (layer-transition
         load, §V-B).  Lines with reuse only; collisions: last write wins —
-        with hashed training (§VI-J) aliasing is already internalized."""
+        with hashed training (§VI-J) aliasing is already internalized.
+
+        Consumes the model's stacked lookup arrays directly (padding and
+        No-Reuse rows share the -1 cluster encoding, so one mask drops
+        both)."""
         self.table[:] = 0
-        lc = model.layers[layer_idx]
-        keep = lc.rc_cluster >= 0
+        rc = model.rc_cluster[layer_idx].astype(np.int64)
+        ri = model.ri_cluster[layer_idx].astype(np.int64)
+        keep = rc >= 0
+        uniq = model.uniq[layer_idx][keep]
         # hashed-trained models (§VI-J) store table keys in `uniq` already;
         # unhashed models are indexed through the table's own hash
-        idx = (lc.uniq[keep] if model.hash_fn is not None
-               else self.hash_fn(lc.uniq[keep]))
-        packed = (0x10 | (lc.ri_cluster[keep] << 2) | lc.rc_cluster[keep])
+        idx = uniq if model.hash_fn is not None else self.hash_fn(uniq)
+        packed = (0x10 | (ri[keep] << 2) | rc[keep])
         self.table[idx] = packed.astype(np.int8)
 
     def lookup(self, lines: np.ndarray) -> tuple:
@@ -107,6 +112,44 @@ class LRPT:
         rc = np.where(valid, e & 0x3, -1)
         ri = np.where(valid, (e >> 2) & 0x3, -1)
         return rc, ri
+
+
+def pack_tables(model: LernModel, variant: str = "full") -> np.ndarray:
+    """All layers' L-RPT images as one [L, entries] int8 lookup table.
+
+    Vectorized over the model's stacked cluster arrays — the device-array
+    replacement for per-layer dict materialization.  Row ``li`` equals the
+    table ``load_layer(model, li)`` would produce (same last-write-wins
+    collision order: numpy fancy assignment applies writes in row-major
+    order, which preserves each layer's uniq order)."""
+    spec = VARIANTS[variant]
+    kind, bits = spec["hash"]
+    hash_fn = make_hash(kind, bits)
+    n_l = model.uniq.shape[0]
+    tables = np.zeros((n_l, spec["entries"]), dtype=np.int8)
+    rc = model.rc_cluster.astype(np.int64)
+    ri = model.ri_cluster.astype(np.int64)
+    keep = rc >= 0  # [L, N]; padding rows are -1 too
+    rows = np.broadcast_to(np.arange(n_l)[:, None], keep.shape)[keep]
+    uniq = model.uniq[keep]
+    idx = uniq if model.hash_fn is not None else hash_fn(uniq)
+    packed = (0x10 | (ri[keep] << 2) | rc[keep]).astype(np.int8)
+    tables[rows, idx] = packed
+    return tables
+
+
+def lookup_tables(tables: np.ndarray, variant: str, layer: np.ndarray,
+                  lines: np.ndarray) -> tuple:
+    """Vectorized per-access lookup through the packed [L, entries] tables:
+    one gather for a whole trace -> (rc_cluster, ri_cluster), -1 = No
+    Reuse."""
+    kind, bits = VARIANTS[variant]["hash"]
+    hash_fn = make_hash(kind, bits)
+    e = tables[np.asarray(layer, np.int64), hash_fn(lines)].astype(np.int64)
+    valid = (e & 0x10) != 0
+    rc = np.where(valid, e & 0x3, -1)
+    ri = np.where(valid, (e >> 2) & 0x3, -1)
+    return rc, ri
 
 
 def lrpt_train_hash(variant: str) -> Optional[Callable]:

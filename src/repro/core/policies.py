@@ -3,6 +3,12 @@
 Naming (paper §III): { Arbitration - C(policy) - A(policy) - Deadline }:
 C = core bypass, A = accelerator bypass; S = SHIP-driven, L = LERN-driven;
 -D = deadline-aware.  HyDRA == ARP-CS-AL-D.
+
+``-ol`` (online-LERN) variants refit the LERN clusters every
+``retrain_period`` epochs from the observed epoch trace and swap the
+L-RPT images in place (reuse behavior drifts across phases; see
+Cohmeleon-style online orchestration).  ``retrain_period=None`` or an
+infinite period degenerates bitwise to the offline policy.
 """
 from __future__ import annotations
 
@@ -29,6 +35,7 @@ class Policy:
     dpcp: bool = False                 # §VI-D: 1-way partition + prefetch
     way_partition: Optional[Tuple[int, int]] = None  # (core_mask, accel_mask)
     lrpt_variant: str = "full"
+    retrain_period: Optional[float] = None  # online-LERN refit period (epochs)
     ship_params: ShipParams = SHIP_DEFAULT
     apm: APMParams = dataclasses.field(default_factory=APMParams)
 
@@ -94,6 +101,21 @@ _reg(_mk("flash", arbitration="flash"))
 # --- predictor-size studies (§VI-K) ------------------------------------------
 _reg(_mk("arp-cs-as-large", arbitration="arp", core_bypass=True,
          accel_mode=A_SHIP, accel_predictor="ship", ship_params=SHIP_LARGE))
+
+
+DEFAULT_RETRAIN_PERIOD = 100.0  # epochs between online-LERN refits
+
+
+def with_online(p: Policy,
+                period: float = DEFAULT_RETRAIN_PERIOD) -> Policy:
+    """Online-LERN variant of a LERN-driven policy (``<name>-ol``)."""
+    assert p.accel_predictor == "lern", p.name
+    return dataclasses.replace(p, name=f"{p.name}-ol", retrain_period=period)
+
+
+# --- online-LERN variants (device-resident retraining in the loop) ----------
+_reg(with_online(POLICIES["arp-al"]))
+_reg(with_online(POLICIES["hydra"]))
 
 
 def with_way_partition(p: Policy, core_mask: int, accel_mask: int) -> Policy:

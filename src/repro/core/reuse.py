@@ -79,11 +79,28 @@ def ri_histogram_np(lines: np.ndarray, sig: Dict[str, np.ndarray] = None
 
 
 # ----------------------------------------------------------------------------
-# JAX implementation (fixed shapes, jit-able) — used for property tests and
-# for on-accelerator feature extraction in the vectorized explorer.
+# JAX implementation (fixed shapes, jit-able) — the device-resident LERN
+# training path (lern.train_model_batched) and the property tests.
 # ----------------------------------------------------------------------------
+import functools
+
 import jax
 import jax.numpy as jnp
+
+# Padding sentinel for fixed-shape line arrays.  The device path carries
+# lines as int32 (x64 is disabled); host traces are int64 but their values
+# are small element offsets (and L-RPT-hashed training addresses are masked
+# to <= 18 bits), so the mapping is exact.  ``lines_to_device`` checks the
+# range.  PAD_LINE sorts after every real line.
+PAD_LINE = np.int32(np.iinfo(np.int32).max)
+
+
+def lines_to_device(lines: np.ndarray) -> np.ndarray:
+    """Exact int64 -> int32 narrowing for device-side feature extraction."""
+    lines = np.asarray(lines, dtype=np.int64)
+    if lines.size and (lines.min() < 0 or lines.max() >= int(PAD_LINE)):
+        raise ValueError("line addresses out of int32 device range")
+    return lines.astype(np.int32)
 
 
 @jax.jit
@@ -113,3 +130,130 @@ def ri_bin(ri: jnp.ndarray) -> jnp.ndarray:
     e0, e1, e2 = RI_BIN_EDGES
     return jnp.where(ri <= e0, 0,
                      jnp.where(ri <= e1, 1, jnp.where(ri <= e2, 2, 3)))
+
+
+def _ri_bins_kernel(ri: jnp.ndarray) -> jnp.ndarray:
+    """Per-access RI bin (-1 for no-reuse) through the Pallas kernel."""
+    from repro.kernels.common import INTERPRET, block_and_pad, pad_rows
+    from repro.kernels.ri_histogram.kernel import ri_histogram
+
+    n = ri.shape[0]
+    block, npad = block_and_pad(n, 4096)
+    bins, _ = ri_histogram(pad_rows(ri, npad, -1), block_n=block,
+                           interpret=INTERPRET)
+    return bins[:n]
+
+
+def reuse_features_jax(lines: jnp.ndarray, n_valid: jnp.ndarray,
+                       use_kernel: bool = True) -> Dict[str, jnp.ndarray]:
+    """Fixed-shape per-unique-line LERN features (Table I, device-resident).
+
+    ``lines`` is an int32 [M] array (``lines_to_device`` narrows int64
+    traces exactly) whose first ``n_valid`` entries are real accesses (the
+    rest is padding — any value, it is replaced by PAD_LINE).  All outputs
+    are integer and therefore bitwise-identical to the numpy oracle
+    (``reuse_signature_np`` + ``ri_histogram_np``) on the valid prefix,
+    for any amount of padding:
+
+      uniq    int32 [M]  sorted unique line addresses, PAD_LINE-padded
+      f_ri    int32 [M,4] per-unique-line RI-bin histogram (final -1
+                          interval excluded, per Table I)
+      f_rc    int32 [M]  per-unique-line reuse count T_i (0 for padding)
+      n_uniq  int32 []   number of real unique lines
+
+    The RI-binning runs through the ``ri_histogram`` Pallas kernel
+    (``use_kernel=False`` selects the jnp reference binning — same math,
+    used to cross-check the kernel in tests).  Shapes are static, so the
+    whole function vmaps/jits into the batched training program.
+    """
+    m = lines.shape[0]
+    idx = jnp.arange(m, dtype=jnp.int32)
+    lx = jnp.where(idx < n_valid, lines, PAD_LINE)
+    order = jnp.argsort(lx, stable=True)          # padding sorts to the end
+    sorted_lines = lx[order]
+    sorted_pos = order.astype(jnp.int32)
+    real = sorted_lines != PAD_LINE
+
+    # forward reuse interval per (sorted) access: next occurrence of the
+    # same line minus this position; -1 at each line's final occurrence
+    nxt = jnp.concatenate([sorted_pos[1:], jnp.array([0], jnp.int32)])
+    same_next = jnp.concatenate(
+        [sorted_lines[1:] == sorted_lines[:-1], jnp.array([False])])
+    ri_sorted = jnp.where(same_next, nxt - sorted_pos, -1)
+    bins = (_ri_bins_kernel(ri_sorted) if use_kernel
+            else jnp.where(ri_sorted < 0, -1, ri_bin(ri_sorted)))
+
+    # segment id per sorted access == index into the unique-line table
+    seg_start = jnp.concatenate(
+        [jnp.array([True]), sorted_lines[1:] != sorted_lines[:-1]])
+    sid = jnp.cumsum(seg_start.astype(jnp.int32)) - 1
+
+    counted = real & (ri_sorted >= 0)
+    f_ri = jnp.zeros((m, NUM_RI_BINS), jnp.int32).at[
+        sid, jnp.maximum(bins, 0)].add(counted.astype(jnp.int32))
+    f_rc = jnp.zeros(m, jnp.int32).at[sid].add(real.astype(jnp.int32))
+    uniq = jnp.full(m, PAD_LINE, jnp.int32).at[sid].set(
+        jnp.where(real, sorted_lines, PAD_LINE))
+    n_uniq = jnp.sum((seg_start & real).astype(jnp.int32))
+    return {"uniq": uniq, "f_ri": f_ri, "f_rc": f_rc, "n_uniq": n_uniq}
+
+
+@functools.partial(jax.jit, static_argnames=("n_layers", "use_kernel"))
+def reuse_features_flat(lines: jnp.ndarray, layer: jnp.ndarray,
+                        n_valid: jnp.ndarray, n_layers: int,
+                        use_kernel: bool = True) -> Dict[str, jnp.ndarray]:
+    """Whole-model reuse features in one flat pass (no per-layer padding).
+
+    The batched LERN trainer's extraction program: instead of padding every
+    layer to the longest one, the full concatenated trace is sorted once by
+    the composite (layer, line) key — two stable argsorts — so the padded
+    volume is the trace length, not layers x max-layer.
+
+    Requires ``layer`` to be non-decreasing over the valid prefix (each
+    layer's accesses contiguous — the trainer stable-sorts the trace by
+    layer first if needed): per-layer reuse intervals are then exactly the
+    global position differences, bitwise-matching the per-layer numpy
+    oracle.
+
+    Returns flat per-unique tables grouped by layer (each layer's segment
+    contiguous, lines ascending within it):
+
+      uniq    int32 [M]   PAD_LINE-padded, layer-grouped unique lines
+      f_ri    int32 [M,4] per-unique-line RI-bin histogram
+      f_rc    int32 [M]   per-unique-line reuse count
+      n_uniq  int32 [n_layers] unique-line count per layer
+    """
+    m = lines.shape[0]
+    idx = jnp.arange(m, dtype=jnp.int32)
+    valid = idx < n_valid
+    lx = jnp.where(valid, lines, PAD_LINE)
+    ly = jnp.where(valid, layer, n_layers)
+    ord1 = jnp.argsort(lx, stable=True)
+    order = ord1[jnp.argsort(ly[ord1], stable=True)]
+    s_lines = lx[order]
+    s_layer = ly[order]
+    s_pos = order.astype(jnp.int32)
+    real = s_lines != PAD_LINE
+
+    nxt = jnp.concatenate([s_pos[1:], jnp.array([0], jnp.int32)])
+    same_next = jnp.concatenate(
+        [(s_lines[1:] == s_lines[:-1]) & (s_layer[1:] == s_layer[:-1]),
+         jnp.array([False])])
+    ri_sorted = jnp.where(same_next, nxt - s_pos, -1)
+    bins = (_ri_bins_kernel(ri_sorted) if use_kernel
+            else jnp.where(ri_sorted < 0, -1, ri_bin(ri_sorted)))
+
+    seg_start = jnp.concatenate(
+        [jnp.array([True]),
+         (s_lines[1:] != s_lines[:-1]) | (s_layer[1:] != s_layer[:-1])])
+    sid = jnp.cumsum(seg_start.astype(jnp.int32)) - 1
+
+    counted = real & (ri_sorted >= 0)
+    f_ri = jnp.zeros((m, NUM_RI_BINS), jnp.int32).at[
+        sid, jnp.maximum(bins, 0)].add(counted.astype(jnp.int32))
+    f_rc = jnp.zeros(m, jnp.int32).at[sid].add(real.astype(jnp.int32))
+    uniq = jnp.full(m, PAD_LINE, jnp.int32).at[sid].set(
+        jnp.where(real, s_lines, PAD_LINE))
+    n_uniq = jnp.zeros(n_layers + 1, jnp.int32).at[s_layer].add(
+        (seg_start & real).astype(jnp.int32))[:n_layers]
+    return {"uniq": uniq, "f_ri": f_ri, "f_rc": f_rc, "n_uniq": n_uniq}

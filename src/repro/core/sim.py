@@ -29,12 +29,13 @@ import numpy as np
 
 from . import cores as cores_mod
 from . import llc as llc_mod
+from . import lrpt as lrpt_mod
 from .apm import APMState, bypass_mask
 from .dram import DDR3_1600, DramModel
-from .lern import LernModel, train as lern_train
+from .lern import LernModel, train_model_batched
 from .llc import (A_HINT, A_NONE, A_RAND, A_SHIP, HW_SCALE, LLCConfig,
                   build_rounds, pack_meta)
-from .lrpt import LRPT, lrpt_train_hash
+from .lrpt import lrpt_train_hash
 from .policies import Policy
 from .tracegen import Trace, generate_trace
 from .workloads import CONFIGS, AccelConfig
@@ -165,40 +166,46 @@ def load_trace(config: str, subsample_target: int) -> Trace:
 
 def load_lern(config: str, lrpt_variant: str, subsample_target: int,
               seed: int = 0) -> LernModel:
-    key = f"{config}-{lrpt_variant}-ss{subsample_target}-s{seed}"
+    """Train (or load) the LERN model through the device-batched trainer.
+
+    v3 cache key: the model layout changed to stacked lookup arrays, the
+    k-means++ draw scheme became padding-invariant, and each layer fits at
+    its own power-of-two capacity bucket."""
+    key = f"{config}-{lrpt_variant}-ss{subsample_target}-s{seed}-v3"
     path = _cache_path("lern", key)
     if os.path.exists(path):
         with open(path, "rb") as f:
             return pickle.load(f)
     tr = load_trace(config, subsample_target)
-    model = lern_train(tr, hash_fn=lrpt_train_hash(lrpt_variant), seed=seed)
+    model = train_model_batched(tr, hash_fn=lrpt_train_hash(lrpt_variant),
+                                seed=seed)
     _atomic_dump(model, path)
     return model
+
+
+def clusters_from_model(model: LernModel, trace: Trace, lrpt_variant: str
+                        ) -> Dict[str, np.ndarray]:
+    """Per-access (rc, ri) cluster ids for a whole trace in one gather
+    through the packed [L, entries] table images (lrpt.pack_tables)."""
+    tables = lrpt_mod.pack_tables(model, lrpt_variant)
+    rc, ri = lrpt_mod.lookup_tables(tables, lrpt_variant, trace.layer,
+                                    trace.line)
+    return {"rc": rc.astype(np.int8), "ri": ri.astype(np.int8),
+            "cold_center": model.rc_centers[:, 0].astype(np.float64)}
 
 
 def trace_clusters(config: str, lrpt_variant: str, subsample_target: int
                    ) -> Dict[str, np.ndarray]:
     """Per-access (rc, ri) cluster ids via the L-RPT, plus per-layer cold
     centers — precomputed once (the table is static per layer)."""
-    key = f"{config}-{lrpt_variant}-ss{subsample_target}-clusters"
+    key = f"{config}-{lrpt_variant}-ss{subsample_target}-clusters-v3"
     path = _cache_path("lern", key)
     if os.path.exists(path):
         with open(path, "rb") as f:
             return pickle.load(f)
     tr = load_trace(config, subsample_target)
     model = load_lern(config, lrpt_variant, subsample_target)
-    table = LRPT.create(lrpt_variant)
-    rc = np.full(tr.num_accesses, -1, dtype=np.int8)
-    ri = np.full(tr.num_accesses, -1, dtype=np.int8)
-    cold = np.zeros(len(model.layers), dtype=np.float64)
-    for li in range(len(model.layers)):
-        mask = tr.layer == li
-        table.load_layer(model, li)
-        rc_l, ri_l = table.lookup(tr.line[mask])
-        rc[mask] = rc_l
-        ri[mask] = ri_l
-        cold[li] = model.layers[li].rc_centers[0]
-    out = {"rc": rc, "ri": ri, "cold_center": cold}
+    out = clusters_from_model(model, tr, lrpt_variant)
     _atomic_dump(out, path)
     return out
 
@@ -272,6 +279,19 @@ class Lane:
         self.clusters = (trace_clusters(config, policy.lrpt_variant,
                                         p.subsample_target)
                          if need_lern else None)
+        # online-LERN (``*-ol`` policies): refit clusters every R epochs
+        # from the observed epoch trace and swap the L-RPT images in place.
+        # An infinite period degenerates bitwise to the offline policy.
+        r = policy.retrain_period
+        self._retrain_every = (max(int(r), 1) if need_lern and r is not None
+                               and np.isfinite(r) and r > 0 else None)
+        if self._retrain_every is not None:
+            self._lern_model = load_lern(config, policy.lrpt_variant,
+                                         p.subsample_target)
+            self._train_hash = lrpt_train_hash(policy.lrpt_variant)
+            self._win_ranges: List[tuple] = []
+            # own copy: trace_clusters results may be shared across lanes
+            self.clusters = {k: np.array(v) for k, v in self.clusters.items()}
         self.afr_hints = ((rng.random(self.m_total) < policy.afr_p)
                           if policy.accel_predictor == "random" else None)
 
@@ -430,6 +450,8 @@ class Lane:
         ev_when = []
         if n_a > 0:
             sl = slice(self.pos, self.pos + n_a)
+            if self._retrain_every is not None:
+                self._win_ranges.append((self.pos, self.pos + n_a))
             lines_a = tr.line[sl].astype(np.int64)
             writes_a = tr.write[sl]
             if policy.accel_mode == A_HINT and self.clusters is not None:
@@ -568,6 +590,38 @@ class Lane:
                 self.pos = 0
                 self.input_start = max(self.input_start + self.period, self.now)
         self.epoch += 1
+        if (self._retrain_every is not None
+                and self.epoch % self._retrain_every == 0):
+            self._online_retrain()
+
+    def _online_retrain(self) -> None:
+        """Online-LERN: refit clusters on the accesses observed since the
+        last retrain and swap the packed L-RPT images in place.
+
+        Only layers with enough observed multi-occurrence lines are
+        replaced (a sparse window must not wipe a layer's knowledge);
+        future per-access lookups — including the next input's replay —
+        see the updated tables."""
+        if not self._win_ranges:
+            return
+        idx = np.concatenate([np.arange(a, b) for a, b in self._win_ranges])
+        self._win_ranges = []
+        tr = self.tr
+        window = Trace(line=tr.line[idx], write=tr.write[idx],
+                       cycle=tr.cycle[idx], layer=tr.layer[idx],
+                       layer_names=tr.layer_names,
+                       compute_cycles=tr.compute_cycles)
+        refit = train_model_batched(window, hash_fn=self._train_hash,
+                                    seed=self.p.seed)
+        good = [li for li in range(refit.n_layers)
+                if (refit.rc_cluster[li] >= 0).any()]
+        if not good:
+            return
+        self._lern_model = self._lern_model.replace_layers(good, refit)
+        fresh = clusters_from_model(self._lern_model, tr,
+                                    self.policy.lrpt_variant)
+        for k in ("rc", "ri", "cold_center"):
+            self.clusters[k] = fresh[k]
 
     def result(self) -> SimResult:
         completions, deadline = self.completions, self.deadline

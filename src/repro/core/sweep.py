@@ -16,6 +16,13 @@ at two levels:
   Results are bitwise-identical to sequential ``sim.run``
   (tests/test_sweep.py).
 
+Online-LERN lanes (``*-ol`` policies) ride the same batching: their
+retrain hook lives inside ``Lane.finish_epoch`` (refit on the observed
+window through ``lern.train_model_batched``, packed L-RPT images swapped
+in place), so a group can mix offline and online policies freely and an
+infinite retrain period stays bitwise-equal to the offline lane
+(tests/test_sweep.py).
+
 * **Across groups** ``map_points`` fans independent groups over a
   spawn-based process pool.  The existing sim disk cache is the dedup
   layer: cached points are skipped up front, finished groups are written

@@ -10,11 +10,8 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from ..common import INTERPRET
 from .kernel import flash_attention
-
-
-def _interpret() -> bool:
-    return jax.default_backend() != "tpu"
 
 
 @functools.partial(jax.jit, static_argnames=("causal",))
@@ -29,6 +26,6 @@ def mha(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
     vf = v.transpose(0, 2, 1, 3).reshape(b * hkv, v.shape[1], d)
     # GQA: map q-head grid index -> kv-head block (no materialized repeat)
     out = flash_attention(qf, kf, vf, causal=causal,
-                          interpret=_interpret(),
+                          interpret=INTERPRET,
                           kv_map=lambda g: g // rep)
     return out.reshape(b, h, sq, d).transpose(0, 2, 1, 3)

@@ -4,11 +4,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from ..common import INTERPRET, block_and_pad, round_up
 from .kernel import kmeans_assign
-
-
-def _interpret() -> bool:
-    return jax.default_backend() != "tpu"
 
 
 @jax.jit
@@ -16,10 +13,9 @@ def assign(x: jnp.ndarray, centers: jnp.ndarray) -> jnp.ndarray:
     """x [N, D], centers [K, D] -> [N] int32 (matches ref.assign_ref)."""
     n, d = x.shape
     k = centers.shape[0]
-    dp = ((d + 127) // 128) * 128
-    block_n = 1024 if n >= 1024 else max(8, n)
-    npad = ((n + block_n - 1) // block_n) * block_n
+    dp = round_up(d, 128)
+    block_n, npad = block_and_pad(n, 1024)
     xp = jnp.zeros((npad, dp), x.dtype).at[:n, :d].set(x)
     cp = jnp.zeros((k, dp), centers.dtype).at[:, :d].set(centers)
-    out = kmeans_assign(xp, cp, block_n=block_n, interpret=_interpret())
+    out = kmeans_assign(xp, cp, block_n=block_n, interpret=INTERPRET)
     return out[:n]

@@ -4,19 +4,15 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from ..common import INTERPRET, block_and_pad, pad_rows
 from .kernel import ri_histogram
-
-
-def _interpret() -> bool:
-    return jax.default_backend() != "tpu"
 
 
 @jax.jit
 def histogram(ri: jnp.ndarray):
     """ri [N] int32 -> (bin_idx [N] int32, counts [4] int32)."""
     n = ri.shape[0]
-    block = 4096 if n >= 4096 else max(8, n)
-    npad = ((n + block - 1) // block) * block
-    rp = jnp.full((npad,), -1, ri.dtype).at[:n].set(ri)
-    bins, partial = ri_histogram(rp, block_n=block, interpret=_interpret())
+    block, npad = block_and_pad(n, 4096)
+    rp = pad_rows(ri, npad, -1)
+    bins, partial = ri_histogram(rp, block_n=block, interpret=INTERPRET)
     return bins[:n], jnp.sum(partial, axis=0)

@@ -23,7 +23,8 @@ from typing import Dict, List, Tuple
 import numpy as np
 
 from repro.core.apm import APMParams, APMState
-from repro.core.kmeans import annotate_rc, annotate_ri, kmeans_fit, normalize
+from repro.core.kmeans import kmeans_fit_batched
+import jax
 import jax.numpy as jnp
 
 
@@ -34,24 +35,31 @@ class SessionProfile:
     ri_centers: np.ndarray      # inter-turn-gap centers (Immediate..Remote)
 
     @classmethod
-    def fit(cls, turns_per_session: np.ndarray, gaps: np.ndarray
-            ) -> "SessionProfile":
-        xr = jnp.asarray(np.log1p(turns_per_session, dtype=np.float32)
-                         )[:, None]
-        xn, lo, hi = normalize(xr)
-        span = float(np.asarray(hi - lo).reshape(-1)[0])
-        lo0 = float(np.asarray(lo).reshape(-1)[0])
-        res = kmeans_fit(xn, k=4)
-        order = np.argsort(annotate_rc(np.asarray(res.centers)))
-        rc_c = np.expm1(np.asarray(res.centers).reshape(-1)
-                        * span + lo0)[order]
-        xg = jnp.asarray(np.log1p(gaps, dtype=np.float32))[:, None]
-        gn, glo, ghi = normalize(xg)
-        gspan = float(np.asarray(ghi - glo).reshape(-1)[0])
-        glo0 = float(np.asarray(glo).reshape(-1)[0])
-        resg = kmeans_fit(gn, k=4)
-        cg = np.expm1(np.asarray(resg.centers).reshape(-1) * gspan + glo0)
-        return cls(rc_centers=rc_c, ri_centers=np.sort(cg))
+    def fit(cls, turns_per_session: np.ndarray, gaps: np.ndarray,
+            seed: int = 0) -> "SessionProfile":
+        """Cluster both session features with the same batched masked
+        k-means the device-resident LERN trainer uses: the two 1-D
+        problems are padded to one [2, N, 1] batch and fit in a single
+        vmapped device call (kmeans.kmeans_fit_batched)."""
+        feats = [np.log1p(turns_per_session, dtype=np.float32),
+                 np.log1p(gaps, dtype=np.float32)]
+        cap = max(8, max(f.shape[0] for f in feats))
+        x = np.zeros((2, cap, 1), np.float32)
+        mask = np.zeros((2, cap), bool)
+        lo = np.zeros(2, np.float32)
+        span = np.ones(2, np.float32)
+        for i, f in enumerate(feats):
+            n = f.shape[0]
+            lo[i], hi = f.min(), f.max()
+            span[i] = max(hi - lo[i], 1e-9)
+            x[i, :n, 0] = (f - lo[i]) / span[i]
+            mask[i, :n] = True
+        keys = jnp.stack([jax.random.PRNGKey(seed + i) for i in range(2)])
+        res = kmeans_fit_batched(jnp.asarray(x), jnp.asarray(mask), keys, k=4)
+        centers = np.asarray(res.centers).reshape(2, 4)
+        rc_c = np.expm1(np.sort(centers[0]) * span[0] + lo[0])
+        ri_c = np.expm1(np.sort(centers[1]) * span[1] + lo[1])
+        return cls(rc_centers=rc_c, ri_centers=ri_c)
 
     def classify(self, expected_turns: float, expected_gap: float
                  ) -> Tuple[int, int]:

@@ -1,0 +1,143 @@
+"""Device-resident LERN training: the batched pipeline must reproduce the
+host-numpy reference bitwise.
+
+Three layers of parity:
+* jitted ``reuse_features_jax`` == numpy oracle, for any padding amount
+  and ragged layer batches (hypothesis property; integer-exact);
+* ``kmeans_fit_batched`` row == single ``kmeans_fit_masked`` at the same
+  padded shape (the vmap-vs-single bitwise claim the trainer rests on);
+* ``train_model_batched`` == ``train`` on a multi-layer trace (cluster
+  tables, centers, uniq sets — all bitwise), plus packed L-RPT images ==
+  per-layer ``load_layer`` tables.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import lern, lrpt
+from repro.core.reuse import (PAD_LINE, lines_to_device, reuse_features_jax,
+                              reuse_signature_np, ri_histogram_np)
+from repro.core.tracegen import Trace
+
+
+def _features_match_oracle(arr: np.ndarray, pad: int) -> None:
+    sig = reuse_signature_np(arr)
+    f_ri, f_rc = ri_histogram_np(arr, sig)
+    lx = np.concatenate([arr, np.zeros(pad, np.int64)])
+    out = jax.jit(reuse_features_jax)(jnp.asarray(lines_to_device(lx)),
+                                      jnp.int32(arr.shape[0]))
+    nu = int(out["n_uniq"])
+    assert nu == sig["uniq"].shape[0]
+    np.testing.assert_array_equal(np.asarray(out["uniq"][:nu], np.int64),
+                                  sig["uniq"])
+    np.testing.assert_array_equal(np.asarray(out["f_ri"][:nu]), f_ri)
+    np.testing.assert_array_equal(np.asarray(out["f_rc"][:nu]), sig["count"])
+    assert np.all(np.asarray(out["uniq"][nu:]) == PAD_LINE)
+    assert np.all(np.asarray(out["f_rc"][nu:]) == 0)
+
+
+def test_features_match_oracle_table1():
+    _features_match_oracle(np.array([1, 1, 1, 2, 2, 1, 1, 2], np.int64), 5)
+
+
+def test_features_kernel_vs_jnp_binning():
+    rng = np.random.default_rng(0)
+    lx = jnp.asarray(rng.integers(0, 64, 1000).astype(np.int32))
+    a = jax.jit(reuse_features_jax, static_argnames=("use_kernel",))(
+        lx, jnp.int32(777), use_kernel=True)
+    b = jax.jit(reuse_features_jax, static_argnames=("use_kernel",))(
+        lx, jnp.int32(777), use_kernel=False)
+    for k in a:
+        np.testing.assert_array_equal(np.asarray(a[k]), np.asarray(b[k]))
+
+
+def _synthetic_trace(n_layers: int = 3, seed: int = 0) -> Trace:
+    """Hot/warm/streaming mix per layer (ragged layer lengths)."""
+    rng = np.random.default_rng(seed)
+    chunks = []
+    for i in range(n_layers):
+        n = 1500 + 400 * i
+        hot = np.arange(16) + 1000 * i
+        warm = np.arange(100, 140) + 1000 * i
+        seq = np.empty(n, np.int64)
+        ci = 0
+        for t in range(n):
+            r = rng.random()
+            if r < 0.5:
+                seq[t] = rng.choice(hot)
+            elif r < 0.7:
+                seq[t] = rng.choice(warm)
+            else:
+                seq[t] = 50_000 * (i + 1) + ci
+                ci += 1
+        chunks.append(seq)
+    line = np.concatenate(chunks)
+    layer = np.concatenate([np.full(len(c), i, np.int32)
+                            for i, c in enumerate(chunks)])
+    return Trace(line=line, write=np.zeros_like(line, bool),
+                 cycle=np.arange(len(line)), layer=layer,
+                 layer_names=[f"l{i}" for i in range(n_layers)],
+                 compute_cycles=len(line))
+
+
+def test_train_batched_matches_host_bitwise():
+    tr = _synthetic_trace()
+    a = lern.train(tr, seed=3)
+    b = lern.train_model_batched(tr, seed=3)
+    np.testing.assert_array_equal(a.n_uniq, b.n_uniq)
+    for li in range(a.n_layers):
+        n = int(a.n_uniq[li])
+        np.testing.assert_array_equal(a.uniq[li, :n], b.uniq[li, :n])
+        np.testing.assert_array_equal(a.rc_cluster[li, :n],
+                                      b.rc_cluster[li, :n])
+        np.testing.assert_array_equal(a.ri_cluster[li, :n],
+                                      b.ri_cluster[li, :n])
+        np.testing.assert_array_equal(a.rc_centers[li], b.rc_centers[li])
+        np.testing.assert_array_equal(a.ri_centers[li], b.ri_centers[li])
+        np.testing.assert_array_equal(a.features_ri[li], b.features_ri[li])
+
+
+def test_train_batched_hashed_variant():
+    """§VI-J hashed training goes through the same batched path."""
+    tr = _synthetic_trace(n_layers=2, seed=5)
+    hashed = lrpt.lrpt_train_hash("loptv3")
+    a = lern.train(tr, hash_fn=hashed, seed=1)
+    b = lern.train_model_batched(tr, hash_fn=hashed, seed=1)
+    np.testing.assert_array_equal(a.rc_cluster, b.rc_cluster)
+    np.testing.assert_array_equal(a.ri_cluster, b.ri_cluster)
+
+
+def test_packed_tables_match_load_layer():
+    tr = _synthetic_trace()
+    model = lern.train_model_batched(tr, seed=0)
+    for variant in ("full", "loptv1"):
+        tables = lrpt.pack_tables(model, variant)
+        t = lrpt.LRPT.create(variant)
+        for li in range(model.n_layers):
+            t.load_layer(model, li)
+            np.testing.assert_array_equal(tables[li], t.table, variant)
+        # whole-trace vectorized lookup == per-layer lookup
+        rc, ri = lrpt.lookup_tables(tables, variant, tr.layer, tr.line)
+        for li in range(model.n_layers):
+            mask = tr.layer == li
+            t.load_layer(model, li)
+            rc_l, ri_l = t.lookup(tr.line[mask])
+            np.testing.assert_array_equal(rc[mask], rc_l)
+            np.testing.assert_array_equal(ri[mask], ri_l)
+
+
+def test_replace_layers_swaps_tables():
+    tr = _synthetic_trace()
+    a = lern.train_model_batched(tr, seed=0)
+    b = lern.train_model_batched(tr, seed=9)
+    merged = a.replace_layers([1], b)
+    n = int(merged.n_uniq[1])
+    np.testing.assert_array_equal(merged.rc_cluster[1, :n],
+                                  b.rc_cluster[1, :n])
+    n0 = int(merged.n_uniq[0])
+    np.testing.assert_array_equal(merged.rc_cluster[0, :n0],
+                                  a.rc_cluster[0, :n0])
+    np.testing.assert_array_equal(merged.rc_centers[0], a.rc_centers[0])
+    np.testing.assert_array_equal(merged.rc_centers[1], b.rc_centers[1])
+
+

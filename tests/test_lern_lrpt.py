@@ -60,7 +60,7 @@ def test_prediction_accuracy_reasonable():
                cycle=np.arange(len(lines)), layer=np.zeros(len(lines),
                                                            np.int32),
                layer_names=["l0"], compute_cycles=len(lines))
-    model = LernModel(layers=[train_layer(lines)])
+    model = LernModel.from_layers([train_layer(lines)])
     acc = prediction_accuracy(model, tr)
     assert 0.5 < acc <= 1.0  # paper: 87-100% on real configs
 
@@ -79,7 +79,7 @@ def test_lrpt_roundtrip(variant):
     lines = _synthetic_trace()
     hashed = lrpt_train_hash(variant)
     lc = train_layer(hashed(lines) if hashed else lines)
-    model = LernModel(layers=[lc], hash_fn=hashed)
+    model = LernModel.from_layers([lc], hash_fn=hashed)
     t = LRPT.create(variant)
     t.load_layer(model, 0)
     rc, ri = t.lookup(lines)
@@ -97,7 +97,7 @@ def test_hashed_training_internalizes_aliasing():
     lines = _synthetic_trace() * 131_072 + 5  # force aliasing in 17 bits
     hashed = lrpt_train_hash("loptv3")
     lc = train_layer(hashed(lines))
-    model = LernModel(layers=[lc], hash_fn=hashed)
+    model = LernModel.from_layers([lc], hash_fn=hashed)
     t = LRPT.create("loptv3")
     t.load_layer(model, 0)
     rc, ri = t.lookup(lines)

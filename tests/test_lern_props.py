@@ -1,0 +1,49 @@
+"""Hypothesis property tests for the device-resident LERN pipeline:
+padded/ragged batches of the jitted feature extractor and the batched
+masked k-means must match their single-problem references bitwise.
+(Whole module skips where hypothesis is absent; CI installs it.)"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core import kmeans as km  # noqa: E402
+from test_lern_batched import _features_match_oracle  # noqa: E402
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.integers(0, 40), min_size=1, max_size=250),
+       st.integers(0, 120))
+def test_features_property_padding_invariant(lines, pad):
+    """jitted reuse features == numpy oracle for any trace and padding."""
+    _features_match_oracle(np.array(lines, np.int64), pad)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.lists(st.integers(2, 48), min_size=1, max_size=4),
+       st.integers(0, 2 ** 31 - 1))
+def test_batched_kmeans_matches_single(sizes, seed):
+    """Each row of the vmapped fit is bitwise the single masked fit at the
+    same padded shape, for ragged point counts."""
+    rng = np.random.default_rng(seed)
+    cap = max(sizes)
+    b = len(sizes)
+    x = np.zeros((b, cap, 4), np.float32)
+    mask = np.zeros((b, cap), bool)
+    for i, n in enumerate(sizes):
+        x[i, :n] = rng.normal(size=(n, 4)).astype(np.float32)
+        mask[i, :n] = True
+    keys = jnp.stack([jax.random.PRNGKey(seed % 10_000 + i)
+                      for i in range(b)])
+    rb = km.kmeans_fit_batched(jnp.asarray(x), jnp.asarray(mask), keys,
+                               k=4, iters=8)
+    for i in range(b):
+        rs = km.kmeans_fit_masked(jnp.asarray(x[i]), jnp.asarray(mask[i]),
+                                  keys[i], k=4, iters=8)
+        np.testing.assert_array_equal(np.asarray(rs.centers),
+                                      np.asarray(rb.centers[i]))
+        np.testing.assert_array_equal(np.asarray(rs.assign)[mask[i]],
+                                      np.asarray(rb.assign[i])[mask[i]])

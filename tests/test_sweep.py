@@ -1,7 +1,8 @@
 """Sweep engine: batched multi-policy == sequential sim.run (bitwise),
-lane-batched LLC engine == static engine, atomic cache writes under
-concurrency."""
+lane-batched LLC engine == static engine, online-LERN degeneration,
+atomic cache writes under concurrency."""
 import dataclasses
+import math
 import os
 import pickle
 import threading
@@ -60,6 +61,36 @@ def test_group_geometry_fallback():
         want = sim.run("config1", "moti1", pol, TINY,
                        deadline_cycles=DEADLINE)
         assert got.summary() == want.summary(), pol.name
+
+
+def test_online_lern_infinite_period_degenerates_to_offline():
+    """An ``*-ol`` policy with an infinite retrain period must be bitwise
+    the offline policy through the batched sweep engine (the retrain hook
+    never fires, so nothing else may differ)."""
+    ol_inf = dataclasses.replace(policies.get("arp-al-ol"),
+                                 retrain_period=math.inf)
+    grp = sweep.simulate_group("config1", "moti1",
+                               [policies.get("arp-al"), ol_inf], TINY,
+                               deadline_cycles=DEADLINE)
+    off, on = grp
+    assert on.summary() == off.summary()
+    assert on.completion_cycles == off.completion_cycles
+    assert on.epochs == off.epochs
+    assert on.history == off.history
+
+
+def test_online_lern_retrains_end_to_end():
+    """A finite retrain period runs the refit hook through simulate_group
+    and still matches the sequential reference for the same policy."""
+    p = dataclasses.replace(TINY, max_epochs=30)
+    pol = dataclasses.replace(policies.get("arp-al-ol"), retrain_period=5)
+    grp = sweep.simulate_group("config1", "moti1",
+                               [pol, policies.get("fifo-nb")], p,
+                               deadline_cycles=DEADLINE)
+    want = sim.run("config1", "moti1", pol, p, deadline_cycles=DEADLINE)
+    assert grp[0].summary() == want.summary()
+    assert grp[0].epochs == want.epochs > 0
+    assert np.isfinite(grp[0].ipc_total)
 
 
 def test_map_points_order_cache_and_dedup(tmp_path, monkeypatch):
