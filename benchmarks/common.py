@@ -1,110 +1,129 @@
 """Shared helpers for the paper-figure benchmark suite.
 
-Figure modules build their full (config, mix, policy) cross-product as
-``SweepPoint``s and push it through the sweep engine once (``prefetch``);
-the per-row ``run_cached``/``mean_over_mixes`` reads that follow are then
-disk-cache hits.  ``--jobs N`` on benchmarks/run.py fans the prefetch over
-a process pool; ``--smoke`` shrinks the suite to a CI-sized footprint.
+Every figure module receives a frozen :class:`Suite` (preset footprint +
+params + jobs) and expresses its whole cross-product as one
+``repro.exp.ExperimentSpec`` pushed through ``exp.run`` — batched lanes,
+``--jobs`` process pool, disk-cache dedup — then derives its bars with
+ResultSet queries.  There are no mutable module globals anymore: the old
+``set_smoke()`` in-place ``BASE_PARAMS`` mutation became the registered
+``smoke`` params preset (``exp.PARAMS``), and the ``SWEEP_ROWS``
+accumulator became the row lists the figure modules return (run.py
+assembles them into the sweep.json v2 artifact).
 """
 from __future__ import annotations
 
+import dataclasses
 import time
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
 
-import numpy as np
+from repro import exp
+from repro.core import sim
 
-from repro.core import policies, sim, sweep
-from repro.core.dram import DDR3_1600
+QUICK_MIXES = ("moti1", "mix3")
+FULL_MIXES = tuple(f"mix{i}" for i in range(1, 13))
+SMOKE_MIXES = ("moti1",)
+QUICK_CONFIGS = ("config1", "config3", "config4", "config7", "config10")
+FULL_CONFIGS = tuple(f"config{i}" for i in range(1, 11))
+SMOKE_CONFIGS = ("config1",)
 
-QUICK_MIXES = ["moti1", "mix3"]
-FULL_MIXES = [f"mix{i}" for i in range(1, 13)]
-SMOKE_MIXES = ["moti1"]
-QUICK_CONFIGS = ["config1", "config3", "config4", "config7", "config10"]
-FULL_CONFIGS = [f"config{i}" for i in range(1, 11)]
-SMOKE_CONFIGS = ["config1"]
-
-BASE_PARAMS = sim.SimParams(n_inputs=3, max_epochs=1500)
-
-JOBS = 1          # process-pool width for prefetch (run.py --jobs)
-SMOKE = False     # CI-sized suite (run.py --smoke)
-
-# machine-readable record of every emitted row; run.py dumps it as the
-# sweep.json artifact (schema: hydra-sweep/v1)
-SWEEP_ROWS: List[Dict] = []
+# metric subset reported as a paper bar (SimResult.summary() keys)
+SUMMARY_METRICS = ("ipc", "dmr", "core_br", "accel_br")
 
 # perf-trajectory artifact of the lern-train benchmark (fig05_clustering)
 BENCH_LERN_PATH = "bench_lern.json"
 
-
-def set_jobs(n: int) -> None:
-    global JOBS
-    JOBS = max(1, int(n))
-
-
-def set_smoke() -> None:
-    """Shrink to a CI smoke footprint: one mix x one config, short trace,
-    few epochs.  BASE_PARAMS is mutated in place so figure modules that
-    imported the object directly observe the change."""
-    global SMOKE
-    SMOKE = True
-    BASE_PARAMS.n_inputs = 1
-    BASE_PARAMS.max_epochs = 60
-    BASE_PARAMS.subsample_target = 50_000
+_FOOTPRINT = {"smoke": (SMOKE_MIXES, SMOKE_CONFIGS),
+              "quick": (QUICK_MIXES, QUICK_CONFIGS),
+              "full": (FULL_MIXES, FULL_CONFIGS)}
 
 
-def mixes(quick: bool) -> List[str]:
-    if SMOKE:
-        return list(SMOKE_MIXES)
-    return QUICK_MIXES if quick else FULL_MIXES
+@dataclasses.dataclass(frozen=True)
+class Suite:
+    """One benchmark invocation's footprint, passed to every figure."""
+    preset: str                 # "smoke" | "quick" | "full"
+    params: sim.SimParams
+    mixes: Tuple[str, ...]
+    configs: Tuple[str, ...]
+    jobs: int = 1
+
+    @property
+    def quick(self) -> bool:
+        return self.preset != "full"
 
 
-def configs(quick: bool) -> List[str]:
-    if SMOKE:
-        return list(SMOKE_CONFIGS)
-    return QUICK_CONFIGS if quick else FULL_CONFIGS
+def suite(preset: str = "quick", jobs: int = 1) -> Suite:
+    """Resolve a preset name through the params registry into a Suite."""
+    if preset not in _FOOTPRINT:
+        raise ValueError(f"unknown preset {preset!r} "
+                         f"(choose from {sorted(_FOOTPRINT)})")
+    mixes, configs = _FOOTPRINT[preset]
+    return Suite(preset=preset, params=exp.PARAMS.get(preset),
+                 mixes=mixes, configs=configs, jobs=max(1, int(jobs)))
 
 
-def points(config: str, pols, quick: bool,
-           params: Optional[sim.SimParams] = None,
-           dram=DDR3_1600) -> List[sweep.SweepPoint]:
-    """SweepPoints for ``pols`` (names or Policy objects) over the mix set."""
-    params = params or BASE_PARAMS
-    out = []
-    for pol in pols:
-        if isinstance(pol, str):
-            pol = policies.get(pol)
-        out.extend(sweep.SweepPoint(config, m, pol, params, dram)
-                   for m in mixes(quick))
+# incremental artifact capture: every emitted row lands here the moment
+# it is printed, so a figure module that fails mid-way still contributes
+# its finished rows to sweep.json (run.py drains per module).  This is
+# bookkeeping of *produced output*, not sweep coordination — sweeps
+# themselves are stateless ExperimentSpecs.
+_EMITTED: List[Dict] = []
+
+
+def drain_rows() -> List[Dict]:
+    out = list(_EMITTED)
+    _EMITTED.clear()
     return out
 
 
-def prefetch(pts: List[sweep.SweepPoint]) -> None:
-    """Evaluate a figure's cross-product through the sweep engine (batched
-    lanes, JOBS workers); subsequent cached reads are instant."""
-    if pts:
-        sweep.map_points(pts, jobs=JOBS)
+def emit(name: str, t0: float, derived: Dict[str, float],
+         point=None) -> Dict:
+    """'name,us_per_call,derived' CSV row (harness contract) -> v2 row.
 
-
-def mean_over_mixes(config: str, policy_name: str, quick: bool = True,
-                    params: Optional[sim.SimParams] = None,
-                    dram=DDR3_1600, policy=None) -> Dict[str, float]:
-    """Mean (ipc, dmr, brs) over the mix set — one paper bar."""
-    pol = policy or policies.get(policy_name)
-    pts = [sweep.SweepPoint(config, m, pol, params or BASE_PARAMS, dram)
-           for m in mixes(quick)]
-    rows = [r.summary() for r in sweep.map_points(pts)]
-    return {k: float(np.mean([r[k] for r in rows])) for k in rows[0]}
-
-
-def emit(name: str, t0: float, derived: Dict[str, float]) -> str:
-    """'name,us_per_call,derived' CSV row (harness contract)."""
+    ``point`` embeds the producing cell's spec (a ``exp.Point``, a spec
+    dict, or None for analysis-only rows) so the sweep.json v2 artifact
+    row stands on its own."""
     us = (time.time() - t0) * 1e6
     dv = ";".join(f"{k}={v:.4g}" for k, v in derived.items())
-    row = f"{name},{us:.0f},{dv}"
-    print(row, flush=True)
-    SWEEP_ROWS.append({"name": name, "us_per_call": round(us),
-                       "derived": {k: float(v) for k, v in derived.items()}})
+    print(f"{name},{us:.0f},{dv}", flush=True)
+    row = {"name": name, "us_per_call": round(us),
+           "derived": {k: float(v) for k, v in derived.items()},
+           "point": point}
+    _EMITTED.append(row)
     return row
+
+
+def mean_bar(rs: exp.ResultSet, **filt) -> Dict[str, float]:
+    """Mean (ipc, dmr, brs) over the mix axis for one cell — one paper
+    bar.  ``filt`` must pin every non-mix key axis of ``rs``."""
+    row = rs.filter(**filt).mean_over("mix", metrics=SUMMARY_METRICS).one()
+    return {k: row[k] for k in SUMMARY_METRICS}
+
+
+def agg_point(rs: exp.ResultSet, **filt) -> Optional[Dict]:
+    """Embedded spec for an over-mixes aggregate row: the cell's point
+    with the mix coordinate widened to the contributing mix list."""
+    pts = [p for p in rs.filter(**filt).column("point") if p is not None]
+    if not pts:
+        return None
+    d = pts[0].spec_dict()
+    d["mix"] = sorted({p.mix for p in pts})
+    return d
+
+
+def policy_bar_rows(rs: exp.ResultSet, fig: str, policies,
+                    base: str = "fifo-nb", **filt) -> List[Dict]:
+    """The dominant figure shape: per-policy mean-over-mixes bars with an
+    IPC speedup against ``base``, one emitted row per policy."""
+    rows = []
+    base_ipc = mean_bar(rs, policy=base, **filt)["ipc"]
+    for pol in policies:
+        t0 = time.time()
+        name = pol if isinstance(pol, str) else exp.resolve_policy(pol).name
+        r = mean_bar(rs, policy=name, **filt)
+        rows.append(emit(f"{fig}/{name}", t0,
+                         {"speedup": speedup(r["ipc"], base_ipc), **r},
+                         point=agg_point(rs, policy=name, **filt)))
+    return rows
 
 
 def speedup(ipc: float, base_ipc: float) -> float:

@@ -1,29 +1,20 @@
 """Fig. 2 — the three key motivational challenges (paper §III)."""
-import time
+from repro import exp
+from .common import Suite, policy_bar_rows
 
-from .common import emit, mean_over_mixes
+GROUPS = {
+    "fig02a": ("fifo-nb", "fifo-cs", "arp-nb", "arp-cs"),
+    "fig02b": ("arp-cas", "arp-cs-as"),
+    "fig02c": ("arp-cs-as", "arp-cs-as-d"),
+}
 
 
-def run(quick: bool = True):
+def run(suite: Suite):
+    pols = sorted({p for g in GROUPS.values() for p in g} | {"fifo-nb"})
+    spec = exp.ExperimentSpec.grid(config="config1", mix=suite.mixes,
+                                   policy=pols, params=suite.params)
+    rs = exp.run(spec, jobs=suite.jobs)
     rows = []
-    cfg = "config1"
-    base = mean_over_mixes(cfg, "fifo-nb", quick)
-    # 2a: bandwidth allocation + core bypass
-    for pol in ("fifo-nb", "fifo-cs", "arp-nb", "arp-cs"):
-        t0 = time.time()
-        r = mean_over_mixes(cfg, pol, quick)
-        rows.append(emit(f"fig02a/{pol}", t0,
-                         {"speedup": r["ipc"] / base["ipc"], **r}))
-    # 2b: shared vs private reuse predictors
-    for pol in ("arp-cas", "arp-cs-as"):
-        t0 = time.time()
-        r = mean_over_mixes(cfg, pol, quick)
-        rows.append(emit(f"fig02b/{pol}", t0,
-                         {"speedup": r["ipc"] / base["ipc"], **r}))
-    # 2c: deadline awareness on top of reuse awareness
-    for pol in ("arp-cs-as", "arp-cs-as-d"):
-        t0 = time.time()
-        r = mean_over_mixes(cfg, pol, quick)
-        rows.append(emit(f"fig02c/{pol}", t0,
-                         {"speedup": r["ipc"] / base["ipc"], **r}))
+    for fig, group in GROUPS.items():
+        rows.extend(policy_bar_rows(rs, fig, group, config="config1"))
     return rows

@@ -8,12 +8,12 @@ import numpy as np
 
 from repro.core import lern, sim
 from repro.core.kmeans import pca_2d
-from .common import BASE_PARAMS, BENCH_LERN_PATH, configs, emit
+from .common import BENCH_LERN_PATH, Suite, emit
 
 
-def run(quick: bool = True):
+def run(suite: Suite):
     rows = []
-    model = sim.load_lern("config3", "full", BASE_PARAMS.subsample_target)
+    model = sim.load_lern("config3", "full", suite.params.subsample_target)
     for li, lc in enumerate(model.layers):
         if lc.features_ri.shape[0] < 16:
             continue
@@ -24,13 +24,13 @@ def run(quick: bool = True):
                          {"silhouette": lc.silhouette(),
                           "pca_spread": spread,
                           "n_points": lc.features_ri.shape[0]}))
-        if quick and li >= 6:
+        if suite.quick and li >= 6:
             break
-    rows.extend(bench_lern_train(quick))
+    rows.extend(bench_lern_train(suite))
     return rows
 
 
-def bench_lern_train(quick: bool = True):
+def bench_lern_train(suite: Suite):
     """Time one full LERN training pass per config, host vs device.
 
     ``host_s`` is the seed-era host pipeline (``lern.train_host_numpy``:
@@ -43,8 +43,8 @@ def bench_lern_train(quick: bool = True):
     hydra-bench-lern/v1)."""
     rows = []
     entries = []
-    for cfg in configs(quick):
-        tr = sim.load_trace(cfg, BASE_PARAMS.subsample_target)
+    for cfg in suite.configs:
+        tr = sim.load_trace(cfg, suite.params.subsample_target)
         t_host = _best_of(lambda: lern.train_host_numpy(tr), reps=2)
         t_aligned = _best_of(lambda: lern.train(tr), reps=2)
         t_dev = _best_of(lambda: lern.train_model_batched(tr), reps=2)

@@ -3,18 +3,18 @@ import time
 
 from repro.core import sim
 from repro.core.lern import cluster_distribution
-from .common import BASE_PARAMS, emit
+from .common import Suite, emit
 
 
-def run(quick: bool = True):
+def run(suite: Suite):
     rows = []
     t0 = time.time()
-    model = sim.load_lern("config3", "full", BASE_PARAMS.subsample_target)
-    tr = sim.load_trace("config3", BASE_PARAMS.subsample_target)
+    model = sim.load_lern("config3", "full", suite.params.subsample_target)
+    tr = sim.load_trace("config3", suite.params.subsample_target)
     dist = cluster_distribution(model, tr)
     ri_names = ["immediate", "near", "far", "remote", "noreuse"]
     rc_names = ["cold", "light", "moderate", "hot", "noreuse"]
-    n = dist["ri"].shape[0] if not quick else min(6, dist["ri"].shape[0])
+    n = dist["ri"].shape[0] if not suite.quick else min(6, dist["ri"].shape[0])
     for li in range(n):
         rows.append(emit(
             f"fig06/config3-layer{li}", t0,

@@ -1,31 +1,28 @@
 """Fig. 10a — all policies on Config-1; 10b — per-mix breakdown."""
 import time
 
-from repro.core import policies, sim
-from .common import (BASE_PARAMS, emit, mean_over_mixes, mixes, points,
-                     prefetch)
+from repro import exp
+from .common import SUMMARY_METRICS, Suite, emit, policy_bar_rows
 
 POLICIES_10A = ["fifo-nb", "fifo-cs", "arp-nb", "arp-cs", "arp-cas",
                 "arp-cs-as", "arp-as", "arp-as-d", "arp-al", "arp-al-d",
                 "arp-cs-as-d", "hydra"]
+POLICIES_10B = ("fifo-nb", "arp-cs-as-d", "hydra")
 
 
-def run(quick: bool = True):
-    rows = []
+def run(suite: Suite):
     # whole figure cross-product in one batched sweep (10b's policies are
     # a subset of 10a's, so its points are covered)
-    prefetch(points("config1", POLICIES_10A, quick))
-    base = mean_over_mixes("config1", "fifo-nb", quick)
-    for pol in POLICIES_10A:
-        t0 = time.time()
-        r = mean_over_mixes("config1", pol, quick)
-        rows.append(emit(f"fig10a/{pol}", t0,
-                         {"speedup": r["ipc"] / base["ipc"], **r}))
+    spec = exp.ExperimentSpec.grid(config="config1", mix=suite.mixes,
+                                   policy=POLICIES_10A, params=suite.params)
+    rs = exp.run(spec, jobs=suite.jobs)
+    rows = policy_bar_rows(rs, "fig10a", POLICIES_10A, config="config1")
     # 10b: HyDRA vs deadline-aware SHIP per mix
-    for mix in mixes(quick):
-        for pol in ("fifo-nb", "arp-cs-as-d", "hydra"):
+    for mix in suite.mixes:
+        for pol in POLICIES_10B:
             t0 = time.time()
-            r = sim.run_cached("config1", mix, policies.get(pol),
-                               BASE_PARAMS)
-            rows.append(emit(f"fig10b/{mix}/{pol}", t0, r.summary()))
+            r = rs.filter(mix=mix, policy=pol).one()
+            rows.append(emit(f"fig10b/{mix}/{pol}", t0,
+                             {k: r[k] for k in SUMMARY_METRICS},
+                             point=r["point"]))
     return rows

@@ -3,13 +3,17 @@ import time
 
 import numpy as np
 
-from repro.core import policies, sim
-from .common import BASE_PARAMS, emit
+from repro import exp
+from .common import Suite, emit
 
 
-def run(quick: bool = True):
+def run(suite: Suite):
     t0 = time.time()
-    r = sim.run_cached("config1", "mix4", policies.get("hydra"), BASE_PARAMS)
+    spec = exp.ExperimentSpec.grid(config="config1", mix="mix4",
+                                   policy="hydra", params=suite.params)
+    rs = exp.run(spec, jobs=suite.jobs)
+    row = rs.one()
+    r = row["result"]
     rate = np.array(r.history["accel_rate"])
     req = np.array(r.history["requirement"])
     active = rate > 0
@@ -20,4 +24,4 @@ def run(quick: bool = True):
         if active.any() else 0.0,
         "req_mean": float(req[req > 0].mean()) if (req > 0).any() else 0.0,
         "epochs_below_req": float(((rate < req) & active).mean()),
-    })]
+    }, point=row["point"])]

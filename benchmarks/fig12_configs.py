@@ -1,21 +1,17 @@
 """Fig. 12/13 — HyDRA vs baselines (incl. DPCP, FLASH) across configs."""
-import time
-
-from .common import configs, emit, mean_over_mixes, points, prefetch
+from repro import exp
+from .common import Suite, policy_bar_rows
 
 POLICIES = ["fifo-nb", "arp-nb", "arp-as-d", "arp-cs-as-d", "hydra",
             "arp-al-d", "dpcp", "flash"]
 
 
-def run(quick: bool = True):
+def run(suite: Suite):
+    spec = exp.ExperimentSpec.grid(config=suite.configs, mix=suite.mixes,
+                                   policy=POLICIES, params=suite.params)
+    rs = exp.run(spec, jobs=suite.jobs)
     rows = []
-    prefetch([pt for cfg in configs(quick)
-              for pt in points(cfg, POLICIES, quick)])
-    for cfg in configs(quick):
-        base = mean_over_mixes(cfg, "fifo-nb", quick)
-        for pol in POLICIES:
-            t0 = time.time()
-            r = mean_over_mixes(cfg, pol, quick)
-            rows.append(emit(f"fig12/{cfg}/{pol}", t0,
-                             {"speedup": r["ipc"] / base["ipc"], **r}))
+    for cfg in suite.configs:
+        rows.extend(policy_bar_rows(rs, f"fig12/{cfg}", POLICIES,
+                                    config=cfg))
     return rows

@@ -1,25 +1,29 @@
 """Fig. 14 — cache lines occupied by cores vs accelerator over time."""
-import dataclasses
 import time
 
 import numpy as np
 
-from repro.core import policies, sim
-from .common import BASE_PARAMS, emit
+from repro import exp
+from .common import Suite, emit
 
-P_OCC = dataclasses.replace(BASE_PARAMS, record_occupancy=True)
+POLICIES = ("fifo-nb", "arp-nb", "arp-cs-as-d", "hydra")
 
 
-def run(quick: bool = True):
+def run(suite: Suite):
+    spec = exp.ExperimentSpec.grid(config="config1", mix="mix3",
+                                   policy=POLICIES, params=suite.params,
+                                   record_occupancy=True)
+    rs = exp.run(spec, jobs=suite.jobs)
     rows = []
-    for pol in ("fifo-nb", "arp-nb", "arp-cs-as-d", "hydra"):
+    for pol in POLICIES:
         t0 = time.time()
-        r = sim.run_cached("config1", "mix3", policies.get(pol), P_OCC)
+        row = rs.filter(policy=pol).one()
+        r = row["result"]
         occ = np.array(r.occupancy) if r.occupancy else np.zeros((1, 2))
         rows.append(emit(f"fig14/{pol}", t0, {
             "core_lines_max": float(occ[:, 0].max()),
             "accel_lines_max": float(occ[:, 1].max()),
             "core_lines_mean": float(occ[:, 0].mean()),
             "accel_lines_mean": float(occ[:, 1].mean()),
-            "ipc": r.ipc_total, "dmr": r.dmr}))
+            "ipc": r.ipc_total, "dmr": r.dmr}, point=row["point"]))
     return rows

@@ -1,20 +1,20 @@
 """Fig. 15 — probabilistic (AFRp) and threshold (ASTht-D) baselines."""
-import time
-
-from .common import emit, mean_over_mixes
+from repro import exp
+from .common import Suite, policy_bar_rows
 
 POLICIES = ["arp-cs-afr0.6", "arp-cs-afr0.8", "arp-cs-asth0.3-d",
             "arp-cs-asth0.6-d", "hydra"]
 
 
-def run(quick: bool = True):
+def run(suite: Suite):
+    configs = (["config1", "config7"] if suite.quick
+               else ["config1", "config3", "config7", "config10"])
+    spec = exp.ExperimentSpec.grid(config=configs, mix=suite.mixes,
+                                   policy=POLICIES + ["fifo-nb"],
+                                   params=suite.params)
+    rs = exp.run(spec, jobs=suite.jobs)
     rows = []
-    for cfg in (["config1", "config7"] if quick
-                else ["config1", "config3", "config7", "config10"]):
-        base = mean_over_mixes(cfg, "fifo-nb", quick)
-        for pol in POLICIES:
-            t0 = time.time()
-            r = mean_over_mixes(cfg, pol, quick)
-            rows.append(emit(f"fig15/{cfg}/{pol}", t0,
-                             {"speedup": r["ipc"] / base["ipc"], **r}))
+    for cfg in configs:
+        rows.extend(policy_bar_rows(rs, f"fig15/{cfg}", POLICIES,
+                                    config=cfg))
     return rows

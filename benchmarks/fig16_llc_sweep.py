@@ -1,30 +1,25 @@
 """Fig. 16 — LLC capacity sweep (sizes are paper-nominal; the simulator
-runs the HW_SCALE=8 scaled equivalents)."""
-import dataclasses
-import time
-
+runs the HW_SCALE=8 scaled equivalents).  The capacity axis is a named
+SimParams-override axis of one spec — no per-size params plumbing."""
+from repro import exp
 from repro.core.llc import HW_SCALE
-from .common import BASE_PARAMS, emit, mean_over_mixes, points, prefetch
+from .common import Suite, policy_bar_rows
 
 SIZES_MB = [1, 4, 8, 16]
 POLICIES = ("fifo-nb", "arp-cs-as-d", "hydra")
 
 
-def run(quick: bool = True):
+def run(suite: Suite):
+    configs = ["config1"] if suite.quick else ["config1", "config3"]
+    spec = exp.ExperimentSpec.grid(
+        config=configs, mix=suite.mixes, policy=list(POLICIES),
+        params=suite.params,
+        llc_size_bytes=[mb * 1024 * 1024 // HW_SCALE for mb in SIZES_MB])
+    rs = exp.run(spec, jobs=suite.jobs)
     rows = []
-    # one grid drives both the batched prefetch and the read loop, so the
-    # cache keys can never drift apart
-    grid = [(cfg, mb, dataclasses.replace(
-                BASE_PARAMS, llc_size_bytes=mb * 1024 * 1024 // HW_SCALE))
-            for cfg in (["config1"] if quick else ["config1", "config3"])
-            for mb in SIZES_MB]
-    prefetch([pt for cfg, _, params in grid
-              for pt in points(cfg, POLICIES, quick, params)])
-    for cfg, mb, params in grid:
-        base = mean_over_mixes(cfg, "fifo-nb", quick, params)
-        for pol in POLICIES:
-            t0 = time.time()
-            r = mean_over_mixes(cfg, pol, quick, params)
-            rows.append(emit(f"fig16/{cfg}/{mb}MB/{pol}", t0,
-                             {"speedup": r["ipc"] / base["ipc"], **r}))
+    for cfg in configs:
+        for mb in SIZES_MB:
+            rows.extend(policy_bar_rows(
+                rs, f"fig16/{cfg}/{mb}MB", POLICIES, config=cfg,
+                llc_size_bytes=mb * 1024 * 1024 // HW_SCALE))
     return rows

@@ -1,18 +1,18 @@
 """Fig. 17 — DDR3 / DDR4 / LPDDR5 memory models (+ HyDRA-v1 tuning)."""
-import time
+from repro import exp
+from .common import Suite, policy_bar_rows
 
-from repro.core.dram import MODELS
-from .common import emit, mean_over_mixes
+POLICIES = ("fifo-nb", "arp-cs-as-d", "hydra", "hydra-v1")
 
 
-def run(quick: bool = True):
+def run(suite: Suite):
+    spec = exp.ExperimentSpec.grid(config="config1", mix=suite.mixes,
+                                   policy=list(POLICIES),
+                                   params=suite.params,
+                                   dram=exp.DRAM.names())
+    rs = exp.run(spec, jobs=suite.jobs)
     rows = []
-    for dname, dram in MODELS.items():
-        base = mean_over_mixes("config1", "fifo-nb", quick, dram=dram)
-        pols = ("fifo-nb", "arp-cs-as-d", "hydra", "hydra-v1")
-        for pol in pols:
-            t0 = time.time()
-            r = mean_over_mixes("config1", pol, quick, dram=dram)
-            rows.append(emit(f"fig17/{dname}/{pol}", t0,
-                             {"speedup": r["ipc"] / base["ipc"], **r}))
+    for dname in exp.DRAM.names():
+        rows.extend(policy_bar_rows(rs, f"fig17/{dname}", POLICIES,
+                                    config="config1", dram=dname))
     return rows

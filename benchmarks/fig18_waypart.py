@@ -1,30 +1,15 @@
 """Fig. 18 — 2-way cache partitioning for the accelerator."""
-import time
+from repro import exp
+from .common import Suite, policy_bar_rows
 
-from repro.core import policies
-from .common import emit, mean_over_mixes, points, prefetch
-
-WP = (0xFFFC, 0x0003)  # cores: ways 2-15, accel: ways 0-1
+WP = exp.way_partition(0xFFFC, 0x0003)  # cores: ways 2-15, accel: ways 0-1
 
 
-def run(quick: bool = True):
-    rows = []
-    # shared variant list: prefetch and read loop see identical policies
-    variants = [(name, wp) for name in ("fifo-nb", "hydra")
-                for wp in (False, True)]
-
-    def variant_policy(name, wp):
-        pol = policies.get(name)
-        return policies.with_way_partition(pol, *WP) if wp else pol
-
-    prefetch(points("config1", [variant_policy(n, w) for n, w in variants],
-                    quick))
-    base = mean_over_mixes("config1", "fifo-nb", quick)
-    for name, wp in variants:
-        t0 = time.time()
-        r = mean_over_mixes("config1", name, quick,
-                            policy=variant_policy(name, wp))
-        tag = f"{name}-wp" if wp else name
-        rows.append(emit(f"fig18/{tag}", t0,
-                         {"speedup": r["ipc"] / base["ipc"], **r}))
-    return rows
+def run(suite: Suite):
+    # spec-level transform: each base policy crossed with (plain, -wp)
+    variants = [v for name in ("fifo-nb", "hydra")
+                for v in (name, (name, WP))]
+    spec = exp.ExperimentSpec.grid(config="config1", mix=suite.mixes,
+                                   policy=variants, params=suite.params)
+    rs = exp.run(spec, jobs=suite.jobs)
+    return policy_bar_rows(rs, "fig18", variants, config="config1")

@@ -1,18 +1,13 @@
 """Fig. 19 — hardware-optimized L-RPT sizes/hashes (LOptv1..v4, §VI-J)."""
-import time
-
-from repro.core import policies
+from repro import exp
 from repro.core.lrpt import VARIANTS
-from .common import emit, mean_over_mixes
+from .common import Suite, policy_bar_rows
 
 
-def run(quick: bool = True):
-    rows = []
-    base = mean_over_mixes("config1", "fifo-nb", quick)
-    for variant in VARIANTS:
-        pol = policies.with_lrpt(policies.get("hydra"), variant)
-        t0 = time.time()
-        r = mean_over_mixes("config1", "hydra", quick, policy=pol)
-        rows.append(emit(f"fig19/{variant}", t0,
-                         {"speedup": r["ipc"] / base["ipc"], **r}))
-    return rows
+def run(suite: Suite):
+    variants = [("hydra", exp.lrpt(v)) for v in VARIANTS]
+    spec = exp.ExperimentSpec.grid(config="config1", mix=suite.mixes,
+                                   policy=["fifo-nb"] + variants,
+                                   params=suite.params)
+    rs = exp.run(spec, jobs=suite.jobs)
+    return policy_bar_rows(rs, "fig19", variants, config="config1")

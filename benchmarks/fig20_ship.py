@@ -1,15 +1,13 @@
 """Fig. 20 — SHIP predictor-table size study (§VI-K)."""
-import time
+from repro import exp
+from .common import Suite, policy_bar_rows
 
-from .common import emit, mean_over_mixes
+POLICIES = ("arp-cs-as", "arp-cs-as-large", "hydra")
 
 
-def run(quick: bool = True):
-    rows = []
-    base = mean_over_mixes("config1", "fifo-nb", quick)
-    for pol in ("arp-cs-as", "arp-cs-as-large", "hydra"):
-        t0 = time.time()
-        r = mean_over_mixes("config1", pol, quick)
-        rows.append(emit(f"fig20/{pol}", t0,
-                         {"speedup": r["ipc"] / base["ipc"], **r}))
-    return rows
+def run(suite: Suite):
+    spec = exp.ExperimentSpec.grid(config="config1", mix=suite.mixes,
+                                   policy=list(POLICIES) + ["fifo-nb"],
+                                   params=suite.params)
+    rs = exp.run(spec, jobs=suite.jobs)
+    return policy_bar_rows(rs, "fig20", POLICIES, config="config1")

@@ -60,7 +60,7 @@ def table(tag: str = "singlepod", directory: str = DRYRUN_DIR):
     return rows
 
 
-def run(quick: bool = True):
+def run(suite):
     out = []
     variants = [("baseline", DRYRUN_DIR)]
     if os.path.isdir(DRYRUN_OPT_DIR):

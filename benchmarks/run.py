@@ -1,13 +1,18 @@
 """Benchmark harness — one module per paper table/figure (deliverable d).
 
-    PYTHONPATH=src python -m benchmarks.run [--full] [--only fig12,...]
-                                            [--jobs N] [--smoke]
+    PYTHONPATH=src python -m benchmarks.run [--preset smoke|quick|full]
+                                            [--only fig12,...] [--jobs N]
                                             [--out sweep.json]
 
-Prints ``name,us_per_call,derived`` CSV rows and writes every row to a
-machine-readable ``sweep.json`` artifact (schema hydra-sweep/v1) for CI
-and bench-trajectory tracking.  Results are disk-cached (.cache/sim);
-``--jobs N`` fans uncached sweep points over N worker processes.
+A thin CLI over the declarative experiment API: ``--preset`` resolves a
+registered params preset + mix/config footprint into a frozen
+``common.Suite`` that every figure module receives (no module-global
+mutation), each module expresses its sweep as an ``ExperimentSpec``, and
+the returned rows are assembled into the machine-readable **sweep.json
+v2** artifact (``hydra-sweep/v2``: every row embeds its point spec;
+validate with ``python -m repro.exp.schema sweep.json``).  Results are
+disk-cached (.cache/sim); ``--jobs N`` fans uncached sweep points over N
+worker processes.
 
 ``fig05_clustering`` additionally times host-numpy vs device-batched LERN
 training (the ``lern_train/*`` rows) and writes ``bench_lern.json``
@@ -16,10 +21,8 @@ device-resident training pipeline.
 """
 import argparse
 import importlib
-import json
 import sys
 import time
-
 
 MODULES = [
     "fig02_motivation", "fig05_clustering", "fig06_distribution",
@@ -32,44 +35,50 @@ MODULES = [
 
 def main() -> None:
     ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", default="quick",
+                    choices=["smoke", "quick", "full"],
+                    help="registered suite footprint: smoke = CI-sized "
+                         "(1 mix x 1 config, tiny params), quick = 2 mixes "
+                         "x 5 configs, full = the paper's 12 x 10")
     ap.add_argument("--full", action="store_true",
-                    help="all 12 mixes x 10 configs (slow)")
+                    help="deprecated alias for --preset full")
+    ap.add_argument("--smoke", action="store_true",
+                    help="deprecated alias for --preset smoke")
     ap.add_argument("--only", default=None,
                     help="comma-separated module subset")
     ap.add_argument("--jobs", type=int, default=1,
                     help="worker processes for uncached sweep points")
-    ap.add_argument("--smoke", action="store_true",
-                    help="CI-sized footprint (1 mix x 1 config, tiny params)")
     ap.add_argument("--out", default="sweep.json",
                     help="machine-readable results artifact path")
     args = ap.parse_args()
+    preset = ("full" if args.full else
+              "smoke" if args.smoke else args.preset)
 
+    from repro.exp import ResultSet
     from . import common
-    common.set_jobs(args.jobs)
-    if args.smoke:
-        common.set_smoke()
+    suite = common.suite(preset=preset, jobs=args.jobs)
 
     mods = args.only.split(",") if args.only else MODULES
     print("name,us_per_call,derived")
     t0 = time.time()
     failures = 0
+    rows = []
     for name in mods:
         try:
             mod = importlib.import_module(f"benchmarks.{name}")
-            mod.run(quick=not args.full)
+            mod.run(suite)
         except Exception as e:  # keep the suite going; report at the end
             failures += 1
             print(f"{name},0,ERROR={type(e).__name__}:{e}", flush=True)
+        finally:
+            # rows emitted before a failure still reach the artifact
+            rows.extend(common.drain_rows())
     elapsed = time.time() - t0
-    with open(args.out, "w") as f:
-        json.dump({"schema": "hydra-sweep/v1",
-                   "modules": mods,
-                   "full": args.full, "smoke": args.smoke,
-                   "jobs": args.jobs,
-                   "elapsed_s": round(elapsed, 3),
-                   "failures": failures,
-                   "rows": common.SWEEP_ROWS}, f, indent=1)
-    print(f"# wrote {len(common.SWEEP_ROWS)} rows to {args.out}", flush=True)
+    rs = ResultSet.from_records(rows)
+    rs.to_sweep_json(args.out, preset=preset, modules=mods,
+                     jobs=suite.jobs, elapsed_s=round(elapsed, 3),
+                     failures=failures)
+    print(f"# wrote {len(rows)} rows to {args.out}", flush=True)
     print(f"# total {elapsed:.0f}s, {failures} module failures", flush=True)
     sys.exit(1 if failures else 0)
 

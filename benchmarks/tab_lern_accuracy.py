@@ -3,15 +3,15 @@ import time
 
 from repro.core import sim
 from repro.core.lern import prediction_accuracy
-from .common import BASE_PARAMS, configs, emit
+from .common import Suite, emit
 
 
-def run(quick: bool = True):
+def run(suite: Suite):
     rows = []
-    for cfg in configs(quick):
+    for cfg in suite.configs:
         t0 = time.time()
-        model = sim.load_lern(cfg, "full", BASE_PARAMS.subsample_target)
-        tr = sim.load_trace(cfg, BASE_PARAMS.subsample_target)
+        model = sim.load_lern(cfg, "full", suite.params.subsample_target)
+        tr = sim.load_trace(cfg, suite.params.subsample_target)
         acc = prediction_accuracy(model, tr)
         rows.append(emit(f"lern_accuracy/{cfg}", t0, {"accuracy": acc}))
     return rows

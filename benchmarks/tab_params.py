@@ -1,29 +1,42 @@
-"""§VI-L — parameter-selection sensitivity (margins, MR_Th, beta)."""
-import dataclasses
+"""§VI-L — parameter-selection sensitivity (margins, MR_Th, beta).
+
+Each sensitivity axis is its own spec whose policy axis is the HyDRA
+policy under spec-level APM overrides; the three specs run as one
+batched submission (``exp.run`` accepts a list of specs)."""
 import time
 
-from repro.core import policies
-from repro.core.apm import APMParams
-from .common import emit, mean_over_mixes
+from repro import exp
+from .common import Suite, agg_point, emit, mean_bar
+
+SWEEPS_QUICK = {
+    "margin_high": [0.01, 0.05, 0.07],
+    "mr_threshold": [0.1, 0.3, 0.7],
+    "beta": [0.01, 0.05, 0.1],
+}
+SWEEPS_FULL = {
+    "margin_high": [0.01, 0.02, 0.03, 0.04, 0.05, 0.07],
+    "mr_threshold": [0.1, 0.2, 0.3, 0.5, 0.7, 0.9],
+    "beta": [0.01, 0.02, 0.03, 0.05, 0.07, 0.1],
+}
 
 
-def run(quick: bool = True):
+def run(suite: Suite):
+    sweeps = SWEEPS_QUICK if suite.quick else SWEEPS_FULL
+    specs = [exp.ExperimentSpec.grid(
+                 config="config3", mix=suite.mixes,
+                 policy=[("hydra", exp.with_apm(**{field: v}))
+                         for v in values],
+                 params=suite.params)
+             for field, values in sweeps.items()]
+    rs = exp.run(specs, jobs=suite.jobs)
     rows = []
-    hydra = policies.get("hydra")
-    sweeps = {
-        "margin_high": [0.01, 0.05, 0.07] if quick else
-                       [0.01, 0.02, 0.03, 0.04, 0.05, 0.07],
-        "mr_threshold": [0.1, 0.3, 0.7] if quick else
-                        [0.1, 0.2, 0.3, 0.5, 0.7, 0.9],
-        "beta": [0.01, 0.05, 0.1] if quick else
-                [0.01, 0.02, 0.03, 0.05, 0.07, 0.1],
-    }
     for field, values in sweeps.items():
         for v in values:
-            pol = dataclasses.replace(
-                hydra, name=f"hydra-{field}{v}",
-                apm=dataclasses.replace(APMParams(), **{field: v}))
+            name = exp.resolve_policy(("hydra",
+                                       exp.with_apm(**{field: v}))).name
             t0 = time.time()
-            r = mean_over_mixes("config3", "hydra", quick, policy=pol)
-            rows.append(emit(f"params/{field}={v}", t0, r))
+            r = mean_bar(rs, policy=name, config="config3")
+            rows.append(emit(f"params/{field}={v}", t0, r,
+                             point=agg_point(rs, policy=name,
+                                             config="config3")))
     return rows

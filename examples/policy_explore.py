@@ -4,13 +4,17 @@ cache-policy zoo on one accelerator config + workload mix and print the
 
     PYTHONPATH=src python examples/policy_explore.py --config config3 \
         --mix moti2 --jobs 4
+
+One declarative spec, one batched ``exp.run``; pass ``--policies`` to
+sweep any registered subset (``repro.exp.POLICIES.names()`` lists them).
 """
 import argparse
+import dataclasses
 import sys
 
 sys.path.insert(0, "src")
 
-from repro.core import policies, sim, sweep
+from repro import exp
 
 POLS = ["fifo-nb", "fifo-cs", "arp-nb", "arp-cs", "arp-cas", "arp-cs-as",
         "arp-as-d", "arp-al", "arp-al-d", "arp-cs-as-d", "hydra",
@@ -19,26 +23,31 @@ POLS = ["fifo-nb", "fifo-cs", "arp-nb", "arp-cs", "arp-cas", "arp-cs-as",
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--config", default="config7")
+    ap.add_argument("--config", default="config7",
+                    choices=exp.WORKLOADS.names())
     ap.add_argument("--mix", default="moti2")
     ap.add_argument("--inputs", type=int, default=3)
+    ap.add_argument("--policies", default=None,
+                    help="comma-separated policy names (default: the zoo)")
     ap.add_argument("--jobs", type=int, default=1,
                     help="worker processes for uncached points")
     args = ap.parse_args()
-    params = sim.SimParams(n_inputs=args.inputs)
-    # evaluate the whole zoo through the batched sweep engine up front
-    pts = [sweep.SweepPoint(args.config, args.mix, policies.get(p), params)
-           for p in POLS]
-    results = sweep.map_points(pts, jobs=args.jobs)
+    pols = args.policies.split(",") if args.policies else POLS
+    params = dataclasses.replace(exp.PARAMS.get("default"),
+                                 n_inputs=args.inputs)
+    spec = exp.ExperimentSpec.grid(config=args.config, mix=args.mix,
+                                   policy=pols, params=params)
+    rs = exp.run(spec, jobs=args.jobs)
     print("policy,ipc_speedup,dmr,core_bypass_rate,accel_bypass_rate,"
           "core_hit_rate,accel_hit_rate")
     base = None
-    for pol, r in zip(POLS, results):
+    for pol in pols:
+        r = rs.filter(policy=pol).one()
         if base is None:
-            base = r.ipc_total
-        print(f"{pol},{r.ipc_total / base:.4f},{r.dmr:.3f},{r.core_br:.3f},"
-              f"{r.accel_br:.3f},{r.core_hit_rate:.3f},"
-              f"{r.accel_hit_rate:.3f}")
+            base = r["ipc"]
+        print(f"{pol},{r['ipc'] / base:.4f},{r['dmr']:.3f},"
+              f"{r['core_br']:.3f},{r['accel_br']:.3f},"
+              f"{r['core_hit_rate']:.3f},{r['accel_hit_rate']:.3f}")
 
 
 if __name__ == "__main__":

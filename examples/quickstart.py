@@ -6,6 +6,10 @@ with checkpointing + auto-resume (deliverable b driver).
 
 Re-running resumes from the latest checkpoint automatically; Ctrl-C
 checkpoints gracefully (preemption handling).
+
+(For the paper's cache-policy experiments, see the declarative
+experiment API — ``repro.exp`` — driven from examples/policy_explore.py
+and benchmarks/run.py.)
 """
 import argparse
 import dataclasses

@@ -1,7 +1,10 @@
 """Serving with the HyDRA KV-residency scheduler (DESIGN.md §2c).
 
-Runs a real (tiny) model through the batched serving engine twice — with
-the deadline+reuse-aware scheduler and with keep-everything — and compares
+Runs a real (tiny) model through the batched serving engine three times —
+with the deadline+reuse-aware scheduler, with an *online* variant that
+refits its session-reuse clusters every ``retrain_period`` scheduler
+epochs from the sessions it actually observed (the serve-side analogue of
+the ``*-ol`` policies), and with keep-everything — and compares
 throughput / deadline misses / HBM keeps, the serving analogue of the
 paper's (IPC, DMR) tradeoff.
 """
@@ -43,6 +46,11 @@ def main():
             ("hydra-kv", HydraKVScheduler(token_budget=2048,
                                           deadline_tokens=128,
                                           profile=profile)),
+            ("hydra-kv-ol", HydraKVScheduler(token_budget=2048,
+                                             deadline_tokens=128,
+                                             profile=profile,
+                                             retrain_period=2,
+                                             min_refit_sessions=4)),
             ("keep-all", None)):
         eng = ServeEngine(cfg, params, slots=3, s_max=96, scheduler=sched)
         out = eng.run(make_requests(), max_steps=800)

@@ -52,8 +52,14 @@ if os.environ.get("REPRO_JIT_CACHE", "1") == "1":
     jax.config.update("jax_persistent_cache_min_compile_time_secs", 0.5)
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(frozen=True)
 class SimParams:
+    """Simulation knobs for one evaluation point.
+
+    Frozen: presets (exp.PARAMS — ``default``/``quick``/``full``/``smoke``)
+    are derived with ``dataclasses.replace``, never by in-place mutation,
+    so the same object can safely be shared across spec points, hashed
+    into cache keys, and held by concurrent sweep workers."""
     epoch_cycles: int = 50_000
     llc_rate: float = 0.30          # LLC controller accesses / cycle
     llc_hit_lat: float = 12.0       # tag+data
@@ -127,8 +133,10 @@ def _family_k(config: str, subsample_target: int) -> int:
         with open(path, "rb") as f:
             return pickle.load(f)
     worst = 0
+    # drift variants are excluded: they would inflate the family worst-case
+    # (period x the base accesses) and silently re-key every cached trace.
     for name, c in CONFIGS.items():
-        if c.model == model:
+        if c.model == model and c.drift is None:
             worst = max(worst, generate_trace(c).num_accesses)
     k = max(1, -(-worst // subsample_target))
     _atomic_dump(k, path)
@@ -671,8 +679,22 @@ def run(config: str, mix: str, policy: Policy,
         dram: DramModel = DDR3_1600,
         deadline_cycles: Optional[float] = None,
         core_traffic: bool = True) -> SimResult:
-    """Sequential single-point reference: load artifacts, drive one Lane."""
+    """Single-point evaluation.
+
+    With default knobs this is a shim over the declarative experiment API
+    (``repro.exp``): the point goes through a one-point spec and the
+    lane-batched group engine — bitwise-identical to the sequential loop
+    (tests/test_sweep.py pins the engines against each other).  Explicit
+    ``deadline_cycles``/``core_traffic`` keep the direct sequential path:
+    those knobs are engine-internal (calibration, bitwise-reference
+    tests), not part of a spec cell.
+    """
     p = params or SimParams()
+    if deadline_cycles is None and core_traffic:
+        from repro.exp import runner as _exp  # deferred: exp layers above sim
+        from repro.exp.spec import Point
+        return _exp.run_points([Point(config, mix, policy, p, dram)],
+                               cache=False)[0]
     art = load_artifacts(config, mix, p, core_traffic)
     if deadline_cycles is None:
         deadline_cycles = calibrated_deadline(config, p, dram)
@@ -718,8 +740,19 @@ def result_cache_path(config: str, mix: str, policy: Policy,
 def run_cached(config: str, mix: str, policy: Policy,
                params: Optional[SimParams] = None,
                dram: DramModel = DDR3_1600, **kw) -> SimResult:
-    """Disk-cached wrapper keyed by all inputs (benchmarks call this)."""
+    """Disk-cached wrapper keyed by all inputs.
+
+    Legacy entry point, kept as a shim: with no extra knobs it delegates
+    through a one-point ``repro.exp`` spec into ``sweep.map_points``,
+    whose dedup layer reads/writes the *same* cache path
+    (``result_cache_path``) this function always used — keys and results
+    are bitwise-unchanged (tests/test_exp.py).  Prefer ``exp.run`` for
+    anything bigger than one point."""
     p = params or SimParams()
+    if not kw:
+        from repro.exp import runner as _exp  # deferred: exp layers above sim
+        from repro.exp.spec import Point
+        return _exp.run_points([Point(config, mix, policy, p, dram)])[0]
     path = result_cache_path(config, mix, policy, p, dram, **kw)
     if os.path.exists(path):
         with open(path, "rb") as f:

@@ -173,12 +173,19 @@ def _params_key(p: sim.SimParams, dram: DramModel) -> str:
                       sort_keys=True, default=str)
 
 
-def _worker_init(cache_dir: str) -> None:
+def _worker_init(cache_dir: str, extra_configs: Optional[Dict] = None) -> None:
     # sim is already imported (unpickling this initializer imports sweep),
     # so its import-time XLA-cache config came from the inherited env;
     # propagate a programmatic CACHE_DIR override (e.g. test monkeypatch)
     # to the artifact caches here, and to the persistent XLA cache too.
     sim.CACHE_DIR = cache_dir
+    # spawn re-imports workloads.py fresh, so configs registered at
+    # runtime in the parent (phase-drift variants, ad-hoc AccelConfigs)
+    # must be re-registered or CONFIGS[config] raises in every worker
+    if extra_configs:
+        from .workloads import CONFIGS
+        for name, cfg in extra_configs.items():
+            CONFIGS.setdefault(name, cfg)
     if os.environ.get("REPRO_JIT_CACHE", "1") == "1":
         import jax
         jax.config.update("jax_compilation_cache_dir",
@@ -246,11 +253,16 @@ def map_points(points: Sequence[SweepPoint], jobs: int = 1,
             task_results = [_group_task(t) for t in tasks]
         else:
             import multiprocessing as mp
+            from .workloads import CONFIGS
             ctx = mp.get_context("spawn")
             workers = min(jobs, len(tasks))
+            # ship each task's config: runtime registrations (drift
+            # variants, ad-hoc AccelConfigs) don't survive the spawn
+            # re-import; setdefault makes statically-known ones a no-op
+            extra = {t[0]: CONFIGS[t[0]] for t in tasks}
             with ProcessPoolExecutor(max_workers=workers, mp_context=ctx,
                                      initializer=_worker_init,
-                                     initargs=(sim.CACHE_DIR,)) as ex:
+                                     initargs=(sim.CACHE_DIR, extra)) as ex:
                 # phase 1: deadline calibration, one task per unique
                 # (config, params, dram) — otherwise every group of a
                 # config would redundantly simulate the standalone run

@@ -27,7 +27,7 @@ from typing import Dict, List
 
 import numpy as np
 
-from .workloads import AccelConfig, GemmLayer
+from .workloads import AccelConfig, GemmLayer, PhaseDrift
 
 LINE_BYTES = 64
 ELEM_BYTES = 4
@@ -88,11 +88,39 @@ def _emit_tile(out, region_base, row0, col0, rows, cols, row_stride,
     return lines.shape[0]
 
 
-def generate_trace(cfg: AccelConfig, clock_ratio: float = 1.0) -> Trace:
+def _drift_schedule(n_layers: int, drift: PhaseDrift) -> List[tuple]:
+    """[(layer_idx, tile_scale), ...] for ``drift.period`` replicas.
+
+    Replica 0 is the exact base schedule (order preserved, scale 1.0);
+    every later replica accumulates ``reorder * n_layers`` adjacent swaps
+    on top of the previous replica's order and draws a fresh tile-K
+    jitter per layer — the drift compounds across "inputs"."""
+    rng = np.random.default_rng(drift.seed)
+    order = list(range(n_layers))
+    sched: List[tuple] = []
+    for r in range(max(1, int(drift.period))):
+        if r > 0:
+            for _ in range(int(round(drift.reorder * n_layers))):
+                i = int(rng.integers(0, max(n_layers - 1, 1)))
+                order[i], order[i + 1] = order[i + 1], order[i]
+        for li in order:
+            scale = (1.0 + drift.tile_jitter * float(rng.uniform(-1.0, 1.0))
+                     if r > 0 and drift.tile_jitter > 0 else 1.0)
+            sched.append((li, scale))
+    return sched
+
+
+def generate_trace(cfg: AccelConfig, clock_ratio: float = 1.0,
+                   drift: PhaseDrift = None) -> Trace:
     """Generate the LLC-visible trace for one input set on ``cfg``.
 
     clock_ratio: accelerator-to-system clock ratio for cycle stamps.
+    drift: phase-drift mode (defaults to ``cfg.drift``) — the trace covers
+    ``drift.period`` replicas of the workload whose layer order and tiling
+    drift replica-to-replica; layer ids stay base-schedule indices so
+    per-layer L-RPT tables keep their meaning.
     """
+    drift = drift if drift is not None else cfg.drift
     layers = [l.as_gemm() for l in cfg.layers()]
     out: Dict[str, list] = {"line": [], "write": [], "layer": []}
     tile_meta: List[tuple] = []  # (n_lines_in_tile, compute_cycles_of_tile)
@@ -113,8 +141,13 @@ def generate_trace(cfg: AccelConfig, clock_ratio: float = 1.0) -> Trace:
         elem_cursor += g.m * g.n
 
     pe = cfg.pe_rows * cfg.pe_cols
-    for li, g in enumerate(layers):
+    schedule = (_drift_schedule(len(layers), drift) if drift is not None
+                else [(li, 1.0) for li in range(len(layers))])
+    for li, tile_scale in schedule:
+        g = layers[li]
         tm, tk, tn = _tile_sizes(g, cfg)
+        if tile_scale != 1.0:
+            tk = max(1, min(g.k, int(round(tk * tile_scale))))
         n_m = -(-g.m // tm)
         n_k = -(-g.k // tk)
         n_n = -(-g.n // tn)

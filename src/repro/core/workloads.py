@@ -11,7 +11,7 @@ recorded here and in DESIGN.md §6.
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Sequence
+from typing import List, Optional, Sequence
 
 # Spatial scale-down factor applied to ifmap H/W of the real networks.
 SIM_SCALE = 8
@@ -162,6 +162,22 @@ MODELS = {
 
 
 @dataclasses.dataclass(frozen=True)
+class PhaseDrift:
+    """Seed-controlled phase drift across inputs (ROADMAP online-LERN study).
+
+    The trace generator emits ``period`` replicas of the layer schedule;
+    replica 0 is the base workload, each later replica accumulates
+    ``reorder``-many adjacent layer swaps and jitters its streamed tile-K
+    dimension by up to ``tile_jitter`` — so the reuse-interval structure an
+    offline-trained LERN learned from replica 0 goes progressively stale.
+    """
+    period: int = 4            # replicas ("inputs") in one generated trace
+    reorder: float = 0.25      # adjacent layer swaps per replica, x n_layers
+    tile_jitter: float = 0.25  # max fractional jitter of the tile K dim
+    seed: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
 class AccelConfig:
     """One row of Table IV."""
     name: str
@@ -172,6 +188,7 @@ class AccelConfig:
     sram_ofmap_kb: int
     sram_filter_kb: int
     dataflow: str  # "OS" | "WS" | "IS"
+    drift: Optional[PhaseDrift] = None
 
     def layers(self):
         return MODELS[self.model]()
@@ -190,6 +207,26 @@ CONFIGS = {
     "config9": AccelConfig("config9", "faster_rcnn", 256, 256, 6144, 6144, 6144, "OS"),
     "config10": AccelConfig("config10", "alphagozero", 64, 64, 64, 64, 64, "OS"),
 }
+
+
+def with_drift(base, drift: PhaseDrift, name: Optional[str] = None) -> str:
+    """Register (idempotently) a phase-drifting variant of ``base`` and
+    return its config name — usable anywhere a config name is (the exp
+    spec's ``config`` axis, ``sim.load_trace``, the workload registry).
+
+    The variant shares the base family's trace-sampling ratio (``drift``
+    configs are excluded from ``sim._family_k``) so results stay
+    comparable against the non-drifting base."""
+    cfg = CONFIGS[base] if isinstance(base, str) else base
+    if name is None:
+        name = (f"{cfg.name}-drift-p{drift.period}r{drift.reorder:g}"
+                f"j{drift.tile_jitter:g}s{drift.seed}")
+    out = dataclasses.replace(cfg, name=name, drift=drift)
+    prev = CONFIGS.setdefault(name, out)
+    if prev != out:
+        raise ValueError(f"config name {name!r} already registered "
+                         "with different contents")
+    return name
 
 
 def lm_gemm_layers(n_layers: int, d_model: int, n_heads: int, d_ff: int,

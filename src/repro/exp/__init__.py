@@ -1,0 +1,33 @@
+"""Declarative experiment API — the public way to run anything.
+
+    from repro import exp
+
+    spec = exp.ExperimentSpec.grid(
+        config=["config1", "config3"], mix=["moti1", "mix3"],
+        policy=["fifo-nb", "hydra", ("hydra", exp.online(50))],
+        params="quick")
+    rs = exp.run(spec, jobs=4)
+    for row in rs.mean_over("mix"):
+        print(row["config"], row["policy"], row["ipc"], row["dmr"])
+
+Pieces: frozen :class:`ExperimentSpec`/:class:`Point` cell descriptions,
+four uniform registries (policies, workload configs, DRAM models,
+SimParams presets), and :func:`run` -> columnar :class:`ResultSet`
+(filter / group_by / mean_over, hydra-sweep/v2 serialization).  The
+engine underneath is unchanged ``repro.core.sweep``.
+"""
+from .registry import DRAM, PARAMS, POLICIES, REGISTRIES, WORKLOADS, Registry
+from .resultset import SWEEP_SCHEMA, ResultSet
+from .runner import run, run_points
+from .spec import (ExperimentSpec, Point, lrpt, online, resolve_policy,
+                   way_partition, with_apm)
+
+# (the hydra-sweep/v2 validator lives in repro.exp.schema, deliberately not
+# imported here so `python -m repro.exp.schema` runs without a runpy warning)
+
+__all__ = [
+    "ExperimentSpec", "Point", "ResultSet", "Registry", "run", "run_points",
+    "POLICIES", "WORKLOADS", "DRAM", "PARAMS", "REGISTRIES",
+    "online", "way_partition", "lrpt", "with_apm", "resolve_policy",
+    "SWEEP_SCHEMA",
+]

@@ -1,0 +1,82 @@
+"""``run(spec) -> ResultSet`` — the single public entry point for
+evaluating anything.
+
+Routing is unchanged at the engine level: points go through
+``sweep.map_points`` (lane-batched ``simulate_group`` + process pool +
+disk-cache dedup), so every row is bitwise-identical to what the legacy
+``sim.run_cached`` path produced for the same point — pinned by
+tests/test_exp.py.
+"""
+from __future__ import annotations
+
+from typing import Dict, Iterable, List, Sequence, Tuple, Union
+
+from repro.core import sim, sweep
+
+from .resultset import ResultSet
+from .spec import ExperimentSpec, Point
+
+SpecLike = Union[ExperimentSpec, Iterable[ExperimentSpec]]
+
+
+def _record(point: Point, axes: Dict, res: sim.SimResult) -> Dict:
+    rec = dict(axes)
+    rec.update(res.summary())
+    rec["core_hit_rate"] = res.core_hit_rate
+    rec["accel_hit_rate"] = res.accel_hit_rate
+    rec["epochs"] = res.epochs
+    rec["point"] = point
+    rec["result"] = res
+    return rec
+
+
+def run_points(points: Sequence[Point], jobs: int = 1, cache: bool = True,
+               max_lanes: int = sweep.MAX_LANES) -> List[sim.SimResult]:
+    """Evaluate resolved points in order; the engine behind ``run``.
+
+    ``cache=True`` routes through ``sweep.map_points`` (reads and writes
+    the sim disk cache).  ``cache=False`` drives the same lane-batched
+    ``simulate_group`` without touching the result cache — fresh numbers
+    every call (artifact caches for traces/LERN models still apply)."""
+    sps = [p.sweep_point() for p in points]
+    if cache:
+        return sweep.map_points(sps, jobs=jobs, max_lanes=max_lanes)
+    results: List[sim.SimResult] = [None] * len(points)  # type: ignore
+    groups: Dict[Tuple, List[int]] = {}
+    for i, p in enumerate(points):
+        groups.setdefault((p.config, p.mix, p.params, p.dram), []).append(i)
+    for (config, mix, params, dram), idxs in groups.items():
+        uniq: Dict[Point, List[int]] = {}
+        for i in idxs:
+            uniq.setdefault(points[i], []).append(i)
+        members = list(uniq.items())
+        for lo in range(0, len(members), max_lanes):
+            chunk = members[lo:lo + max_lanes]
+            rs = sweep.simulate_group(config, mix,
+                                      [pt.policy for pt, _ in chunk],
+                                      params, dram)
+            for (_, twin_idxs), res in zip(chunk, rs):
+                for i in twin_idxs:
+                    results[i] = res
+    return results
+
+
+def run(spec: SpecLike, jobs: int = 1, cache: bool = True,
+        max_lanes: int = sweep.MAX_LANES) -> ResultSet:
+    """Expand ``spec`` (one ExperimentSpec or several, concatenated) and
+    evaluate every point; returns a columnar ResultSet whose key columns
+    are the spec's axes and whose ``result`` column holds the full
+    SimResults."""
+    specs = [spec] if isinstance(spec, ExperimentSpec) else list(spec)
+    expanded: List[Tuple[Point, Dict]] = []
+    keys: List[str] = []
+    for s in specs:
+        expanded.extend(s.expand())
+        for name, _ in s.axes:
+            if name not in keys:
+                keys.append(name)
+    results = run_points([pt for pt, _ in expanded], jobs=jobs, cache=cache,
+                         max_lanes=max_lanes)
+    records = [_record(pt, axes, res)
+               for (pt, axes), res in zip(expanded, results)]
+    return ResultSet.from_records(records, keys=keys)

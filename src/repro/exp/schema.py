@@ -1,0 +1,101 @@
+"""hydra-sweep/v2 artifact validation.
+
+Dependency-free structural validator (the container has no jsonschema)
+used by CI to gate the uploaded ``sweep.json`` artifact::
+
+    python -m repro.exp.schema sweep.json [more.json ...]
+
+Exits non-zero with a per-file error list on any violation.
+"""
+from __future__ import annotations
+
+import json
+import numbers
+import sys
+from typing import Dict, List
+
+from .resultset import SWEEP_SCHEMA
+
+_ROW_REQUIRED = ("name", "axes", "point", "metrics")
+_POINT_REQUIRED = ("config", "mix", "policy", "params", "dram")
+
+
+def validate_sweep(doc: Dict) -> List[str]:
+    """All schema violations in ``doc`` (empty == valid hydra-sweep/v2)."""
+    errs: List[str] = []
+    if not isinstance(doc, dict):
+        return ["document is not an object"]
+    if doc.get("schema") != SWEEP_SCHEMA:
+        errs.append(f"schema: expected {SWEEP_SCHEMA!r}, "
+                    f"got {doc.get('schema')!r}")
+    keys = doc.get("keys")
+    if not isinstance(keys, list) or not all(isinstance(k, str)
+                                             for k in keys):
+        errs.append("keys: expected a list of strings")
+        keys = []
+    rows = doc.get("rows")
+    if not isinstance(rows, list):
+        return errs + ["rows: expected a list"]
+    for i, row in enumerate(rows):
+        where = f"rows[{i}]"
+        if not isinstance(row, dict):
+            errs.append(f"{where}: not an object")
+            continue
+        for k in _ROW_REQUIRED:
+            if k not in row:
+                errs.append(f"{where}: missing required key {k!r}")
+        name = row.get("name")
+        if name is not None and not isinstance(name, str):
+            errs.append(f"{where}.name: expected string or null")
+        us = row.get("us_per_call")
+        if us is not None and not isinstance(us, numbers.Real):
+            errs.append(f"{where}.us_per_call: expected number or null")
+        axes = row.get("axes")
+        if not isinstance(axes, dict):
+            errs.append(f"{where}.axes: expected an object")
+        point = row.get("point")
+        if point is not None:
+            if not isinstance(point, dict):
+                errs.append(f"{where}.point: expected object or null")
+            else:
+                for k in _POINT_REQUIRED:
+                    if k not in point:
+                        errs.append(f"{where}.point: missing {k!r}")
+        metrics = row.get("metrics")
+        if not isinstance(metrics, dict) or not all(
+                isinstance(v, numbers.Real) or v is None
+                for v in metrics.values()):
+            errs.append(f"{where}.metrics: expected an object of numbers")
+        derived = row.get("derived")
+        if derived is not None and not isinstance(derived, dict):
+            errs.append(f"{where}.derived: expected object or null")
+    return errs
+
+
+def main(argv: List[str]) -> int:
+    if not argv:
+        print("usage: python -m repro.exp.schema sweep.json [...]")
+        return 2
+    bad = 0
+    for path in argv:
+        try:
+            with open(path) as f:
+                doc = json.load(f)
+        except (OSError, json.JSONDecodeError) as e:
+            print(f"{path}: unreadable ({e})")
+            bad += 1
+            continue
+        errs = validate_sweep(doc)
+        if errs:
+            bad += 1
+            print(f"{path}: INVALID ({len(errs)} errors)")
+            for e in errs[:20]:
+                print(f"  - {e}")
+        else:
+            print(f"{path}: ok ({len(doc.get('rows', []))} rows, "
+                  f"schema {doc['schema']})")
+    return 1 if bad else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

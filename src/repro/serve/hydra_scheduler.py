@@ -18,6 +18,7 @@ module — driving a different resource.
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Dict, List, Tuple
 
 import numpy as np
@@ -70,21 +71,41 @@ class SessionProfile:
 
 
 class HydraKVScheduler:
-    """Per-epoch residency decisions for finished-turn KV blocks."""
+    """Per-epoch residency decisions for finished-turn KV blocks.
+
+    Online-LERN analogue (ROADMAP serve item): session reuse drifts
+    within a day, so with a finite ``retrain_period`` the scheduler
+    refits its :class:`SessionProfile` clusters every ``retrain_period``
+    scheduler epochs from the (turns, gap) features observed since the
+    last refit — the same batched-k-means path ``SessionProfile.fit``
+    already uses.  ``retrain_period=inf`` (the default) never refits and
+    is bitwise the previous offline-only behavior
+    (tests/test_exp.py::test_kv_scheduler_infinite_period_is_offline).
+    """
 
     def __init__(self, *, token_budget: int, deadline_tokens: float,
                  epoch_tokens: int = 64, params: APMParams = APMParams(),
-                 profile: SessionProfile = None):
+                 profile: SessionProfile = None,
+                 retrain_period: float = math.inf,
+                 min_refit_sessions: int = 8, seed: int = 0):
         # APM over "tokens decoded" instead of "memory accesses completed"
         self.apm = APMState(m_total=int(deadline_tokens),
                             deadline=float(deadline_tokens),
                             epoch_len=float(epoch_tokens), params=params)
         self.token_budget = token_budget
         self.profile = profile
+        self.retrain_period = float(retrain_period)
+        # a sparse observed window must not wipe the profile's knowledge
+        self.min_refit_sessions = int(min_refit_sessions)
+        self.seed = seed
         self.ri_th, self.rc_th = 3, -1   # conservative start (keep all)
         self.resident_tokens = 0
         self.evictions = 0
         self.keeps = 0
+        self.epochs = 0
+        self.refits = 0
+        self._window_turns: List[float] = []
+        self._window_gaps: List[float] = []
 
     def epoch_update(self, *, decoded_rate: float, required_rate: float,
                      hbm_pressure: float) -> None:
@@ -99,11 +120,30 @@ class HydraKVScheduler:
         if hbm_pressure > 0.9:   # margin condition: high contention
             self.ri_th = max(self.ri_th - 1, -1)
             self.rc_th = min(self.rc_th + 1, 4)
+        self.epochs += 1
+        if (math.isfinite(self.retrain_period) and self.retrain_period > 0
+                and self.epochs % max(int(self.retrain_period), 1) == 0):
+            self._online_refit()
+
+    def _online_refit(self) -> None:
+        """Refit the session-reuse clusters on the observed window and
+        swap the profile in place (the serve-side ``Lane._online_retrain``)."""
+        if len(self._window_turns) < self.min_refit_sessions:
+            return
+        self.profile = SessionProfile.fit(
+            np.asarray(self._window_turns, np.float64),
+            np.asarray(self._window_gaps, np.float64),
+            seed=self.seed + self.refits)
+        self._window_turns, self._window_gaps = [], []
+        self.refits += 1
 
     def keep_resident(self, session_turns: float, inter_turn_gap: float
                       ) -> bool:
         """Paper's bypass rule: evict iff RI_cluster > RI_Th or
         RC_cluster < RC_Th."""
+        if math.isfinite(self.retrain_period):
+            self._window_turns.append(float(session_turns))
+            self._window_gaps.append(float(inter_turn_gap))
         if self.profile is None:
             rc_cl, ri_cl = 2, 1
         else:
@@ -120,4 +160,5 @@ class HydraKVScheduler:
         tot = self.evictions + self.keeps
         return {"evictions": self.evictions, "keeps": self.keeps,
                 "evict_rate": self.evictions / max(tot, 1),
-                "ri_th": self.ri_th, "rc_th": self.rc_th}
+                "ri_th": self.ri_th, "rc_th": self.rc_th,
+                "refits": self.refits}
