@@ -1,0 +1,116 @@
+"""``bench-sim`` — epochs/sec of the main simulation path, host vs fused.
+
+The perf-trajectory artifact for the device-resident epoch loop
+(core/fused.py), sibling to ``bench_lern.json``: for every suite config
+it times the sequential host loop (``sim.drive_lane``, one lane at a
+time — the oracle the fused engine is bitwise-pinned against) and the
+fused super-step engine on the same policy group, at ``lanes`` of 1 and
+4, and records epochs/sec.  Emits ``bench_sim.json`` (schema
+hydra-bench-sim/v1).
+
+Methodology: artifacts (trace, LERN tables, deadline calibration) are
+loaded/warmed first so both engines measure pure simulation; each
+engine then runs the full bounded simulation (fresh lanes, fresh LLC
+state) ``REPS`` times and the best time is reported — rep 1 carries
+this shape's jit compilation, so min() excludes it (the same best-of
+convention as bench_lern).
+"""
+import dataclasses
+import json
+import time
+
+import numpy as np
+
+from repro.core import policies, sim, sweep
+from repro.core.dram import DDR3_1600
+
+from .common import BENCH_SIM_PATH, Suite, emit
+
+LANE_SETS = {
+    1: ("hydra",),
+    4: ("fifo-nb", "arp-cs", "arp-cs-as", "hydra"),
+}
+# bounded epoch budget: full per-epoch work at the suite's scale, but a
+# capped horizon so the bench stays minutes, not the full sweep's hours
+BENCH_INPUTS = 2
+BENCH_EPOCHS = 120
+REPS = 3  # best-of: rep 1 pays jit compilation, rep 2+ is the measure
+
+
+def _params(suite: Suite) -> sim.SimParams:
+    return dataclasses.replace(suite.params, n_inputs=BENCH_INPUTS,
+                               max_epochs=BENCH_EPOCHS)
+
+
+def _run_host(config: str, mix: str, pols, p: sim.SimParams,
+              deadline: float) -> int:
+    art = sim.load_artifacts(config, mix, p, True)
+    epochs = 0
+    for pol in pols:
+        lane = sim.Lane(config, mix, pol, p, DDR3_1600, deadline, art, True)
+        epochs += sim.drive_lane(lane).epochs
+    return epochs
+
+
+def _run_fused(config: str, mix: str, pols, p: sim.SimParams,
+               deadline: float) -> int:
+    rs = sweep.simulate_group(config, mix, list(pols), p,
+                              deadline_cycles=deadline, engine="fused")
+    return sum(r.epochs for r in rs)
+
+
+def _best_of(fn, reps: int = REPS):
+    """(best seconds, epochs) over ``reps`` identical full runs — the
+    first rep carries jit compilation for this shape, later reps are the
+    measurement (matching bench_lern's warm-measurement convention)."""
+    best, epochs = float("inf"), 0
+    for _ in range(reps):
+        t0 = time.time()
+        epochs = fn()
+        best = min(best, time.time() - t0)
+    return best, epochs
+
+
+def run(suite: Suite):
+    rows = []
+    entries = []
+    mix = suite.mixes[0]
+    p = _params(suite)
+    for cfg in suite.configs:
+        deadline = sim.calibrated_deadline(cfg, suite.params, DDR3_1600)
+        sim.load_artifacts(cfg, mix, p, True)  # trace/stream caches warm
+        for lanes, pols in LANE_SETS.items():
+            pol_objs = [policies.get(n) for n in pols]
+            t1 = time.time()
+            host_s, eh = _best_of(
+                lambda: _run_host(cfg, mix, pol_objs, p, deadline))
+            fused_s, ef = _best_of(
+                lambda: _run_fused(cfg, mix, pol_objs, p, deadline))
+            host_eps = eh / max(host_s, 1e-9)
+            fused_eps = ef / max(fused_s, 1e-9)
+            speedup = fused_eps / max(host_eps, 1e-9)
+            rows.append(emit(
+                f"bench_sim/{cfg}-{mix}-l{lanes}", t1,
+                {"host_eps": host_eps, "fused_eps": fused_eps,
+                 "speedup": speedup, "epochs": ef}))
+            entries.append({
+                "config": cfg, "mix": mix, "lanes": lanes,
+                "epochs": int(ef),
+                "host_s": round(host_s, 4), "fused_s": round(fused_s, 4),
+                "host_eps": round(host_eps, 2),
+                "fused_eps": round(fused_eps, 2),
+                "speedup": round(speedup, 3)})
+    if entries:
+        geo = {}
+        for lanes in LANE_SETS:
+            sp = [e["speedup"] for e in entries if e["lanes"] == lanes]
+            geo[str(lanes)] = round(float(np.exp(np.mean(np.log(sp)))), 3)
+        with open(BENCH_SIM_PATH, "w") as f:
+            json.dump({"schema": "hydra-bench-sim/v1",
+                       "geomean_speedup_by_lanes": geo,
+                       "entries": entries}, f, indent=1)
+        print(f"# wrote {len(entries)} entries to {BENCH_SIM_PATH} "
+              f"(geomean fused speedup: "
+              + ", ".join(f"{k} lanes {v}x" for k, v in geo.items())
+              + ")", flush=True)
+    return rows

@@ -29,8 +29,10 @@ SMOKE_CONFIGS = ("config1",)
 # metric subset reported as a paper bar (SimResult.summary() keys)
 SUMMARY_METRICS = ("ipc", "dmr", "core_br", "accel_br")
 
-# perf-trajectory artifact of the lern-train benchmark (fig05_clustering)
+# perf-trajectory artifacts: lern-train (fig05_clustering) and the main
+# simulation path host-vs-fused (bench_sim)
 BENCH_LERN_PATH = "bench_lern.json"
+BENCH_SIM_PATH = "bench_sim.json"
 
 _FOOTPRINT = {"smoke": (SMOKE_MIXES, SMOKE_CONFIGS),
               "quick": (QUICK_MIXES, QUICK_CONFIGS),

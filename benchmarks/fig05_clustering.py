@@ -40,7 +40,8 @@ def bench_lern_train(suite: Suite):
     parity reference (``lern.train``), reported for transparency.  All
     paths are measured warm (one throwaway run first, so jit compilation
     and the trace cache are excluded).  Emits ``bench_lern.json`` (schema
-    hydra-bench-lern/v1)."""
+    hydra-bench-lern/v2: v1 plus the ``family`` block comparing the
+    one-dispatch family fit against per-config fits in both regimes)."""
     rows = []
     entries = []
     for cfg in suite.configs:
@@ -61,12 +62,60 @@ def bench_lern_train(suite: Suite):
                         "speedup": round(speedup, 3),
                         "accesses": int(tr.num_accesses),
                         "layers": len(tr.layer_names)})
+    family = None
+    if len(suite.configs) > 1:
+        # whole config family in ONE dispatch pair vs one-config-at-a-time
+        # batched training — the fix for tiny host-bound configs, so it
+        # is measured in that regime: every trace at the small subsample
+        # where per-dispatch overhead dominates (sim.FAMILY_MAX_ACCESSES
+        # gates the production path to the same regime).  The suite-scale
+        # reference is recorded too — it documents why big traces train
+        # individually (the concatenated extraction costs more than the
+        # dispatches it saves).
+        ss_small = min(suite.params.subsample_target, 10_000)
+        small_traces = [sim.load_trace(cfg, ss_small)
+                        for cfg in suite.configs]
+        t0 = time.time()
+        t_host = _best_of(
+            lambda: [lern.train(tr) for tr in small_traces], reps=3)
+        t_indiv = _best_of(
+            lambda: [lern.train_model_batched(tr) for tr in small_traces],
+            reps=3)
+        t_family = _best_of(
+            lambda: lern.train_family_batched(small_traces), reps=3)
+        speedup = t_indiv / max(t_family, 1e-9)
+        rows.append(emit("lern_train/family", t0,
+                         {"host_s": t_host, "individual_s": t_indiv,
+                          "family_s": t_family, "speedup": speedup,
+                          "configs": len(suite.configs)}))
+        family = {"configs": list(suite.configs),
+                  "subsample_target": ss_small,
+                  "host_s": round(t_host, 4),
+                  "individual_s": round(t_indiv, 4),
+                  "family_s": round(t_family, 4),
+                  "speedup": round(speedup, 3)}
+        if suite.params.subsample_target > ss_small:
+            traces = [sim.load_trace(cfg, suite.params.subsample_target)
+                      for cfg in suite.configs]
+            tf_i = _best_of(
+                lambda: [lern.train_model_batched(tr) for tr in traces],
+                reps=2)
+            tf_f = _best_of(
+                lambda: lern.train_family_batched(traces), reps=2)
+            family["full_scale"] = {
+                "subsample_target": suite.params.subsample_target,
+                "individual_s": round(tf_i, 4),
+                "family_s": round(tf_f, 4),
+                "speedup": round(tf_i / max(tf_f, 1e-9), 3)}
     if entries:
         geo = float(np.exp(np.mean([np.log(e["speedup"]) for e in entries])))
+        doc = {"schema": "hydra-bench-lern/v2",
+               "geomean_speedup": round(geo, 3),
+               "entries": entries}
+        if family is not None:
+            doc["family"] = family
         with open(BENCH_LERN_PATH, "w") as f:
-            json.dump({"schema": "hydra-bench-lern/v1",
-                       "geomean_speedup": round(geo, 3),
-                       "entries": entries}, f, indent=1)
+            json.dump(doc, f, indent=1)
         print(f"# wrote {len(entries)} configs to {BENCH_LERN_PATH} "
               f"(geomean device speedup {geo:.2f}x)", flush=True)
     return rows

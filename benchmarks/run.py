@@ -16,8 +16,10 @@ worker processes.
 
 ``fig05_clustering`` additionally times host-numpy vs device-batched LERN
 training (the ``lern_train/*`` rows) and writes ``bench_lern.json``
-(schema hydra-bench-lern/v1) — the perf-trajectory record for the
-device-resident training pipeline.
+(schema hydra-bench-lern/v2) — the perf-trajectory record for the
+device-resident training pipeline; ``bench_sim`` does the same for the
+main simulation path (``bench_sim.json``, schema hydra-bench-sim/v1,
+host ``drive_lane`` vs the fused epoch engine).
 """
 import argparse
 import importlib
@@ -29,7 +31,7 @@ MODULES = [
     "tab_lern_accuracy", "fig10_policies", "fig11_access_rate",
     "fig12_configs", "fig14_occupancy", "fig15_afr_asth", "fig16_llc_sweep",
     "fig17_ddr", "fig18_waypart", "fig19_lrpt", "fig20_ship", "tab_params",
-    "roofline",
+    "roofline", "bench_sim",
 ]
 
 

@@ -1,5 +1,9 @@
 """Inspect what LERN learned for an accelerator config: cluster centers,
 distributions, silhouette, and prediction accuracy (paper §IV artifacts).
+
+Goes through the ``repro.exp`` registries (the single public surface):
+the config resolves against ``exp.WORKLOADS`` and the artifact footprint
+comes from a registered params preset instead of a hand-built SimParams.
 """
 import argparse
 import sys
@@ -8,6 +12,7 @@ sys.path.insert(0, "src")
 
 import numpy as np
 
+from repro import exp
 from repro.core import sim
 from repro.core.lern import cluster_distribution, prediction_accuracy
 
@@ -15,10 +20,15 @@ from repro.core.lern import cluster_distribution, prediction_accuracy
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--config", default="config3")
+    ap.add_argument("--preset", default="default",
+                    help="registered params preset (exp.PARAMS) supplying "
+                         "the trace footprint")
     args = ap.parse_args()
-    ss = sim.SimParams().subsample_target
-    model = sim.load_lern(args.config, "full", ss)
-    tr = sim.load_trace(args.config, ss)
+    exp.WORKLOADS.get(args.config)  # raise early on bad names
+    config = args.config
+    ss = exp.PARAMS.get(args.preset).subsample_target
+    model = sim.load_lern_family([config], "full", ss)[config]
+    tr = sim.load_trace(config, ss)
     print(f"layers: {model.n_layers}; accesses: {tr.num_accesses}")
     print(f"prediction accuracy (§IV-D): "
           f"{prediction_accuracy(model, tr):.3f}")

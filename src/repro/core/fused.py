@@ -1,0 +1,1130 @@
+"""Device-resident fused epoch loop (perf tentpole, PR 4).
+
+The paper's evaluation is an epoch-driven feedback cycle — per-epoch
+admission, APM threshold selection, LLC content simulation, fluid-timing
+update (§III-C, §VI) — and the host engine (``sim.Lane`` +
+``sweep._drive_lanes``) pays one numpy event-build, one ``build_rounds``
+sort and one blocking device→host stats sync *per epoch*, up to
+``max_epochs`` times per lane.  This module stages the whole
+(config, mix, policy-lane-batch) simulation on device once and runs a
+``lax.scan`` over epochs whose carry holds the LLC state *and* the lane
+timing state (hit rates, AMAL, per-core IPC, input progress, APM
+thresholds).  The host only syncs once per *super-step* of K epochs.
+
+Parity contract (tests/test_fused.py):
+
+* integer LLC stat counters are **bitwise-equal** to the sequential
+  oracle ``sim.drive_lane``.  Event interleaving uses the exact integer
+  keys of ``sim.when_keys`` on both sides, device round building is a
+  composite (set, when) sort reproducing ``llc.build_rounds``'s
+  per-set event order, and every round applies the very same shared
+  ``llc.round_transition`` (on a depth-major prefix slice).
+* float timing metrics are bitwise-equal too in practice: the fluid
+  timing update (``sim._mg1_delay``, ``dram.queue_delay``,
+  ``cores.core_ipc``, ``apm.*``) is ported to jnp at float64
+  (``jax.experimental.enable_x64``) with the host's exact operation
+  order, including numpy's pairwise summation tree for the 8-core IPC
+  sum.  The public guarantee is rtol=1e-6 (the acceptance bar); bitwise
+  float equality is asserted opportunistically in tests.
+
+Fallback contract: the per-epoch round matrix has a static round
+capacity (``max_rounds``).  A hot set overflowing it — or an
+online-LERN retrain boundary — raises a flag; the driver rolls the
+super-step back and replays that stretch through the host path (which
+chunks hot sets), then resumes fused.  Two consecutive overflowing
+super-steps make the host path sticky for the rest of the run, so a
+pathological trace never pays for doomed device dispatches repeatedly.
+``sim.drive_lane`` survives unchanged as the sequential oracle;
+``sweep.simulate_group(engine=...)`` routes eligible groups here.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import os
+from typing import List, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import enable_x64
+
+from . import llc as llc_mod
+from .sim import PF_WHEN_OFF, WHEN_BITS, Lane
+
+# Super-step length: epochs advanced per device dispatch (one host sync
+# each).  Round capacity: static per-set event bound of the fused round
+# matrix; hot epochs beyond it fall back to the host path's chunking.
+DEFAULT_SUPERSTEP = int(os.environ.get("REPRO_FUSED_K", "32"))
+# Static per-set round capacity.  The round loop's trip count follows
+# the data; capacity only sizes the scatter target, so it starts small
+# and the driver doubles it (re-jits) on overflow up to the host's
+# largest ROUND_BUCKET — beyond that, the stretch falls back to the
+# host path, which chunks arbitrarily hot sets.
+DEFAULT_MAX_ROUNDS = int(os.environ.get("REPRO_FUSED_ROUNDS", "128"))
+MAX_ROUNDS_CAP = llc_mod.ROUND_BUCKETS[-1]
+# Active-set width above which a round is processed densely (full
+# [S, W] transition) instead of on the compacted set list.  Round 0
+# touches most sets; by round ~8 the per-round active-set count decays
+# below this, and the sparse path does ~num_sets/cap times less work.
+SPARSE_CAP = int(os.environ.get("REPRO_FUSED_SPARSE_CAP", "256"))
+
+_HUGE_KEY = np.int64(1) << 62
+
+
+@dataclasses.dataclass(frozen=True)
+class FusedDims:
+    """Static (compile-time) shape info for one lane batch."""
+    cfg: llc_mod.LLCConfig          # shared geometry (knobs ride as data)
+    n_lanes: int
+    n_cores: int
+    accel_cap: int                  # accel segment slots (accel_epoch_cap)
+    core_caps: Tuple[int, ...]      # per-core slots (epoch demand at ipc0)
+    has_dpcp: bool                  # prefetch segment allocated at all
+    n_inputs: int
+    k_epochs: int
+    max_rounds: int
+    sparse_cap: int                 # 0 = rounds always dense
+
+
+class SharedConsts(NamedTuple):
+    """Device constants shared by every lane of the batch (traced)."""
+    line: jnp.ndarray        # i32 [M] accel trace lines
+    write: jnp.ndarray       # bool [M]
+    layer: jnp.ndarray       # i32 [M]
+    streams: jnp.ndarray     # i32 [C, WMAX] core address streams
+    nominal: jnp.ndarray     # f64 [C] apkc/1000*et (epoch demand at ipc0)
+    apkc1k: jnp.ndarray      # f64 [C] apkc/1000
+    ipc0: jnp.ndarray        # f64 [C]
+    inv_ipc0: jnp.ndarray    # f64 [C] 1/ipc0
+    et: jnp.ndarray          # f64 [] epoch_cycles
+    m_total: jnp.ndarray     # i64 []
+    max_epochs: jnp.ndarray  # i64 []
+    deadline: jnp.ndarray    # f64 []
+    period: jnp.ndarray      # f64 []
+    ma_global: jnp.ndarray   # f64 []
+    llc_capacity: jnp.ndarray      # f64 []
+    llc_capacity_int: jnp.ndarray  # i64 [] int(llc_capacity)
+    s_llc: jnp.ndarray       # f64 []
+    w_cap_s: jnp.ndarray     # f64 [] w_cap * s_llc
+    w_cap_s_prio: jnp.ndarray      # f64 [] w_cap * s_llc * prio_cap
+    prio_cap: jnp.ndarray    # f64 []
+    hit_lat: jnp.ndarray     # f64 [] llc_hit_lat
+    dram_lat: jnp.ndarray    # f64 []
+    dram_rate: jnp.ndarray   # f64 []
+    dram_cap: jnp.ndarray    # f64 [] rate * et
+    dram_cap01: jnp.ndarray  # f64 [] 0.1 * dram_cap
+    dram_denom: jnp.ndarray  # f64 [] max(rate * et, 1e-9)
+    w_cap_dram: jnp.ndarray        # f64 [] w_cap * dram_lat
+    w_cap_dram_prio: jnp.ndarray   # f64 [] (w_cap * dram_lat) * prio_cap
+    w_dram25: jnp.ndarray    # f64 [] 25 * dram_lat
+    mlp_et: jnp.ndarray      # f64 [] mlp_accel * et
+    zero: jnp.ndarray        # f64 [] runtime 0.0 — the FMA fence (_mulb)
+
+
+class LaneConsts(NamedTuple):
+    """Per-lane policy data (leading lane axis; vmapped)."""
+    arp: jnp.ndarray          # bool [L]
+    flash: jnp.ndarray        # bool [L]
+    hydra: jnp.ndarray        # bool [L]
+    dpcp: jnp.ndarray         # bool [L]
+    accel_hint: jnp.ndarray   # bool [L] LERN hints active
+    accel_rand: jnp.ndarray   # bool [L] AFRp hints active
+    switch_point: jnp.ndarray  # i64 [L] §III-C1 deadline switch (-1 = off)
+    knobs: llc_mod.LaneKnobs  # leaves [L, ...]
+    rc: jnp.ndarray           # i8 [L, M] RC cluster per access
+    ri: jnp.ndarray           # i8 [L, M]
+    cold: jnp.ndarray         # f64 [L, NL] per-layer cold-cluster center
+    afr: jnp.ndarray          # bool [L, M] pre-drawn AFRp decisions
+    writes: jnp.ndarray       # bool [L, C, WMAX] pre-drawn core write flags
+    # APM per-lane constants (lane's APMParams x shared ma_global)
+    margin_high: jnp.ndarray  # f64 [L]
+    margin_low: jnp.ndarray   # f64 [L]
+    mr_th: jnp.ndarray        # f64 [L]
+    behind_th: jnp.ndarray    # f64 [L] (1+alpha)*ma_global
+    bands: jnp.ndarray        # f64 [L, 7] [ (1+b)mag, (1-b)mag .. (1-6b)mag ]
+    t_a: jnp.ndarray          # f64 [L, 4] base T_A1..T_A4
+    t_b: jnp.ndarray          # f64 [L]
+    delta_a: jnp.ndarray      # f64 [L]
+    delta_b: jnp.ndarray      # f64 [L]
+
+
+class FusedCarry(NamedTuple):
+    """Per-lane dynamic state carried across the epoch scan."""
+    st: llc_mod.LLCState      # batched [L, ...]
+    active: jnp.ndarray       # bool [L]
+    hr_core: jnp.ndarray      # f64 [L]
+    hr_accel: jnp.ndarray     # f64 [L]
+    amal: jnp.ndarray         # f64 [L]
+    ipc: jnp.ndarray          # f64 [L, C]
+    stream_pos: jnp.ndarray   # i64 [L, C]
+    pos: jnp.ndarray          # i64 [L]
+    input_idx: jnp.ndarray    # i64 [L]
+    input_start: jnp.ndarray  # f64 [L]
+    now: jnp.ndarray          # f64 [L]
+    ri_th: jnp.ndarray        # i64 [L]
+    rc_th: jnp.ndarray        # i64 [L]
+    special: jnp.ndarray      # bool [L]
+    cm_prev: jnp.ndarray      # f64 [L]
+    pf_prev: jnp.ndarray      # f64 [L]
+    epoch: jnp.ndarray        # i64 [L]
+    completions: jnp.ndarray  # f64 [L, n_inputs]
+    totals: jnp.ndarray       # i64 [L, 7] ch cm cb ah am ab n_acc
+    total_llc: jnp.ndarray    # f64 [L]
+    total_dram: jnp.ndarray   # f64 [L]
+    overflow: jnp.ndarray     # bool [L] sticky round-capacity flag
+
+
+class StepOut(NamedTuple):
+    """Per-epoch per-lane scan outputs (history write-back)."""
+    active: jnp.ndarray       # bool — this step actually ran
+    pos_before: jnp.ndarray   # i64  — accel window start (online-LERN)
+    n_a: jnp.ndarray          # i64  — hist accel_rate
+    req: jnp.ndarray          # f64  — hist requirement
+    ri_th: jnp.ndarray        # i64
+    rc_th: jnp.ndarray        # i64
+    core_ipc: jnp.ndarray     # f64
+    amal: jnp.ndarray         # f64
+
+
+def _np_sum_order(terms: List[jnp.ndarray]):
+    """Sum ``terms`` in numpy's pairwise-summation order for n <= 128 —
+    the host computes ``np.sum(ipc * shed)`` over the cores and the fused
+    engine must reproduce the same float64 result bitwise."""
+    n = len(terms)
+    if n < 8:
+        s = jnp.float64(0.0)
+        for t in terms:
+            s = s + t
+        return s
+    r = list(terms[:8])
+    i = 8
+    while i + 8 <= n:
+        for j in range(8):
+            r[j] = r[j] + terms[i + j]
+        i += 8
+    res = ((r[0] + r[1]) + (r[2] + r[3])) + ((r[4] + r[5]) + (r[6] + r[7]))
+    while i < n:
+        res = res + terms[i]
+        i += 1
+    return res
+
+
+def _div(a, b, zero):
+    """IEEE float division pinned against XLA's algebraic simplifier.
+
+    XLA rewrites chained divisions ((a/b)/c -> a/(b*c), and
+    multiply-of-division shapes) even with fast-math off — each rewrite
+    moves the last ulp, which is enough to flip an ``int()`` truncation
+    at an admission boundary and break bitwise stat parity with the
+    host's numpy math.  Adding a *runtime* zero (an opaque jit
+    parameter, so nothing can fold it) makes every consumer see an fadd
+    instead of an fdiv — no rewrite pattern matches, the op sequence
+    stays exactly as written, and unlike an optimization barrier it
+    costs one fused add, not a fusion break.  Only used for
+    non-negative quotients (-0.0 + 0.0 would flip the zero's sign)."""
+    return a / b + zero
+
+
+def _mulb(a, b, zero):
+    """Product pinned against FMA contraction.
+
+    In ``x ± a*b`` shapes LLVM fuses multiply and add into one fma —
+    one rounding step instead of two, not what the host's numpy
+    computes — and HLO optimization barriers don't survive to the LLVM
+    level.  The runtime zero makes the outer add's operand an fadd
+    rather than an fmul, which is not contractible.  Even if the inner
+    ``a*b + zero`` itself contracts, fma(a, b, 0) rounds exactly like
+    the plain product, so the value is unchanged.  (Only used for
+    non-negative products: -0.0 + 0.0 would flip the sign of zero.)"""
+    return a * b + zero
+
+
+def _mg1(rho, s_llc, zero):
+    rho = jnp.minimum(rho, 0.98)
+    return _div(rho * s_llc, jnp.maximum(2.0 * (1.0 - rho), 1e-2), zero)
+
+
+def _queue_delay(sh: SharedConsts, traffic):
+    z = sh.zero
+    rho = jnp.minimum(_div(traffic, sh.dram_denom, z), 0.999)
+    w = _div(_div(rho, jnp.maximum(2.0 * (1.0 - rho), 1e-3), z),
+             sh.dram_rate, z)
+    return jnp.minimum(w, sh.w_dram25)
+
+
+# ---------------------------------------------------------------------------
+# device round building (the on-device build_rounds)
+# ---------------------------------------------------------------------------
+def _pack_meta(is_accel, write, hint, prefetch, dlok, src):
+    """jnp twin of llc.pack_meta (src may be a scalar segment id)."""
+    return (llc_mod.M_VALID
+            | jnp.where(is_accel, llc_mod.M_ACCEL, 0)
+            | jnp.where(write, llc_mod.M_WRITE, 0)
+            | jnp.where(hint, llc_mod.M_HINT, 0)
+            | jnp.where(prefetch, llc_mod.M_PREFETCH, 0)
+            | jnp.where(dlok, llc_mod.M_DLOK, 0)
+            | (src << llc_mod.M_SRC_SHIFT)).astype(jnp.int32)
+
+
+def _build_rounds_device(dims: FusedDims, sh: SharedConsts, lc, n_a, n_c,
+                         pos, stream_pos, ri_th, rc_th, special):
+    """Build one epoch's round-major [R, S] event matrices on device.
+
+    Reproduces the host pipeline's per-set event order exactly: static
+    segment layout (accel, optional DPCP prefetch, core 0..C-1) with
+    validity masks, the shared integer interleave keys
+    (``sim.when_keys``), and ONE stable composite (set << 42 | when)
+    sort — set-major with the host's when-order inside each set, ties
+    resolving in segment order via stability — yielding each event's
+    per-set rank, i.e. ``llc.build_rounds``'s (rank, set) coordinates.
+    The §III-C1 deadline-switch bit is closed-form (only demand accel
+    accesses are counted by the host's cumsum, and they are already
+    when-ordered within their segment), so no global when-sort is
+    needed; core/prefetch events carry dlok=0, which the transition
+    never reads for them.  Events whose rank exceeds the static
+    ``max_rounds`` capacity are dropped and flagged (the driver
+    escalates the capacity, then falls back to the host path, which
+    chunks hot sets instead).
+    """
+    num_sets = dims.cfg.num_sets
+    na_safe = jnp.maximum(n_a, 1)
+    ia = jnp.arange(dims.accel_cap, dtype=jnp.int64)
+    when_a = (ia << WHEN_BITS) // na_safe
+    idx_a = pos + ia
+    valid_a = ia < n_a
+    line_a = jnp.take(sh.line, idx_a)
+    write_a = jnp.take(sh.write, idx_a)
+    # per-event bypass hint: LERN clusters x epoch thresholds, or AFRp
+    layer_now = jnp.take(sh.layer, pos)
+    cold_now = jnp.take(lc.cold, layer_now)
+    rc_a = jnp.take(lc.rc, idx_a)
+    ri_a = jnp.take(lc.ri, idx_a)
+    hint_lern = (ri_a > ri_th) | (rc_a < rc_th)
+    hint_lern = hint_lern | (special & (cold_now <= 2.0) & (rc_a == 0))
+    hint_a = jnp.where(lc.accel_hint, hint_lern,
+                       jnp.where(lc.accel_rand, jnp.take(lc.afr, idx_a),
+                                 False))
+    # §III-C1 deadline switch, in closed form: the i-th demand accel
+    # access is the (i+1)-th counted by the host's running cumsum (only
+    # accel & ~prefetch events count), so its bit is just i >= switch.
+    # Core and prefetch events get dlok=0 — the transition never reads
+    # the bit for them (bypass is masked to demand accel accesses).
+    dlok_a = ia >= lc.switch_point
+
+    false_a = jnp.zeros(dims.accel_cap, bool)
+    whens = [when_a]
+    lines = [line_a]
+    metas = [_pack_meta(jnp.ones(dims.accel_cap, bool), write_a, hint_a,
+                        false_a, dlok_a, jnp.int32(0))]
+    valids = [valid_a]
+    if dims.has_dpcp:
+        whens.append(when_a + PF_WHEN_OFF)
+        lines.append(line_a + 1)
+        metas.append(_pack_meta(jnp.ones(dims.accel_cap, bool), false_a,
+                                false_a, jnp.ones(dims.accel_cap, bool),
+                                false_a, jnp.int32(0)))
+        valids.append(valid_a & lc.dpcp)
+    for k, cap in enumerate(dims.core_caps):
+        jk = jnp.arange(cap, dtype=jnp.int64)
+        nk = n_c[k]
+        whens.append((jk << WHEN_BITS) // jnp.maximum(nk, 1))
+        idx_k = stream_pos[k] + jk
+        lines.append(jnp.take(sh.streams[k], idx_k))
+        fk = jnp.zeros(cap, bool)
+        metas.append(_pack_meta(fk, jnp.take(lc.writes[k], idx_k), fk, fk,
+                                fk, jnp.int32(k)))
+        valids.append(jk < nk)
+
+    when = jnp.concatenate(whens)
+    line = jnp.concatenate(lines)
+    meta = jnp.concatenate(metas)
+    valid = jnp.concatenate(valids)
+    n_ev = when.shape[0]
+
+    # one composite stable sort gives build_rounds' (set, when) order:
+    # set-major, host event order within a set (when keys, ties in
+    # segment order via stability), invalid slots last
+    set_of = (line & (num_sets - 1)).astype(jnp.int64)
+    key = jnp.where(valid, (set_of << (WHEN_BITS + 1)) | when, _HUGE_KEY)
+    order2 = jnp.argsort(key, stable=True)
+    seq = jnp.arange(n_ev, dtype=jnp.int64)
+    valid_g = valid[order2]
+    set_g = jnp.where(valid_g, key[order2] >> (WHEN_BITS + 1),
+                      jnp.int64(num_sets))
+    first = jnp.concatenate(
+        [jnp.ones(1, bool), set_g[1:] != set_g[:-1]])
+    grp_start = jax.lax.cummax(jnp.where(first, seq, jnp.int64(0)))
+    rank_g = seq - grp_start
+    ovf = jnp.any(valid_g & (rank_g >= dims.max_rounds))
+    n_rounds = jnp.minimum(
+        jnp.max(jnp.where(valid_g, rank_g, jnp.int64(-1))) + 1,
+        jnp.int64(dims.max_rounds)).astype(jnp.int32)
+    line_g = line[order2]
+    meta_g = meta[order2]
+
+    # depth-major column layout: relabel the columns of the round
+    # matrices so sets sort by their epoch event depth, descending.
+    # Round r's active sets (depth > r) are then exactly the first
+    # counts[r] columns — every round can run on a contiguous
+    # static-width *prefix slice* of the permuted state (no per-round
+    # gathers or scatters), with one state permutation per epoch.
+    # The transition is elementwise in the set dimension and its only
+    # cross-set effects (SHCT scatter-adds, stat sums) are
+    # order-independent, so the relabeling cannot change results.
+    rank_sp = jnp.where(valid_g, rank_g, jnp.int64(dims.max_rounds))
+    counts = jnp.zeros(dims.max_rounds, jnp.int32).at[rank_sp].add(
+        valid_g.astype(jnp.int32), mode="drop")
+    depth = jnp.zeros(num_sets, jnp.int32).at[set_g].add(
+        valid_g.astype(jnp.int32), mode="drop")
+    perm = jnp.argsort(-depth, stable=True).astype(jnp.int32)   # [S]
+    inv_perm = jnp.zeros(num_sets, jnp.int32).at[perm].set(
+        jnp.arange(num_sets, dtype=jnp.int32))
+    col_g = inv_perm[jnp.minimum(set_g, num_sets - 1)]
+    line_m = jnp.full((dims.max_rounds, num_sets), -1, jnp.int32).at[
+        rank_sp, col_g].set(line_g, mode="drop")
+    meta_m = jnp.zeros((dims.max_rounds, num_sets), jnp.int32).at[
+        rank_sp, col_g].set(meta_g, mode="drop")
+    return (line_m, meta_m, counts, perm, inv_perm, n_rounds, ovf)
+
+
+def _prefix_round_step_fn(cfg, knobs, width: int):
+    """``llc.round_transition`` on a depth-major prefix slice.
+
+    With columns relabeled so sets sort by epoch event depth
+    (descending), round r's active sets are exactly the first
+    ``counts[r]`` columns — so a round whose count fits ``width``
+    applies the shared transition to the contiguous ``[:width]`` slice
+    of the permuted state, a static-shape slice update with no
+    per-round gather or scatter.  Every skipped column's full-width
+    contribution is a strict no-op (meta 0, delta-0 SHCT adds,
+    untouched rows), as are padding columns inside the slice, so
+    results are bitwise-equal to the full-width step.  The permuted
+    sampler-set row rides along as data (the full-width step bakes it
+    in by set index)."""
+    def step(carry, ev):
+        (tags_p, lru_p, owner_p, sig_p, reused_p, tick0, shct_core,
+         shct_accel, stats, percore) = carry
+        line_f, meta_f, sampler_p = ev          # [S] rows (permuted)
+        tick = tick0 + 1
+        rows, shct, upd, pc = llc_mod.round_transition(
+            cfg, knobs, sampler_p[:width],
+            (tags_p[:width], lru_p[:width], owner_p[:width],
+             sig_p[:width], reused_p[:width]),
+            (shct_core, shct_accel), line_f[:width], meta_f[:width], tick)
+        return (tags_p.at[:width].set(rows[0]),
+                lru_p.at[:width].set(rows[1]),
+                owner_p.at[:width].set(rows[2]),
+                sig_p.at[:width].set(rows[3]),
+                reused_p.at[:width].set(rows[4]),
+                tick, shct[0], shct[1], stats + upd, percore + pc)
+
+    return step
+
+
+def _run_rounds_batch(dims: FusedDims, knobs, states, bg):
+    """Apply the shared round transition to every lane's populated rounds.
+
+    One batch-level while-loop (trip count = the deepest lane's round
+    count) whose body vmaps the per-lane transition on a depth-major
+    prefix slice of the permuted state.  A three-tier ``lax.cond``
+    (full width / SPARSE_CAP / 64) picks the narrowest static slice the
+    round's widest lane fits — the loop sits outside vmap, so only one
+    branch executes.  The state is permuted into column order once per
+    epoch and un-permuted after the loop; see _prefix_round_step_fn for
+    why this is transition-for-transition identical to the host engines
+    (their tick advance on padded rounds only shifts absolute LRU tick
+    values, never their per-way order)."""
+    cfg = dims.cfg
+    n_lanes = bg.line_m.shape[0]
+    num_sets = cfg.num_sets
+    max_r = jnp.max(bg.n_rounds).astype(jnp.int32)
+    stats0 = jnp.zeros((n_lanes, len(llc_mod.STAT_NAMES)), jnp.int32)
+    pc0 = jnp.zeros((n_lanes, llc_mod.NUM_CORES, 2), jnp.int32)
+    sampler = (np.arange(num_sets) & ((1 << cfg.sampler_shift) - 1)) == 0
+    sampler_p = jnp.asarray(sampler)[bg.perm]               # [L, S]
+
+    def permute(x, idx):
+        return jnp.take_along_axis(
+            x, idx.astype(jnp.int32)[:, :, None], axis=1)
+
+    carry0 = (permute(states.tags, bg.perm), permute(states.lru, bg.perm),
+              permute(states.owner, bg.perm), permute(states.sig, bg.perm),
+              permute(states.reused, bg.perm), states.tick,
+              states.shct_core, states.shct_accel, stats0, pc0)
+
+    widths = [num_sets]
+    if dims.sparse_cap and dims.sparse_cap < num_sets:
+        widths.append(dims.sparse_cap)
+        if dims.sparse_cap > 64:
+            widths.append(64)
+
+    def cond(c):
+        return c[0] < max_r
+
+    def body(c):
+        r, carry = c[0], c[1]
+        line_r = jax.lax.dynamic_index_in_dim(bg.line_m, r, axis=1,
+                                              keepdims=False)
+        meta_r = jax.lax.dynamic_index_in_dim(bg.meta_m, r, axis=1,
+                                              keepdims=False)
+
+        def at_width(width):
+            def run(carry):
+                step = jax.vmap(
+                    lambda kn, cr, lr, mr, sp:
+                    _prefix_round_step_fn(cfg, kn, width)(cr, (lr, mr, sp)))
+                return step(knobs, carry, line_r, meta_r, sampler_p)
+            return run
+
+        if len(widths) == 1:
+            carry = at_width(num_sets)(carry)
+        else:
+            cnt = jnp.max(jax.lax.dynamic_index_in_dim(
+                bg.counts, r, axis=1, keepdims=False))
+            run = at_width(widths[0])
+            for wdt in widths[1:]:
+                run = (lambda run_wide, wdt:
+                       lambda carry: jax.lax.cond(
+                           cnt > wdt, run_wide, at_width(wdt), carry)
+                       )(run, wdt)
+            carry = run(carry)
+        return (r + 1, carry)
+
+    _, carry = jax.lax.while_loop(cond, body, (jnp.int32(0), carry0))
+    (tags_p, lru_p, owner_p, sig_p, reused_p, tick, shct_core,
+     shct_accel, stats, percore) = carry
+    states = llc_mod.LLCState(
+        permute(tags_p, bg.inv_perm), permute(lru_p, bg.inv_perm),
+        permute(owner_p, bg.inv_perm), permute(sig_p, bg.inv_perm),
+        permute(reused_p, bg.inv_perm), tick, shct_core, shct_accel)
+    return states, stats, percore
+
+
+class _Begin(NamedTuple):
+    """Per-lane outputs of the admission/threshold/event-build half."""
+    step_active: jnp.ndarray
+    arrived: jnp.ndarray
+    accel_prio: jnp.ndarray
+    n_a: jnp.ndarray
+    n_c: jnp.ndarray
+    shed: jnp.ndarray
+    ri_th: jnp.ndarray
+    rc_th: jnp.ndarray
+    special: jnp.ndarray
+    req_out: jnp.ndarray
+    line_m: jnp.ndarray       # [R, S] permuted (depth-major) columns
+    meta_m: jnp.ndarray       # [R, S] permuted columns
+    counts: jnp.ndarray       # [R] active sets per round
+    perm: jnp.ndarray         # [S] column -> set
+    inv_perm: jnp.ndarray     # [S] set -> column
+    n_rounds: jnp.ndarray
+    ovf: jnp.ndarray
+
+
+# ---------------------------------------------------------------------------
+# one fused epoch: vmapped begin half -> batch round loop -> vmapped finish
+# ---------------------------------------------------------------------------
+def _begin_lane(dims: FusedDims, sh: SharedConsts, stop_epoch, lc, cy
+                ) -> _Begin:
+    """Port of Lane.begin_epoch for one lane (the caller vmaps): epoch
+    arbitration, admission, APM thresholds, and the on-device round
+    build.  Integer results match the host's int() truncations exactly;
+    float intermediates replicate the host operation order at float64.
+    """
+    step_active = cy.active & (cy.epoch < stop_epoch)
+    f64 = jnp.float64
+
+    # ---- arbitration mode (begin_epoch) -------------------------------
+    arrived = cy.now >= cy.input_start
+    remaining = sh.m_total - cy.pos
+    req = sh.ma_global
+    done_rate = jnp.where(
+        arrived,
+        _div(cy.pos,
+             jnp.maximum(_div(cy.now - cy.input_start, sh.et, sh.zero),
+                         1.0), sh.zero), req)
+    flash_prio = lc.flash & (done_rate < req)
+    accel_prio = lc.arp | flash_prio
+
+    # ---- accelerator admission ----------------------------------------
+    can_issue = arrived & (remaining > 0)
+    miss_rate_a = jnp.maximum(1.0 - cy.hr_accel, 0.05)
+    dram_share = jnp.where(
+        accel_prio, sh.dram_cap,
+        jnp.maximum(sh.dram_cap - cy.cm_prev - cy.pf_prev, sh.dram_cap01))
+    demand_a = jnp.minimum(
+        jnp.minimum(remaining,
+                    _div(sh.mlp_et, jnp.maximum(cy.amal, 1.0), sh.zero)
+                    .astype(jnp.int64)),
+        jnp.minimum(_div(dram_share, miss_rate_a, sh.zero).astype(jnp.int64),
+                    jnp.int64(dims.accel_cap)))
+    demand_a = jnp.where(can_issue, demand_a, jnp.int64(0))
+
+    # ---- core demand / LLC bandwidth shedding -------------------------
+    n_c_dem = _div(sh.nominal * cy.ipc, sh.ipc0, sh.zero).astype(jnp.int64)  # [C]
+    core_sum = jnp.sum(n_c_dem)
+    total_demand = demand_a + core_sum
+    over_cap = total_demand > sh.llc_capacity
+    n_a_p = jnp.minimum(demand_a, sh.llc_capacity_int)
+    f_p = _div(sh.llc_capacity - n_a_p, jnp.maximum(core_sum, 1), sh.zero)
+    shed_p = jnp.minimum(f_p, 1.0)
+    f_f = _div(sh.llc_capacity, total_demand, sh.zero)
+    n_a_f = (demand_a * f_f).astype(jnp.int64)
+    n_a = jnp.where(over_cap,
+                    jnp.where(accel_prio, n_a_p, n_a_f), demand_a)
+    shed = jnp.where(over_cap,
+                     jnp.where(accel_prio, shed_p, f_f), f64(1.0))
+    n_c = (n_c_dem * shed).astype(jnp.int64)
+
+    # ---- HyDRA / APM epoch decision -----------------------------------
+    hcond = lc.hydra & can_issue
+    rt = jnp.maximum((cy.input_start + sh.deadline) - cy.now, sh.et)
+    elapsed = jnp.maximum(sh.deadline - rt, 0.0)
+    done = (sh.m_total - remaining) * sh.et
+    ma_past = jnp.where(elapsed >= sh.et, _div(done, elapsed, sh.zero),
+                        sh.ma_global)
+    mr_i = 1.0 - cy.hr_core
+    hc = mr_i > lc.mr_th
+    behind = ma_past < lc.behind_th
+    marg = jnp.where(hc & behind, lc.margin_high,
+                     jnp.where(hc | behind, lc.margin_low, f64(0.0)))
+    eff_rt = jnp.maximum(rt - _mulb(marg, sh.deadline, sh.zero), sh.et)
+    ma_i = _div(remaining, eff_rt, sh.zero) * sh.et
+    # Algorithm 1 threshold scaling: band index d in {6, 5..1, 0}
+    in_band = [(ma_i > lc.bands[k + 1]) & (ma_i <= lc.bands[k])
+               for k in range(1, 6)]
+    d = jnp.where(ma_i <= lc.bands[6], jnp.int64(6),
+                  sum(jnp.where(b, jnp.int64(k), jnp.int64(0))
+                      for k, b in zip(range(1, 6), in_band)))
+    d_f = d.astype(jnp.float64)
+    plus = (d == 0) & (ma_i > lc.bands[0])
+    t_a = jnp.where(d > 0,
+                    jnp.maximum(lc.t_a - _mulb(d_f, lc.delta_a, sh.zero),
+                                1.0),
+                    jnp.where(plus, lc.t_a + lc.delta_a, lc.t_a))   # [4]
+    t_b = jnp.where(d > 0, lc.t_b - _mulb(d_f, lc.delta_b, sh.zero), lc.t_b)
+    # Fig. 9 reuse-threshold selection
+    ma_hat = _div(sh.mlp_et, jnp.maximum(cy.amal, 1.0), sh.zero)
+    c4 = ma_hat > t_a[3] * ma_i
+    c3 = ma_hat > t_a[2] * ma_i
+    c2 = ma_hat > t_a[1] * ma_i
+    c1 = ma_hat > t_a[0] * ma_i
+    cb = ma_hat > t_b * ma_i
+    i64 = jnp.int64
+    ri_sel = jnp.where(c4, i64(-1), jnp.where(c3, i64(0), jnp.where(
+        c2, i64(1), jnp.where(c1, i64(2), i64(3)))))
+    rc_sel = jnp.where(c4, i64(4), jnp.where(c3, i64(3), jnp.where(
+        c2, i64(2), jnp.where(c1, i64(1), jnp.where(cb, i64(0), i64(-1))))))
+    sp_sel = (~c4) & (~c3) & (~c2) & (~c1) & cb
+    ri_th = jnp.where(hcond, ri_sel, cy.ri_th)
+    rc_th = jnp.where(hcond, rc_sel, cy.rc_th)
+    special = jnp.where(hcond, sp_sel, cy.special)
+    req_out = jnp.where(hcond, ma_i,
+                        jnp.where(arrived, sh.ma_global, f64(0.0)))
+
+    # ---- build the epoch event list (static segment layout) -----------
+    (line_m, meta_m, counts, perm, inv_perm, n_rounds,
+     ovf) = _build_rounds_device(
+        dims, sh, lc, n_a, n_c, cy.pos, cy.stream_pos,
+        ri_th, rc_th, special)
+    # frozen lanes contribute no rounds to the batch loop
+    n_rounds = jnp.where(step_active, n_rounds, jnp.int32(0))
+    counts = jnp.where(step_active, counts, jnp.int32(0))
+    return _Begin(step_active=step_active, arrived=arrived,
+                  accel_prio=accel_prio, n_a=n_a, n_c=n_c, shed=shed,
+                  ri_th=ri_th, rc_th=rc_th, special=special,
+                  req_out=req_out, line_m=line_m, meta_m=meta_m,
+                  counts=counts, perm=perm, inv_perm=inv_perm,
+                  n_rounds=n_rounds, ovf=ovf)
+
+
+def _finish_lane(dims: FusedDims, sh: SharedConsts, lc, cy, bg: _Begin,
+                 new_st, stats, percore):
+    """Port of Lane.finish_epoch for one lane (the caller vmaps): fluid
+    timing update, totals, progress bookkeeping — then a freeze select
+    so a frozen step is an identity on the carry."""
+    f64 = jnp.float64
+    step_active = bg.step_active
+    accel_prio = bg.accel_prio
+    n_a, n_c = bg.n_a, bg.n_c
+    shed = bg.shed
+    ri_th, rc_th, special = bg.ri_th, bg.rc_th, bg.special
+
+    # ---- fluid timing update (finish_epoch) ---------------------------
+    st64 = stats.astype(jnp.int64)
+    ch, cm, cb_ = st64[0], st64[1], st64[2]
+    ah, am, ab = st64[3], st64[4], st64[5]
+    awb, pf_fills = st64[6], st64[8]
+    hr_core = _div(ch, jnp.maximum(ch + cm, 1), sh.zero)
+    hr_accel = _div(ah, jnp.maximum(ah + am, 1), sh.zero)
+    llc_units = ((ch + cm + ah + am) - _mulb(0.7, cb_ + ab, sh.zero)
+                 - _mulb(0.3, awb, sh.zero))
+    rho_llc = _div(llc_units, sh.llc_capacity, sh.zero)
+    rho_a_llc = _div(ah + am, sh.llc_capacity, sh.zero)
+    dram_traffic = cm + am + pf_fills
+    w_dram_fifo = jnp.minimum(_queue_delay(sh, dram_traffic), sh.w_cap_dram)
+    rho_a_dram = jnp.minimum(_div(am, sh.dram_denom, sh.zero), 1.0)
+    # priority-arbitration branch
+    w_llc_a_p = jnp.minimum(_mg1(rho_a_llc, sh.s_llc, sh.zero), sh.w_cap_s)
+    prio = jnp.minimum(_div(1.0, jnp.maximum(1.0 - rho_a_llc, 1e-3),
+                            sh.zero), sh.prio_cap)
+    w_llc_c_p = jnp.minimum(_mg1(rho_llc, sh.s_llc, sh.zero) * prio,
+                            sh.w_cap_s_prio)
+    w_dram_a_p = jnp.minimum(_queue_delay(sh, am), sh.w_cap_dram)
+    prio_d = jnp.minimum(_div(1.0, jnp.maximum(1.0 - rho_a_dram, 1e-3),
+                              sh.zero), sh.prio_cap)
+    w_dram_c_p = jnp.minimum(w_dram_fifo * prio_d, sh.w_cap_dram_prio)
+    # FIFO branch
+    w_fifo = jnp.minimum(_mg1(rho_llc, sh.s_llc, sh.zero), sh.w_cap_s)
+    w_llc_a = jnp.where(accel_prio, w_llc_a_p, w_fifo)
+    w_llc_c = jnp.where(accel_prio, w_llc_c_p, w_fifo)
+    w_dram_a = jnp.where(accel_prio, w_dram_a_p, w_dram_fifo)
+    w_dram_c = jnp.where(accel_prio, w_dram_c_p, w_dram_fifo)
+    miss_lat_c = sh.hit_lat + w_llc_c + sh.dram_lat + w_dram_c
+    miss_lat_a = sh.hit_lat + w_llc_a + sh.dram_lat + w_dram_a
+    pc = percore[:dims.n_cores].astype(jnp.int64)
+    hk = _div(pc[:, 0], jnp.maximum(pc[:, 0] + pc[:, 1], 1), sh.zero)
+    amat = (_mulb(hk, sh.hit_lat + w_llc_c, sh.zero)
+            + _mulb(1 - hk, miss_lat_c, sh.zero))
+    stall = _div(sh.apkc1k * amat, 4.0, sh.zero)
+    ipc = _div(1.0, sh.inv_ipc0 + stall, sh.zero)
+    amal = jnp.where(
+        n_a > 0,
+        _mulb(hr_accel, sh.hit_lat + w_llc_a, sh.zero)
+        + _mulb(1 - hr_accel, miss_lat_a, sh.zero),
+        cy.amal)
+
+    # total_instr (sum * et accumulated) stays host-side: the write-back
+    # accumulates it from the per-epoch core_ipc outputs with the host's
+    # exact ops, keeping one more add-of-product off the device.
+    ipc_shed = ipc * shed + sh.zero
+    core_ipc_sum = _np_sum_order([ipc_shed[k] for k in range(dims.n_cores)])
+    totals = cy.totals + jnp.stack([ch, cm, cb_, ah, am, ab, n_a])
+    total_llc = cy.total_llc + llc_units
+    total_dram = cy.total_dram + dram_traffic
+
+    # ---- progress bookkeeping -----------------------------------------
+    now = cy.now + sh.et
+    pos2 = cy.pos + n_a
+    completed = (n_a > 0) & (pos2 >= sh.m_total)
+    comp_val = now - cy.input_start
+    completions = cy.completions.at[
+        jnp.where(completed, cy.input_idx, jnp.int64(dims.n_inputs))
+    ].set(comp_val, mode="drop")
+    input_idx = cy.input_idx + completed.astype(jnp.int64)
+    pos = jnp.where(completed, jnp.int64(0), pos2)
+    input_start = jnp.where(
+        completed, jnp.maximum(cy.input_start + sh.period, now),
+        cy.input_start)
+    epoch = cy.epoch + 1
+    active = (epoch < sh.max_epochs) & (input_idx < jnp.int64(dims.n_inputs))
+
+    new = FusedCarry(
+        st=new_st, active=active, hr_core=hr_core, hr_accel=hr_accel,
+        amal=amal, ipc=ipc,
+        stream_pos=cy.stream_pos + n_c, pos=pos, input_idx=input_idx,
+        input_start=input_start, now=now, ri_th=ri_th, rc_th=rc_th,
+        special=special, cm_prev=cm.astype(jnp.float64),
+        pf_prev=pf_fills.astype(jnp.float64), epoch=epoch,
+        completions=completions, totals=totals,
+        total_llc=total_llc, total_dram=total_dram,
+        overflow=cy.overflow | bg.ovf)
+    # freeze everything when the step didn't run
+    out_cy = jax.tree.map(
+        lambda a, b: jnp.where(step_active, a, b), new, cy)
+    out = StepOut(active=step_active, pos_before=cy.pos, n_a=n_a,
+                  req=bg.req_out, ri_th=ri_th, rc_th=rc_th,
+                  core_ipc=core_ipc_sum, amal=out_cy.amal)
+    return out_cy, out
+
+
+def _epoch_batch_step(dims: FusedDims, sh: SharedConsts, stop_epoch, lc, cy):
+    """One epoch of the whole lane batch: vmapped begin halves, one
+    batch-level round loop, vmapped finish halves."""
+    bg = jax.vmap(functools.partial(_begin_lane, dims, sh, stop_epoch)
+                  )(lc, cy)
+    new_st, stats, percore = _run_rounds_batch(dims, lc.knobs, cy.st, bg)
+    return jax.vmap(functools.partial(_finish_lane, dims, sh)
+                    )(lc, cy, bg, new_st, stats, percore)
+
+
+@functools.partial(jax.jit, static_argnums=0)
+def _superstep(dims: FusedDims, sh: SharedConsts, lc: LaneConsts,
+               carry: FusedCarry, stop_epoch):
+    """K epochs of the whole lane batch as one compiled device program."""
+    def body(c, _):
+        return _epoch_batch_step(dims, sh, stop_epoch, lc, c)
+    return jax.lax.scan(body, carry, None, length=dims.k_epochs)
+
+
+# ---------------------------------------------------------------------------
+# staging: host Lane objects -> device constants / carry
+# ---------------------------------------------------------------------------
+def lane_supported(lane: Lane) -> bool:
+    """Can this lane run through the fused engine?  The host path stays
+    authoritative for occupancy recording (a per-epoch state readback),
+    the core-traffic-free calibration runs, and any workload whose line
+    addresses exceed the engine's int32 staging range — ``auto`` routing
+    must degrade to the host loop for those, not crash in staging."""
+    i32max = np.iinfo(np.int32).max
+    return (lane.core_traffic and not lane.p.record_occupancy
+            and lane.n_cores <= llc_mod.NUM_CORES
+            and lane.m_total < i32max
+            # -1 headroom: DPCP prefetches stage line + 1
+            and (lane.m_total == 0
+                 or int(lane.tr.line.max()) < i32max - 1)
+            and all(s.size == 0 or int(s.max()) < i32max
+                    for s in lane.streams))
+
+
+def _i32(a: np.ndarray) -> np.ndarray:
+    a = np.asarray(a, np.int64)
+    if a.size and (a.min() < 0 or a.max() >= np.iinfo(np.int32).max):
+        raise ValueError("line addresses out of int32 device range")
+    return a.astype(np.int32)
+
+
+class _Staged:
+    """Everything the driver holds between super-steps."""
+
+    def __init__(self, lanes: List[Lane], k_epochs: int, max_rounds: int):
+        lane0 = lanes[0]
+        p = lane0.p
+        dram = lane0.dram
+        et = lane0.et
+        profiles = lane0.profiles
+        n_cores = lane0.n_cores
+        from . import cores as cores_mod
+        core_caps = tuple(
+            max(int(cores_mod.epoch_accesses(pr, pr.ipc0, et)), 0)
+            for pr in profiles)
+        num_sets = lane0.llc_cfg.num_sets
+        self.dims = FusedDims(
+            cfg=lane0.llc_cfg, n_lanes=len(lanes), n_cores=n_cores,
+            accel_cap=int(p.accel_epoch_cap), core_caps=core_caps,
+            has_dpcp=any(lane.policy.dpcp for lane in lanes),
+            n_inputs=int(p.n_inputs), k_epochs=int(k_epochs),
+            max_rounds=int(max_rounds),
+            sparse_cap=SPARSE_CAP if num_sets > SPARSE_CAP else 0)
+
+        tr = lane0.tr
+        wmax = max([s.shape[0] for s in lane0.streams] or [1])
+        streams = np.zeros((n_cores, wmax), np.int32)
+        for k, s in enumerate(lane0.streams):
+            streams[k, :s.shape[0]] = _i32(s)
+        self.sh = SharedConsts(
+            line=jnp.asarray(_i32(tr.line)),
+            write=jnp.asarray(np.asarray(tr.write, bool)),
+            layer=jnp.asarray(np.asarray(tr.layer, np.int32)),
+            streams=jnp.asarray(streams),
+            nominal=jnp.asarray(np.array(
+                [pr.apkc / 1000.0 * et for pr in profiles])),
+            apkc1k=jnp.asarray(np.array(
+                [pr.apkc / 1000.0 for pr in profiles])),
+            ipc0=jnp.asarray(np.array([pr.ipc0 for pr in profiles])),
+            inv_ipc0=jnp.asarray(np.array(
+                [1.0 / pr.ipc0 for pr in profiles])),
+            et=jnp.float64(et), m_total=jnp.int64(lane0.m_total),
+            max_epochs=jnp.int64(p.max_epochs),
+            deadline=jnp.float64(lane0.deadline),
+            period=jnp.float64(lane0.period),
+            ma_global=jnp.float64(lane0.apm.ma_global),
+            llc_capacity=jnp.float64(lane0.llc_capacity),
+            llc_capacity_int=jnp.int64(int(lane0.llc_capacity)),
+            s_llc=jnp.float64(lane0.s_llc),
+            w_cap_s=jnp.float64(p.w_cap * lane0.s_llc),
+            w_cap_s_prio=jnp.float64(p.w_cap * lane0.s_llc * p.prio_cap),
+            prio_cap=jnp.float64(p.prio_cap),
+            hit_lat=jnp.float64(p.llc_hit_lat),
+            dram_lat=jnp.float64(dram.latency_cycles),
+            dram_rate=jnp.float64(dram.rate),
+            dram_cap=jnp.float64(lane0.dram_cap),
+            dram_cap01=jnp.float64(0.1 * lane0.dram_cap),
+            dram_denom=jnp.float64(max(dram.rate * et, 1e-9)),
+            w_cap_dram=jnp.float64(p.w_cap * dram.latency_cycles),
+            w_cap_dram_prio=jnp.float64(
+                p.w_cap * dram.latency_cycles * p.prio_cap),
+            w_dram25=jnp.float64(25.0 * dram.latency_cycles),
+            mlp_et=jnp.float64(p.mlp_accel * et),
+            zero=jnp.float64(0.0))
+
+        self._wmax = wmax
+        self._m = tr.num_accesses
+        self._n_layers = len(tr.layer_names)
+        self.lc = self._stage_lanes(lanes)
+
+    def _stage_lanes(self, lanes: List[Lane]) -> LaneConsts:
+        n_l, m, n_c = len(lanes), self._m, len(lanes[0].profiles)
+        rc = np.zeros((n_l, m), np.int8)
+        ri = np.zeros((n_l, m), np.int8)
+        cold = np.zeros((n_l, max(self._n_layers, 1)))
+        afr = np.zeros((n_l, m), bool)
+        writes = np.zeros((n_l, n_c, self._wmax), bool)
+        mag = lanes[0].apm.ma_global
+        apm_cols = {k: np.zeros(n_l) for k in (
+            "margin_high", "margin_low", "mr_th", "behind_th",
+            "t_b", "delta_a", "delta_b")}
+        bands = np.zeros((n_l, 7))
+        t_a = np.zeros((n_l, 4))
+        switch = np.full(n_l, -1, np.int64)
+        for i, lane in enumerate(lanes):
+            if lane.clusters is not None:
+                rc[i] = lane.clusters["rc"]
+                ri[i] = lane.clusters["ri"]
+                cc = lane.clusters["cold_center"]
+                cold[i, :len(cc)] = cc
+            if lane.afr_hints is not None:
+                afr[i] = lane.afr_hints
+            for k, w in enumerate(lane.writes):
+                writes[i, k, :w.shape[0]] = w
+            ap = lane.apm.params
+            apm_cols["margin_high"][i] = ap.margin_high
+            apm_cols["margin_low"][i] = ap.margin_low
+            apm_cols["mr_th"][i] = ap.mr_threshold
+            apm_cols["behind_th"][i] = (1.0 + ap.alpha) * mag
+            apm_cols["t_b"][i] = ap.t_b
+            apm_cols["delta_a"][i] = ap.delta_a
+            apm_cols["delta_b"][i] = ap.delta_b
+            bands[i, 0] = (1.0 + ap.beta) * mag
+            for k in range(1, 7):
+                bands[i, k] = (1.0 - k * ap.beta) * mag
+            t_a[i] = (ap.t_a1, ap.t_a2, ap.t_a3, ap.t_a4)
+            pol = lane.policy
+            if pol.deadline_aware and not pol.hydra:
+                switch[i] = int(pol.asth_t * mag)
+        pols = [lane.policy for lane in lanes]
+        return LaneConsts(
+            arp=jnp.asarray([p.arbitration == "arp" for p in pols]),
+            flash=jnp.asarray([p.arbitration == "flash" for p in pols]),
+            hydra=jnp.asarray([p.hydra for p in pols]),
+            dpcp=jnp.asarray([p.dpcp for p in pols]),
+            accel_hint=jnp.asarray(
+                [p.accel_mode == llc_mod.A_HINT and lane.clusters is not None
+                 for p, lane in zip(pols, lanes)]),
+            accel_rand=jnp.asarray(
+                [p.accel_mode == llc_mod.A_RAND for p in pols]),
+            switch_point=jnp.asarray(switch),
+            knobs=llc_mod.lane_knobs([lane.llc_cfg for lane in lanes]),
+            rc=jnp.asarray(rc), ri=jnp.asarray(ri), cold=jnp.asarray(cold),
+            afr=jnp.asarray(afr), writes=jnp.asarray(writes),
+            margin_high=jnp.asarray(apm_cols["margin_high"]),
+            margin_low=jnp.asarray(apm_cols["margin_low"]),
+            mr_th=jnp.asarray(apm_cols["mr_th"]),
+            behind_th=jnp.asarray(apm_cols["behind_th"]),
+            bands=jnp.asarray(bands), t_a=jnp.asarray(t_a),
+            t_b=jnp.asarray(apm_cols["t_b"]),
+            delta_a=jnp.asarray(apm_cols["delta_a"]),
+            delta_b=jnp.asarray(apm_cols["delta_b"]))
+
+    def refresh_clusters(self, lanes: List[Lane]) -> None:
+        """Re-upload per-lane cluster tables (after an online retrain)."""
+        self.lc = self._stage_lanes(lanes)
+
+
+def _init_carry(lanes: List[Lane], states: llc_mod.LLCState,
+                n_inputs: int) -> FusedCarry:
+    """Build the device carry from the lanes' current host state (works
+    mid-run: the overflow fallback replays a stretch on the host and
+    resumes fused from whatever the lanes now hold)."""
+    n_l = len(lanes)
+    n_c = len(lanes[0].profiles)
+    comp = np.zeros((n_l, n_inputs))
+    for i, lane in enumerate(lanes):
+        comp[i, :len(lane.completions)] = lane.completions[:n_inputs]
+    col = np.array
+    return FusedCarry(
+        st=states,
+        active=jnp.asarray(col([lane.active for lane in lanes])),
+        hr_core=jnp.asarray(col([lane.hr_core for lane in lanes])),
+        hr_accel=jnp.asarray(col([lane.hr_accel for lane in lanes])),
+        amal=jnp.asarray(col([lane.amal for lane in lanes])),
+        ipc=jnp.asarray(np.stack(
+            [np.asarray(lane.ipc, np.float64) for lane in lanes])),
+        stream_pos=jnp.asarray(np.stack(
+            [np.asarray(lane.stream_pos, np.int64) for lane in lanes])),
+        pos=jnp.asarray(col([lane.pos for lane in lanes], np.int64)),
+        input_idx=jnp.asarray(col([lane.input_idx for lane in lanes],
+                                  np.int64)),
+        input_start=jnp.asarray(col([lane.input_start for lane in lanes])),
+        now=jnp.asarray(col([lane.now for lane in lanes])),
+        ri_th=jnp.asarray(col([lane.ri_th for lane in lanes], np.int64)),
+        rc_th=jnp.asarray(col([lane.rc_th for lane in lanes], np.int64)),
+        special=jnp.asarray(col([lane.special for lane in lanes], bool)),
+        cm_prev=jnp.asarray(col([lane.cm_prev for lane in lanes])),
+        pf_prev=jnp.asarray(col([lane.pf_prev for lane in lanes])),
+        epoch=jnp.asarray(col([lane.epoch for lane in lanes], np.int64)),
+        completions=jnp.asarray(comp),
+        totals=jnp.asarray(np.stack([np.array(
+            [lane.total_core_hits, lane.total_core_miss, lane.total_core_byp,
+             lane.total_accel_hits, lane.total_accel_miss,
+             lane.total_accel_byp, lane.total_accel_acc], np.int64)
+            for lane in lanes])),
+        total_llc=jnp.asarray(col([lane.total_llc for lane in lanes])),
+        total_dram=jnp.asarray(col([lane.total_dram for lane in lanes])),
+        overflow=jnp.zeros(n_l, bool))
+
+
+# ---------------------------------------------------------------------------
+# write-back / host fallback / driver
+# ---------------------------------------------------------------------------
+def _write_back(lanes: List[Lane], carry: FusedCarry, ys: StepOut) -> None:
+    """Sync an accepted super-step's results into the host Lane objects —
+    the exact fields (and python/numpy types) the sequential loop would
+    have produced, so ``Lane.result()`` and any later host epochs are
+    indistinguishable from a pure-host run."""
+    c = jax.tree.map(np.asarray, carry._replace(st=None))
+    y = jax.tree.map(np.asarray, ys)
+    for i, lane in enumerate(lanes):
+        steps = int(y.active[:, i].sum())
+        if steps == 0:
+            continue
+        lane.hr_core = float(c.hr_core[i])
+        lane.hr_accel = float(c.hr_accel[i])
+        lane.amal = float(c.amal[i])
+        # np.array (not asarray): views of jax buffers are read-only, and
+        # the host loop mutates these in place if it ever resumes
+        lane.ipc = np.array(c.ipc[i], np.float64)
+        lane.stream_pos = np.array(c.stream_pos[i], np.int64)
+        lane.pos = int(c.pos[i])
+        lane.input_idx = int(c.input_idx[i])
+        lane.input_start = float(c.input_start[i])
+        lane.now = float(c.now[i])
+        lane.ri_th = int(c.ri_th[i])
+        lane.rc_th = int(c.rc_th[i])
+        lane.special = bool(c.special[i])
+        lane.cm_prev = float(c.cm_prev[i])
+        lane.pf_prev = float(c.pf_prev[i])
+        lane.epoch = int(c.epoch[i])
+        lane.completions = [float(v) for v in
+                            c.completions[i][:lane.input_idx]]
+        (lane.total_core_hits, lane.total_core_miss, lane.total_core_byp,
+         lane.total_accel_hits, lane.total_accel_miss, lane.total_accel_byp,
+         lane.total_accel_acc) = (int(v) for v in c.totals[i])
+        lane.total_llc = float(c.total_llc[i])
+        lane.total_dram = float(c.total_dram[i])
+        h = lane.hist
+        et = lane.et
+        for t in range(steps):
+            h["accel_rate"].append(float(y.n_a[t, i]))
+            h["requirement"].append(float(y.req[t, i]))
+            h["ri_th"].append(float(y.ri_th[t, i]))
+            h["rc_th"].append(float(y.rc_th[t, i]))
+            h["core_ipc"].append(float(y.core_ipc[t, i]))
+            h["amal"].append(float(y.amal[t, i]))
+            # the host's total_instr accumulation, op for op
+            lane.total_instr += float(y.core_ipc[t, i] * et)
+            if lane._retrain_every is not None and y.n_a[t, i] > 0:
+                lane._win_ranges.append(
+                    (int(y.pos_before[t, i]),
+                     int(y.pos_before[t, i] + y.n_a[t, i])))
+
+
+def _host_stretch(lanes: List[Lane], states: llc_mod.LLCState,
+                  n_epochs: Optional[int]) -> llc_mod.LLCState:
+    """Advance the batch ``n_epochs`` epochs (None = to completion) on the
+    host path — per-lane event build + ``build_rounds`` chunking + the
+    static round engine, i.e. exactly ``sim.drive_lane``'s loop body
+    against the shared batched LLC states."""
+    e = 0
+    while (n_epochs is None or e < n_epochs) and \
+            any(lane.active for lane in lanes):
+        for i, lane in enumerate(lanes):
+            if not lane.active:
+                continue
+            st_i = jax.tree.map(lambda x: x[i], states)
+            ev = lane.begin_epoch()
+            stats = np.zeros(len(llc_mod.STAT_NAMES), np.int64)
+            percore = np.zeros((llc_mod.NUM_CORES, 2), np.int64)
+            if ev is not None:
+                line, meta = ev
+                for lm, mm in llc_mod.build_rounds(lane.llc_cfg, line, meta):
+                    st_i, st_c, pc_c = llc_mod.simulate_epoch(
+                        lane.llc_cfg, st_i, jnp.asarray(lm), jnp.asarray(mm))
+                    stats = stats + np.asarray(st_c)
+                    percore = percore + np.asarray(pc_c)
+            lane.finish_epoch(stats, percore, llc_state=st_i)
+            states = jax.tree.map(
+                lambda full, v: full.at[i].set(v), states, st_i)
+        e += 1
+    return states
+
+
+def _next_stop(lanes: List[Lane], max_epochs: int) -> int:
+    """First epoch the fused scan must not cross: the nearest online-LERN
+    retrain boundary of any lane (the refit runs on the host)."""
+    e = max((lane.epoch for lane in lanes if lane.active), default=0)
+    stop = max_epochs
+    for lane in lanes:
+        r = lane._retrain_every
+        if lane.active and r is not None:
+            stop = min(stop, e + r - e % r)
+    return stop
+
+
+def drive_lanes_fused(lanes: List[Lane], states=None,
+                      k_epochs: int = DEFAULT_SUPERSTEP,
+                      max_rounds: int = DEFAULT_MAX_ROUNDS) -> None:
+    """Drive a geometry-compatible batch of lanes to completion through
+    the fused device engine, super-step by super-step.
+
+    Bitwise-equivalent to ``sim.drive_lane`` per lane on the integer LLC
+    stats (and float-identical on the timing metrics in practice); falls
+    back to the host path for super-steps that overflow the static round
+    capacity, going host-sticky after two consecutive overflows.
+    """
+    assert all(lane_supported(lane) for lane in lanes)
+    max_epochs = int(lanes[0].p.max_epochs)
+    with enable_x64():
+        staged = _Staged(lanes, k_epochs, max_rounds)
+        if states is None:
+            states = llc_mod.stack_states(staged.dims.cfg, len(lanes))
+        carry = _init_carry(lanes, states, staged.dims.n_inputs)
+    overflows = 0
+    while any(lane.active for lane in lanes):
+        stop = _next_stop(lanes, max_epochs)
+        epochs_before = [lane.epoch for lane in lanes]
+        with enable_x64():
+            new_carry, ys = _superstep(staged.dims, staged.sh, staged.lc,
+                                       carry, jnp.int64(stop))
+            overflowed = bool(np.asarray(new_carry.overflow).any())
+        if overflowed:
+            # roll the whole super-step back — the lanes were not
+            # touched and the old carry is still live.  First escalate
+            # the static round capacity (a re-jit, amortized over the
+            # rest of the run); past the host's largest bucket, replay
+            # the stretch on the host path, which chunks arbitrarily
+            # hot sets, and go host-sticky if that keeps happening.
+            if staged.dims.max_rounds < MAX_ROUNDS_CAP:
+                staged.dims = dataclasses.replace(
+                    staged.dims,
+                    max_rounds=min(staged.dims.max_rounds * 2,
+                                   MAX_ROUNDS_CAP))
+                continue
+            overflows += 1
+            e = max((lane.epoch for lane in lanes if lane.active),
+                    default=0)
+            n_host = None if overflows >= 2 else min(k_epochs, stop - e)
+            states = _host_stretch(lanes, carry.st, n_host)
+            if not any(lane.active for lane in lanes):
+                return
+            with enable_x64():
+                staged.refresh_clusters(lanes)
+                carry = _init_carry(lanes, states, staged.dims.n_inputs)
+            continue
+        overflows = 0
+        _write_back(lanes, new_carry, ys)
+        carry = new_carry._replace(
+            overflow=jnp.zeros(len(lanes), bool))
+        # online-LERN boundaries land exactly at the super-step edge
+        # (_next_stop): run the host refit hook and re-upload the tables
+        retrained = False
+        for i, lane in enumerate(lanes):
+            r = lane._retrain_every
+            if (r is not None and lane.epoch > epochs_before[i]
+                    and lane.epoch % r == 0):
+                lane._online_retrain()
+                retrained = True
+        if retrained:
+            with enable_x64():
+                staged.refresh_clusters(lanes)

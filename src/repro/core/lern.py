@@ -311,33 +311,16 @@ def train(trace: Trace, hash_fn: Optional[Callable] = None,
     return LernModel.from_layers(layers, hash_fn=hash_fn)
 
 
-def train_model_batched(trace: Trace, hash_fn: Optional[Callable] = None,
-                        seed: int = 0,
-                        use_kernel: Optional[bool] = None) -> LernModel:
-    """Device-resident trainer: the whole model as two device programs.
+def _fit_flat(lines_all: np.ndarray, layer_all: np.ndarray, n_l: int,
+              key_seeds: List[int], use_kernel: Optional[bool]):
+    """Shared flat-trace fit core of the batched trainers.
 
-    Program 1 (``reuse.reuse_features_flat``) extracts every layer's
-    integer feature tables from the *flat* concatenated trace — one
-    composite (layer, line) sort, RI-binning through the ``ri_histogram``
-    Pallas kernel (an elementwise pass, so the kernel runs even on
-    interpret backends) — padded to the trace length, not layers x
-    max-layer.  Program 2 (``_fit_groups``) runs every layer's two masked
-    k-means fits as one jitted call, layers grouped into power-of-two
-    capacity buckets (``use_kernel``: None = Pallas assignment where it
-    compiles).  No per-layer Python k-means loop; only the O(k)-sized
-    semantic annotation runs on the host.  Bitwise-equal to ``train`` on
-    the cluster tables (the float pipeline is the shared ``_fit_layer`` at
-    identical padded shapes)."""
-    lines_all = np.asarray(trace.line, np.int64)
-    layer_all = np.asarray(trace.layer, np.int64)
-    if np.any(np.diff(layer_all) < 0):
-        # flat extraction needs each layer contiguous; a stable sort by
-        # layer preserves within-layer order (exact same reuse intervals)
-        order = np.argsort(layer_all, kind="stable")
-        lines_all, layer_all = lines_all[order], layer_all[order]
-    if hash_fn is not None:
-        lines_all = hash_fn(lines_all)
-    n_l = max(len(trace.layer_names), 1)
+    One ``reuse_features_flat`` extraction over the concatenated trace
+    (``layer_all`` non-decreasing, 0..n_l-1) and one ``_fit_groups``
+    dispatch over all layers bucketed by capacity; ``key_seeds[li]``
+    seeds layer li's k-means draws.  Returns everything the assembly
+    step needs: (uniq_f, f_ri_f, f_rc_f, n_uniq, offs, per_layer,
+    group_of, fits)."""
     m = lines_all.shape[0]
     m_pad = max(8, ((m + 4095) // 4096) * 4096)
     lines32 = np.full(m_pad, int(PAD_LINE), np.int32)
@@ -355,7 +338,7 @@ def train_model_batched(trace: Trace, hash_fn: Optional[Callable] = None,
     offs = np.concatenate([[0], np.cumsum(n_uniq)])
 
     # --- host: bucket layers by fit capacity (integer work, O(N)) ----------
-    per_layer = []  # (li, multi_mask, n_multi, cap)
+    per_layer = []  # (multi_mask, n_multi)
     buckets: Dict[int, List[int]] = {}
     for li in range(n_l):
         fl = f_rc_f[offs[li]:offs[li + 1]]
@@ -379,15 +362,23 @@ def train_model_batched(trace: Trace, hash_fn: Optional[Callable] = None,
             g_ri[gi, :nm] = f_ri_f[sl][multi]
             g_rc[gi, :nm] = f_rc_f[sl][multi]
             g_nm[gi] = nm
-            keys[gi] = np.asarray(jax.random.PRNGKey(seed + li))
+            keys[gi] = np.asarray(jax.random.PRNGKey(key_seeds[li]))
             group_of[li] = (len(groups), gi)
         groups.append((jnp.asarray(g_ri), jnp.asarray(g_rc),
                        jnp.asarray(g_nm), jnp.asarray(keys)))
 
     # --- device program 2: all fits in one jitted call ---------------------
     fits = _fit_groups(tuple(groups), use_kernel=use_kernel)
+    return uniq_f, f_ri_f, f_rc_f, n_uniq, offs, per_layer, group_of, fits
 
-    # --- host: annotation + table assembly (O(L * k)) ----------------------
+
+def _assemble(flat, lo: int, hi: int,
+              hash_fn: Optional[Callable]) -> LernModel:
+    """Build the LernModel for layer range [lo, hi) of a flat fit."""
+    uniq_f, f_ri_f, f_rc_f, n_uniq_all, offs, per_layer, group_of, \
+        fits = flat
+    n_l = hi - lo
+    n_uniq = n_uniq_all[lo:hi]
     n_tab = _bucket(int(n_uniq.max(initial=1)))
     uniq = np.full((n_l, n_tab), int(PAD_LINE), np.int64)
     rc = np.full((n_l, n_tab), -1, np.int8)
@@ -395,22 +386,98 @@ def train_model_batched(trace: Trace, hash_fn: Optional[Callable] = None,
     rc_c = np.zeros((n_l, 4), np.float32)
     ri_c = np.zeros((n_l, 4, NUM_RI_BINS), np.float32)
     features: List[np.ndarray] = []
-    for li in range(n_l):
-        nu = int(n_uniq[li])
+    for li in range(lo, hi):
+        k = li - lo
+        nu = int(n_uniq_all[li])
         multi, nm = per_layer[li]
         sl = slice(offs[li], offs[li + 1])
-        uniq[li, :nu] = uniq_f[sl]
+        uniq[k, :nu] = uniq_f[sl]
         features.append(f_ri_f[sl][multi].astype(np.int64))
         if li not in group_of:
             continue
         g, gi = group_of[li]
         ann = _annotate(jax.tree.map(lambda a, i=gi: a[i], fits[g]), nm)
-        rc[li, :nu][multi] = ann["rc_label"].astype(np.int8)
-        ri[li, :nu][multi] = ann["ri_label"].astype(np.int8)
-        rc_c[li], ri_c[li] = ann["rc_centers"], ann["ri_centers"]
+        rc[k, :nu][multi] = ann["rc_label"].astype(np.int8)
+        ri[k, :nu][multi] = ann["ri_label"].astype(np.int8)
+        rc_c[k], ri_c[k] = ann["rc_centers"], ann["ri_centers"]
     return LernModel(uniq=uniq, rc_cluster=rc, ri_cluster=ri,
                      n_uniq=n_uniq, rc_centers=rc_c, ri_centers=ri_c,
                      features_ri=features, hash_fn=hash_fn)
+
+
+def _layer_sorted(trace: Trace):
+    """(lines, layer) int64 arrays with each layer contiguous; a stable
+    sort by layer preserves within-layer order (exact reuse intervals)."""
+    lines = np.asarray(trace.line, np.int64)
+    layer = np.asarray(trace.layer, np.int64)
+    if np.any(np.diff(layer) < 0):
+        order = np.argsort(layer, kind="stable")
+        lines, layer = lines[order], layer[order]
+    return lines, layer
+
+
+def train_model_batched(trace: Trace, hash_fn: Optional[Callable] = None,
+                        seed: int = 0,
+                        use_kernel: Optional[bool] = None) -> LernModel:
+    """Device-resident trainer: the whole model as two device programs.
+
+    Program 1 (``reuse.reuse_features_flat``) extracts every layer's
+    integer feature tables from the *flat* concatenated trace — one
+    composite (layer, line) sort, RI-binning through the ``ri_histogram``
+    Pallas kernel (an elementwise pass, so the kernel runs even on
+    interpret backends) — padded to the trace length, not layers x
+    max-layer.  Program 2 (``_fit_groups``) runs every layer's two masked
+    k-means fits as one jitted call, layers grouped into power-of-two
+    capacity buckets (``use_kernel``: None = Pallas assignment where it
+    compiles).  No per-layer Python k-means loop; only the O(k)-sized
+    semantic annotation runs on the host.  Bitwise-equal to ``train`` on
+    the cluster tables (the float pipeline is the shared ``_fit_layer`` at
+    identical padded shapes)."""
+    lines_all, layer_all = _layer_sorted(trace)
+    if hash_fn is not None:
+        lines_all = hash_fn(lines_all)
+    n_l = max(len(trace.layer_names), 1)
+    flat = _fit_flat(lines_all, layer_all, n_l,
+                     [seed + li for li in range(n_l)], use_kernel)
+    return _assemble(flat, 0, n_l, hash_fn)
+
+
+def train_family_batched(traces: List[Trace],
+                         hash_fn: Optional[Callable] = None,
+                         seed: int = 0,
+                         use_kernel: Optional[bool] = None
+                         ) -> List[LernModel]:
+    """Train several configs' LERN models in ONE device dispatch pair.
+
+    The config1-class tiny workloads are host-bound when trained one at
+    a time (bench_lern.json speedup < 1: the two dispatches cost more
+    than the work) — so concatenate every trace with offset layer ids
+    into one flat extraction, and let the capacity buckets mix all
+    configs' layers in one ``_fit_groups`` call.  Each returned model is
+    **bitwise-identical** to ``train_model_batched(traces[i], ...)``:
+    per-layer integer features are position-exact under concatenation,
+    bucket rows are independent under vmap at the same capacity, and
+    each layer keeps its own-config k-means key ``seed + local_layer``
+    (tests/test_lern_batched.py pins this), so the per-config caches are
+    interchangeable."""
+    n_ls = [max(len(tr.layer_names), 1) for tr in traces]
+    bounds = np.concatenate([[0], np.cumsum(n_ls)])
+    lines_parts, layer_parts, seeds = [], [], []
+    for ci, tr in enumerate(traces):
+        lines, layer = _layer_sorted(tr)
+        lines_parts.append(lines)
+        layer_parts.append(layer + bounds[ci])
+        seeds.extend(seed + li for li in range(n_ls[ci]))
+    lines_all = np.concatenate(lines_parts) if traces else np.zeros(0,
+                                                                    np.int64)
+    layer_all = np.concatenate(layer_parts) if traces else np.zeros(0,
+                                                                    np.int64)
+    if hash_fn is not None and lines_all.size:
+        lines_all = hash_fn(lines_all)
+    flat = _fit_flat(lines_all, layer_all, int(bounds[-1]), seeds,
+                     use_kernel)
+    return [_assemble(flat, int(bounds[ci]), int(bounds[ci + 1]), hash_fn)
+            for ci in range(len(traces))]
 
 
 def train_host_numpy(trace: Trace, hash_fn: Optional[Callable] = None,

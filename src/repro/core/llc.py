@@ -210,132 +210,160 @@ def _const_knobs(cfg: LLCConfig) -> LaneKnobs:
         accel_ways=jnp.asarray(_mask_to_vec(cfg.accel_way_mask, w)))
 
 
-def _scan_rounds(cfg: LLCConfig, knobs: LaneKnobs, state: LLCState,
-                 line_m: jnp.ndarray, meta_m: jnp.ndarray
-                 ) -> Tuple[LLCState, jnp.ndarray, jnp.ndarray]:
-    """One lane's epoch: lax.scan of the round transition.  Policy knobs
-    arrive as (possibly traced) values; with constants XLA folds the
-    selects back to the static single-policy kernel."""
+def round_transition(cfg: LLCConfig, knobs: LaneKnobs, sampler_j,
+                     rows, shct, line, meta, tick):
+    """THE per-round LLC transition on [C, W] state rows — the single
+    source of truth shared by every engine: the static/lane-batched
+    epoch scans below apply it to the full [S, W] state, and the fused
+    epoch loop (core/fused.py) applies it to a depth-major prefix slice
+    with the permuted sampler row riding along as data.
+
+    ``rows`` is ``(tags, lru, owner, sig, reused)``; ``shct`` is
+    ``(shct_core, shct_accel)``; ``sampler_j`` is the bool sampler-set
+    mask for the same rows; ``tick`` is the already-advanced round tick.
+    Returns ``(new_rows, new_shct, stats_upd, percore_upd)``.
+    """
+    tags, lru, owner, sig, reused = rows
+    shct_core0, shct_accel0 = shct
     w = cfg.ways
     core_ways = knobs.core_ways
     accel_ways = knobs.accel_ways
     cmax = cfg.ship.counter_max
     imax = jnp.iinfo(jnp.int32).max
     wr = jnp.arange(w, dtype=jnp.int32)
-
-    sampler = (np.arange(cfg.num_sets) & ((1 << cfg.sampler_shift) - 1)) == 0
-    sampler_j = jnp.asarray(sampler)
     accel_ship = knobs.accel_mode == A_SHIP
     accel_none = knobs.accel_mode == A_NONE
     shared = knobs.shared_predictor
 
+    valid = (meta & M_VALID) != 0
+    is_accel = (meta & M_ACCEL) != 0
+    write = (meta & M_WRITE) != 0
+    hint = (meta & M_HINT) != 0
+    prefetch = (meta & M_PREFETCH) != 0
+    dlok = (meta & M_DLOK) != 0
+    src = (meta >> M_SRC_SHIFT) & 0x7
+
+    hit_vec = (tags == line[:, None]) & (tags != -1)         # [C, W]
+    hit = jnp.any(hit_vec, 1) & valid
+    way_hit = jnp.argmax(hit_vec, 1)
+
+    sig_e = ship_mod.signature(line, cfg.ship)
+    pred_dead_core = shct_core0[sig_e] == 0
+    pred_dead_accel = jnp.where(shared, shct_core0[sig_e],
+                                shct_accel0[sig_e]) == 0
+
+    byp_accel = jnp.where(accel_ship, pred_dead_accel,
+                          jnp.where(accel_none, False, hint))
+    byp_accel = byp_accel & dlok
+    byp_core = pred_dead_core & knobs.core_bypass
+    bypass = jnp.where(is_accel, byp_accel, byp_core) & valid & ~prefetch
+    # SHIP-driven bypasses never apply in observer (sampler) sets;
+    # LERN/random hints are unaffected (offline predictions).
+    ship_driven = jnp.where(is_accel, accel_ship, knobs.core_bypass)
+    bypass = bypass & ~(sampler_j & ship_driven)
+
+    # --- hit path ----------------------------------------------------
+    inval = is_accel & write & bypass & hit
+    served_hit = hit & ~inval
+    # --- miss path -----------------------------------------------------
+    do_insert = (~hit) & (~bypass) & valid
+    allowed = jnp.where((is_accel | prefetch)[:, None],
+                        accel_ways[None, :], core_ways[None, :])
+    empty = (tags == -1) & allowed
+    has_empty = jnp.any(empty, 1)
+    first_empty = jnp.argmax(empty, 1)
+    lru_key = jnp.where(allowed, lru, imax)
+    victim_lru = jnp.argmin(lru_key, 1)
+    victim = jnp.where(has_empty, first_empty, victim_lru).astype(jnp.int32)
+    vic_tag = jnp.take_along_axis(tags, victim[:, None], 1)[:, 0]
+    vic_reused = jnp.take_along_axis(reused, victim[:, None], 1)[:, 0]
+    vic_sig = jnp.take_along_axis(sig, victim[:, None], 1)[:, 0]
+    vic_owner = jnp.take_along_axis(owner, victim[:, None], 1)[:, 0]
+    evict_valid = do_insert & ~has_empty & (vic_tag != -1)
+
+    # --- state update (one-hot masks over ways) ------------------------
+    upd_way = jnp.where(served_hit, way_hit, victim)
+    onehot = upd_way[:, None] == wr[None, :]                 # [C, W]
+    ins_mask = onehot & do_insert[:, None]
+    inval_mask = (way_hit[:, None] == wr[None, :]) & inval[:, None]
+    touch_mask = onehot & (served_hit | do_insert)[:, None]
+
+    new_tags = jnp.where(inval_mask, -1,
+                         jnp.where(ins_mask, line[:, None], tags))
+    new_lru = jnp.where(touch_mask, tick, lru)
+    new_owner = jnp.where(ins_mask, is_accel[:, None].astype(jnp.int32),
+                          owner)
+    new_sig = jnp.where(ins_mask, sig_e[:, None], sig)
+    new_reused = jnp.where(onehot & (served_hit & ~prefetch)[:, None],
+                           True,
+                           jnp.where(ins_mask, False, reused))
+
+    # --- SHIP table updates (batched per round) -------------------------
+    hit_sig = jnp.take_along_axis(sig, way_hit[:, None], 1)[:, 0]
+    hit_owner = jnp.take_along_axis(owner, way_hit[:, None], 1)[:, 0]
+    inc = served_hit & ~prefetch & sampler_j
+    dec = evict_valid & ~vic_reused & sampler_j
+    upd_idx = jnp.where(inc, hit_sig, vic_sig)
+    delta = jnp.where(inc, 1, jnp.where(dec, -1, 0))
+    own_accel = jnp.where(inc, hit_owner, vic_owner) == 1
+    to_accel_tbl = own_accel & jnp.logical_not(shared)
+    shct_core = jnp.clip(
+        shct_core0.at[upd_idx].add(
+            jnp.where(to_accel_tbl, 0, delta)), 0, cmax)
+    shct_accel = jnp.clip(
+        shct_accel0.at[upd_idx].add(
+            jnp.where(to_accel_tbl, delta, 0)), 0, cmax)
+
+    v = valid & ~prefetch
+    ca = is_accel
+    upd = jnp.stack([
+        jnp.sum(v & ~ca & served_hit), jnp.sum(v & ~ca & ~hit),
+        jnp.sum(v & ~ca & ~hit & bypass),
+        jnp.sum(v & ca & served_hit), jnp.sum(v & ca & ~served_hit),
+        jnp.sum(v & ca & bypass & ~served_hit),
+        jnp.sum(v & ca & write & bypass), jnp.sum(evict_valid),
+        jnp.sum(valid & prefetch & do_insert), jnp.sum(inval),
+    ]).astype(jnp.int32)
+    pc_h = jnp.zeros(NUM_CORES, jnp.int32).at[src].add(
+        (v & ~ca & served_hit).astype(jnp.int32))
+    pc_m = jnp.zeros(NUM_CORES, jnp.int32).at[src].add(
+        (v & ~ca & ~hit).astype(jnp.int32))
+    return ((new_tags, new_lru, new_owner, new_sig, new_reused),
+            (shct_core, shct_accel), upd, jnp.stack([pc_h, pc_m], 1))
+
+
+def round_step_fn(cfg: LLCConfig, knobs: LaneKnobs):
+    """``round_transition`` wrapped as a ``(carry, ev) -> (carry, None)``
+    scan step over the full [S, W] state, with the sampler-set mask
+    baked in by set index — the form the static and lane-batched epoch
+    engines below consume."""
+    sampler = (np.arange(cfg.num_sets) & ((1 << cfg.sampler_shift) - 1)) == 0
+    sampler_j = jnp.asarray(sampler)
+
     def round_step(carry, ev):
         st, stats, percore = carry
         line, meta = ev                      # [S] each
-        valid = (meta & M_VALID) != 0
-        is_accel = (meta & M_ACCEL) != 0
-        write = (meta & M_WRITE) != 0
-        hint = (meta & M_HINT) != 0
-        prefetch = (meta & M_PREFETCH) != 0
-        dlok = (meta & M_DLOK) != 0
-        src = (meta >> M_SRC_SHIFT) & 0x7
-
-        hit_vec = (st.tags == line[:, None]) & (st.tags != -1)   # [S, W]
-        hit = jnp.any(hit_vec, 1) & valid
-        way_hit = jnp.argmax(hit_vec, 1)
-
-        sig_e = ship_mod.signature(line, cfg.ship)
-        pred_dead_core = st.shct_core[sig_e] == 0
-        pred_dead_accel = jnp.where(shared, st.shct_core[sig_e],
-                                    st.shct_accel[sig_e]) == 0
-
-        byp_accel = jnp.where(accel_ship, pred_dead_accel,
-                              jnp.where(accel_none, False, hint))
-        byp_accel = byp_accel & dlok
-        byp_core = pred_dead_core & knobs.core_bypass
-        bypass = jnp.where(is_accel, byp_accel, byp_core) & valid & ~prefetch
-        # SHIP-driven bypasses never apply in observer (sampler) sets;
-        # LERN/random hints are unaffected (offline predictions).
-        ship_driven = jnp.where(is_accel, accel_ship, knobs.core_bypass)
-        bypass = bypass & ~(sampler_j & ship_driven)
-
-        # --- hit path ----------------------------------------------------
-        inval = is_accel & write & bypass & hit
-        served_hit = hit & ~inval
-        # --- miss path -----------------------------------------------------
-        do_insert = (~hit) & (~bypass) & valid
-        allowed = jnp.where((is_accel | prefetch)[:, None],
-                            accel_ways[None, :], core_ways[None, :])
-        empty = (st.tags == -1) & allowed
-        has_empty = jnp.any(empty, 1)
-        first_empty = jnp.argmax(empty, 1)
-        lru_key = jnp.where(allowed, st.lru, imax)
-        victim_lru = jnp.argmin(lru_key, 1)
-        victim = jnp.where(has_empty, first_empty, victim_lru).astype(jnp.int32)
-        vic_tag = jnp.take_along_axis(st.tags, victim[:, None], 1)[:, 0]
-        vic_reused = jnp.take_along_axis(st.reused, victim[:, None], 1)[:, 0]
-        vic_sig = jnp.take_along_axis(st.sig, victim[:, None], 1)[:, 0]
-        vic_owner = jnp.take_along_axis(st.owner, victim[:, None], 1)[:, 0]
-        evict_valid = do_insert & ~has_empty & (vic_tag != -1)
-
-        # --- state update (one-hot masks over ways) ------------------------
         tick = st.tick + 1
-        upd_way = jnp.where(served_hit, way_hit, victim)
-        onehot = upd_way[:, None] == wr[None, :]                 # [S, W]
-        ins_mask = onehot & do_insert[:, None]
-        inval_mask = (way_hit[:, None] == wr[None, :]) & inval[:, None]
-        touch_mask = onehot & (served_hit | do_insert)[:, None]
+        rows, shct, upd, pc = round_transition(
+            cfg, knobs, sampler_j,
+            (st.tags, st.lru, st.owner, st.sig, st.reused),
+            (st.shct_core, st.shct_accel), line, meta, tick)
+        new_st = LLCState(*rows, tick, *shct)
+        return (new_st, stats + upd, percore + pc), None
 
-        new_tags = jnp.where(inval_mask, -1,
-                             jnp.where(ins_mask, line[:, None], st.tags))
-        new_lru = jnp.where(touch_mask, tick, st.lru)
-        new_owner = jnp.where(ins_mask, is_accel[:, None].astype(jnp.int32),
-                              st.owner)
-        new_sig = jnp.where(ins_mask, sig_e[:, None], st.sig)
-        new_reused = jnp.where(onehot & (served_hit & ~prefetch)[:, None],
-                               True,
-                               jnp.where(ins_mask, False, st.reused))
+    return round_step
 
-        # --- SHIP table updates (batched per round) -------------------------
-        hit_sig = jnp.take_along_axis(st.sig, way_hit[:, None], 1)[:, 0]
-        hit_owner = jnp.take_along_axis(st.owner, way_hit[:, None], 1)[:, 0]
-        inc = served_hit & ~prefetch & sampler_j
-        dec = evict_valid & ~vic_reused & sampler_j
-        upd_idx = jnp.where(inc, hit_sig, vic_sig)
-        delta = jnp.where(inc, 1, jnp.where(dec, -1, 0))
-        own_accel = jnp.where(inc, hit_owner, vic_owner) == 1
-        to_accel_tbl = own_accel & jnp.logical_not(shared)
-        shct_core = jnp.clip(
-            st.shct_core.at[upd_idx].add(
-                jnp.where(to_accel_tbl, 0, delta)), 0, cmax)
-        shct_accel = jnp.clip(
-            st.shct_accel.at[upd_idx].add(
-                jnp.where(to_accel_tbl, delta, 0)), 0, cmax)
 
-        new_st = LLCState(new_tags, new_lru, new_owner, new_sig, new_reused,
-                          tick, shct_core, shct_accel)
-
-        v = valid & ~prefetch
-        ca = is_accel
-        upd = jnp.stack([
-            jnp.sum(v & ~ca & served_hit), jnp.sum(v & ~ca & ~hit),
-            jnp.sum(v & ~ca & ~hit & bypass),
-            jnp.sum(v & ca & served_hit), jnp.sum(v & ca & ~served_hit),
-            jnp.sum(v & ca & bypass & ~served_hit),
-            jnp.sum(v & ca & write & bypass), jnp.sum(evict_valid),
-            jnp.sum(valid & prefetch & do_insert), jnp.sum(inval),
-        ]).astype(jnp.int32)
-        pc_h = jnp.zeros(NUM_CORES, jnp.int32).at[src].add(
-            (v & ~ca & served_hit).astype(jnp.int32))
-        pc_m = jnp.zeros(NUM_CORES, jnp.int32).at[src].add(
-            (v & ~ca & ~hit).astype(jnp.int32))
-        return (new_st, stats + upd,
-                percore + jnp.stack([pc_h, pc_m], 1)), None
-
+def _scan_rounds(cfg: LLCConfig, knobs: LaneKnobs, state: LLCState,
+                 line_m: jnp.ndarray, meta_m: jnp.ndarray
+                 ) -> Tuple[LLCState, jnp.ndarray, jnp.ndarray]:
+    """One lane's epoch: lax.scan of the round transition.  Policy knobs
+    arrive as (possibly traced) values; with constants XLA folds the
+    selects back to the static single-policy kernel."""
     stats0 = jnp.zeros(len(STAT_NAMES), jnp.int32)
     pc0 = jnp.zeros((NUM_CORES, 2), jnp.int32)
     (state, stats, percore), _ = jax.lax.scan(
-        round_step, (state, stats0, pc0), (line_m, meta_m))
+        round_step_fn(cfg, knobs), (state, stats0, pc0), (line_m, meta_m))
     return state, stats, percore
 
 
@@ -367,10 +395,15 @@ def simulate_epoch_lanes(cfg: LLCConfig, knobs: LaneKnobs, states: LLCState,
 
 
 def occupancy(state: LLCState) -> Tuple[int, int]:
-    """(core_lines, accel_lines) currently valid (paper Fig. 14)."""
+    """(core_lines, accel_lines) currently valid (paper Fig. 14).
+
+    Both counts come back in one device fetch (a single stacked [2]
+    array) — the ``record_occupancy`` path polls this every epoch, and
+    two separate ``int(...)`` casts meant two blocking syncs per epoch."""
     valid = state.tags != -1
     accel = valid & (state.owner == 1)
-    return (int(jnp.sum(valid & ~accel)), int(jnp.sum(accel)))
+    counts = np.asarray(jnp.stack([jnp.sum(valid & ~accel), jnp.sum(accel)]))
+    return (int(counts[0]), int(counts[1]))
 
 
 def pack_meta(is_accel, write, hint, prefetch, dlok, src) -> np.ndarray:

@@ -32,7 +32,7 @@ from . import llc as llc_mod
 from . import lrpt as lrpt_mod
 from .apm import APMState, bypass_mask
 from .dram import DDR3_1600, DramModel
-from .lern import LernModel, train_model_batched
+from .lern import LernModel, train_family_batched, train_model_batched
 from .llc import (A_HINT, A_NONE, A_RAND, A_SHIP, HW_SCALE, LLCConfig,
                   build_rounds, pack_meta)
 from .lrpt import lrpt_train_hash
@@ -191,6 +191,66 @@ def load_lern(config: str, lrpt_variant: str, subsample_target: int,
     return model
 
 
+# Family-fit regime bound: the one-dispatch family fit amortizes the
+# fixed per-dispatch cost that dominates *tiny* traces (the ROADMAP's
+# host-bound config1-class workloads, bench_lern.json family entry);
+# big traces are extraction-compute-bound and the concatenated sort
+# costs more than the dispatches saved, so they train individually.
+FAMILY_MAX_ACCESSES = 64_000
+
+
+def load_lern_family(configs, lrpt_variant: str, subsample_target: int,
+                     seed: int = 0,
+                     family_only: bool = False) -> Dict[str, LernModel]:
+    """Train every *uncached* config's LERN model, family-batching the
+    small ones into one dispatch pair.
+
+    ``lern.train_family_batched`` is bitwise-identical per config to
+    ``train_model_batched``, so results land under the same v3 cache
+    keys ``load_lern`` reads — the sweep engine calls this up front
+    (sweep.map_points) to turn N tiny host-bound training dispatches
+    into one, and every later ``load_lern``/``trace_clusters`` is a
+    cache read.  Traces above ``FAMILY_MAX_ACCESSES`` train alone (the
+    family concatenation only pays off in the dispatch-bound regime);
+    ``family_only=True`` skips them entirely — the sweep pre-pass uses
+    this so big models keep training *in parallel* inside the pool
+    workers instead of serially in the parent."""
+    out: Dict[str, LernModel] = {}
+    missing = []
+    for config in configs:
+        key = f"{config}-{lrpt_variant}-ss{subsample_target}-s{seed}-v3"
+        path = _cache_path("lern", key)
+        if os.path.exists(path):
+            with open(path, "rb") as f:
+                out[config] = pickle.load(f)
+        else:
+            missing.append((config, path))
+    if missing:
+        hash_fn = lrpt_train_hash(lrpt_variant)
+        traces = [load_trace(c, subsample_target) for c, _ in missing]
+        small = [i for i, tr in enumerate(traces)
+                 if tr.num_accesses <= FAMILY_MAX_ACCESSES]
+        if len(small) > 1:
+            models = train_family_batched(
+                [traces[i] for i in small], hash_fn=hash_fn, seed=seed)
+            for i, model in zip(small, models):
+                config, path = missing[i]
+                _atomic_dump(model, path)
+                out[config] = model
+        else:
+            small = []
+        for i, (config, path) in enumerate(missing):
+            if i in small:
+                continue
+            if family_only:
+                continue
+            model = train_model_batched(traces[i], hash_fn=hash_fn,
+                                        seed=seed)
+            _atomic_dump(model, path)
+            out[config] = model
+    return out
+
+
 def clusters_from_model(model: LernModel, trace: Trace, lrpt_variant: str
                         ) -> Dict[str, np.ndarray]:
     """Per-access (rc, ri) cluster ids for a whole trace in one gather
@@ -224,6 +284,33 @@ def trace_clusters(config: str, lrpt_variant: str, subsample_target: int
 def _mg1_delay(rho: float, service: float) -> float:
     rho = min(rho, 0.98)
     return rho * service / max(2.0 * (1.0 - rho), 1e-2)
+
+
+# ---------------------------------------------------------------------------
+# epoch-interleave keys
+# ---------------------------------------------------------------------------
+# Exact fixed-point analogue of the original ``linspace(0, 1, n,
+# endpoint=False)`` event timestamps: segment slot i of an n-event segment
+# interleaves at the rational i/n, encoded as floor(i * 2^41 / n) so the
+# host event builder and the fused device engine (core/fused.py) compute
+# the *same* int64 keys with pure integer ops — the whole bitwise-parity
+# story of the fused path rests on the two sides agreeing on event order.
+# 2^41 keeps distinct rationals distinct for any two segments up to 2^13
+# events each (key gap >= 2^41/(n_a*n_k) >= 2^15 > 0), and consecutive
+# accel keys are >= 2^41/n_a apart, which exceeds PF_WHEN_OFF (~2^27.7)
+# for n_a <= 2^13 — so a DPCP prefetch always lands between its trigger
+# and the next accel access, like the old 1e-4 float offset.  Residual
+# cross-segment key collisions resolve by stable segment order on both
+# sides identically.
+WHEN_BITS = 41
+# DPCP prefetches trail their triggering access by the old 1e-4 offset,
+# quantized to the same fixed point.
+PF_WHEN_OFF = int(1e-4 * (1 << WHEN_BITS))
+
+
+def when_keys(n: int) -> np.ndarray:
+    """int64 interleave keys for an ``n``-event epoch segment."""
+    return (np.arange(n, dtype=np.int64) << WHEN_BITS) // n
 
 
 # ---------------------------------------------------------------------------
@@ -478,7 +565,7 @@ class Lane:
             ev_hint.append(hints)
             ev_pf.append(np.zeros(n_a, bool))
             ev_src.append(np.zeros(n_a, np.int64))
-            ev_when.append(np.linspace(0, 1, n_a, endpoint=False))
+            ev_when.append(when_keys(n_a))
             if policy.dpcp:
                 ev_line.append(lines_a + 1)
                 ev_accel.append(np.ones(n_a, bool))
@@ -486,7 +573,7 @@ class Lane:
                 ev_hint.append(np.zeros(n_a, bool))
                 ev_pf.append(np.ones(n_a, bool))
                 ev_src.append(np.zeros(n_a, np.int64))
-                ev_when.append(np.linspace(0, 1, n_a, endpoint=False) + 1e-4)
+                ev_when.append(when_keys(n_a) + PF_WHEN_OFF)
         for k in range(self.n_cores):
             nk = int(n_c[k])
             if nk == 0:
@@ -498,7 +585,7 @@ class Lane:
             ev_hint.append(np.zeros(nk, bool))
             ev_pf.append(np.zeros(nk, bool))
             ev_src.append(np.full(nk, k, np.int64))
-            ev_when.append(np.linspace(0, 1, nk, endpoint=False))
+            ev_when.append(when_keys(nk))
             self.stream_pos[k] += nk
 
         n_ev = sum(len(x) for x in ev_line)
@@ -730,8 +817,12 @@ def result_cache_path(config: str, mix: str, policy: Policy,
     """Disk-cache location of one simulated point, keyed by all inputs.
     Shared between run_cached and the sweep engine's dedup layer."""
     p = params or SimParams()
+    # "v": engine-semantics version.  v2: epoch event interleaving moved
+    # from float linspace timestamps to the exact integer when_keys —
+    # same model, but tie-breaking can differ, so pre-change cached
+    # results must not be served as current.
     key = json.dumps({"c": config, "m": mix, "pol": dataclasses.asdict(policy),
-                      "par": dataclasses.asdict(p), "d": dram.name,
+                      "par": dataclasses.asdict(p), "d": dram.name, "v": 2,
                       "kw": {k: str(v) for k, v in kw.items()}},
                      sort_keys=True, default=str)
     return _cache_path("sim", hashlib.md5(key.encode()).hexdigest())

@@ -77,11 +77,20 @@ def simulate_group(config: str, mix: str, pols: Sequence[Policy],
                    params: Optional[sim.SimParams] = None,
                    dram: DramModel = DDR3_1600,
                    deadline_cycles: Optional[float] = None,
-                   core_traffic: bool = True) -> List[sim.SimResult]:
+                   core_traffic: bool = True,
+                   engine: str = "auto") -> List[sim.SimResult]:
     """Simulate several policies on one (config, mix) trace in one pass.
 
     Order of results matches ``pols``.  Equivalent to (and bitwise
     consistent with) ``[sim.run(config, mix, p, ...) for p in pols]``.
+
+    ``engine`` selects the epoch loop: ``"fused"`` forces the
+    device-resident super-step engine (core/fused.py), ``"host"`` the
+    per-epoch host loop, and ``"auto"`` (default) routes every eligible
+    geometry batch through the fused engine — integer LLC stats are
+    bitwise-identical either way (tests/test_fused.py), so this is purely
+    a performance switch.  ``REPRO_FUSED=0`` pins ``auto`` to the host
+    path globally.
     """
     p = params or sim.SimParams()
     if deadline_cycles is None:
@@ -94,8 +103,30 @@ def simulate_group(config: str, mix: str, pols: Sequence[Policy],
     for lane in lanes:
         batches.setdefault(llc.geometry_key(lane.llc_cfg), []).append(lane)
     for batch in batches.values():
-        _drive_lanes(batch)
+        if _use_fused(batch, engine):
+            from . import fused  # deferred: keep pool workers light
+            fused.drive_lanes_fused(batch)
+        else:
+            _drive_lanes(batch)
     return [lane.result() for lane in lanes]
+
+
+def _use_fused(batch: List[sim.Lane], engine: str) -> bool:
+    if engine == "host":
+        return False
+    if engine == "auto":
+        # opt-out before the fused import: REPRO_FUSED=0 pool workers
+        # stay light (core/fused.py pulls in the x64 jit machinery)
+        if os.environ.get("REPRO_FUSED", "1") == "0":
+            return False
+    elif engine != "fused":
+        raise ValueError(f"unknown engine {engine!r}")
+    from . import fused
+    eligible = all(fused.lane_supported(lane) for lane in batch)
+    if engine == "fused" and not eligible:
+        raise ValueError("engine='fused' requested for a lane batch "
+                         "the fused engine does not support")
+    return eligible
 
 
 def _drive_lanes(lanes: List[sim.Lane]) -> None:
@@ -197,6 +228,29 @@ def _calibrate_task(task) -> float:
     return sim.calibrated_deadline(config, params, dram)
 
 
+def _prepare_lern(tasks) -> None:
+    """Family-batched LERN training for every uncached (config, variant).
+
+    Tiny configs are host-bound when trained one dispatch at a time
+    (bench_lern.json); training whole config families in one device
+    dispatch up front means workers (and inline groups) only read the
+    cache for them.  Models are bitwise-equal to per-config training,
+    so this is purely a scheduling change.  Only the small
+    (dispatch-bound) traces train here — big uncached models stay with
+    the workers, which train them in parallel as before."""
+    fam: Dict[Tuple, List[str]] = {}
+    for config, _mix, pols, params, _dram, _paths in tasks:
+        for pol in pols:
+            if pol.accel_predictor == "lern":
+                # Lane loads clusters at the default training seed
+                key = (pol.lrpt_variant, params.subsample_target)
+                configs = fam.setdefault(key, [])
+                if config not in configs:
+                    configs.append(config)
+    for (variant, sub), configs in fam.items():
+        sim.load_lern_family(configs, variant, sub, family_only=True)
+
+
 def _group_task(task) -> List[sim.SimResult]:
     """Pool task: simulate one policy group and persist each point."""
     config, mix, pols, params, dram, paths = task
@@ -249,6 +303,7 @@ def map_points(points: Sequence[SweepPoint], jobs: int = 1,
             task_idxs.append([idx for idx, _, _ in chunk])
 
     if tasks:
+        _prepare_lern(tasks)
         if jobs <= 1 or len(tasks) == 1:
             task_results = [_group_task(t) for t in tasks]
         else:

@@ -1,11 +1,15 @@
-"""hydra-sweep/v2 artifact validation.
+"""Artifact validation: hydra-sweep/v2 and the hydra-bench-* family.
 
 Dependency-free structural validator (the container has no jsonschema)
-used by CI to gate the uploaded ``sweep.json`` artifact::
+used by CI to gate the uploaded artifacts::
 
-    python -m repro.exp.schema sweep.json [more.json ...]
+    python -m repro.exp.schema sweep.json bench_sim.json [...]
 
-Exits non-zero with a per-file error list on any violation.
+Dispatches on each document's ``schema`` tag — ``hydra-sweep/v2`` rows
+are validated in full; ``hydra-bench-*`` perf-trajectory artifacts
+(bench_lern.json, bench_sim.json) get entry-level checks, with the
+bench-sim entry shape pinned exactly.  Exits non-zero with a per-file
+error list on any violation.
 """
 from __future__ import annotations
 
@@ -72,9 +76,57 @@ def validate_sweep(doc: Dict) -> List[str]:
     return errs
 
 
+_BENCH_PREFIX = "hydra-bench-"
+# per-entry numeric requirements of the bench-sim artifact
+_BENCH_SIM_NUMERIC = ("lanes", "epochs", "host_s", "fused_s",
+                      "host_eps", "fused_eps", "speedup")
+
+
+def validate_bench(doc: Dict) -> List[str]:
+    """Violations in a ``hydra-bench-*`` perf-trajectory artifact."""
+    errs: List[str] = []
+    if not isinstance(doc, dict):
+        return ["document is not an object"]
+    schema = doc.get("schema")
+    if not isinstance(schema, str) or not schema.startswith(_BENCH_PREFIX):
+        errs.append(f"schema: expected '{_BENCH_PREFIX}*', got {schema!r}")
+        schema = ""
+    entries = doc.get("entries")
+    if not isinstance(entries, list) or not entries:
+        return errs + ["entries: expected a non-empty list"]
+    is_sim = schema.startswith("hydra-bench-sim")
+    for i, e in enumerate(entries):
+        where = f"entries[{i}]"
+        if not isinstance(e, dict):
+            errs.append(f"{where}: not an object")
+            continue
+        if not isinstance(e.get("config"), str):
+            errs.append(f"{where}.config: expected string")
+        bad_vals = [k for k, v in e.items()
+                    if not isinstance(v, (str, numbers.Real))]
+        if bad_vals:
+            errs.append(f"{where}: non-scalar values for {bad_vals}")
+        if is_sim:
+            for k in _BENCH_SIM_NUMERIC:
+                if not isinstance(e.get(k), numbers.Real):
+                    errs.append(f"{where}.{k}: expected a number")
+            if not isinstance(e.get("mix"), str):
+                errs.append(f"{where}.mix: expected string")
+    return errs
+
+
+def validate(doc: Dict) -> List[str]:
+    """Dispatch on the document's schema tag."""
+    schema = doc.get("schema") if isinstance(doc, dict) else None
+    if isinstance(schema, str) and schema.startswith(_BENCH_PREFIX):
+        return validate_bench(doc)
+    return validate_sweep(doc)
+
+
 def main(argv: List[str]) -> int:
     if not argv:
-        print("usage: python -m repro.exp.schema sweep.json [...]")
+        print("usage: python -m repro.exp.schema sweep.json "
+              "[bench_sim.json ...]")
         return 2
     bad = 0
     for path in argv:
@@ -85,15 +137,15 @@ def main(argv: List[str]) -> int:
             print(f"{path}: unreadable ({e})")
             bad += 1
             continue
-        errs = validate_sweep(doc)
+        errs = validate(doc)
         if errs:
             bad += 1
             print(f"{path}: INVALID ({len(errs)} errors)")
             for e in errs[:20]:
                 print(f"  - {e}")
         else:
-            print(f"{path}: ok ({len(doc.get('rows', []))} rows, "
-                  f"schema {doc['schema']})")
+            n = len(doc.get("rows", doc.get("entries", [])))
+            print(f"{path}: ok ({n} rows, schema {doc['schema']})")
     return 1 if bad else 0
 
 

@@ -97,6 +97,46 @@ def test_train_batched_matches_host_bitwise():
         np.testing.assert_array_equal(a.features_ri[li], b.features_ri[li])
 
 
+def test_train_family_batched_matches_individual_bitwise():
+    """One family dispatch over several configs' traces == per-config
+    ``train_model_batched``, model for model, bit for bit — the property
+    that makes the family fit cache-compatible with ``sim.load_lern``."""
+    traces = [_synthetic_trace(n_layers=3, seed=11),
+              _synthetic_trace(n_layers=2, seed=12),
+              _synthetic_trace(n_layers=4, seed=13)]
+    fam = lern.train_family_batched(traces, seed=7)
+    assert len(fam) == len(traces)
+    for tr, got in zip(traces, fam):
+        want = lern.train_model_batched(tr, seed=7)
+        assert got.n_layers == want.n_layers
+        np.testing.assert_array_equal(got.n_uniq, want.n_uniq)
+        for li in range(want.n_layers):
+            n = int(want.n_uniq[li])
+            np.testing.assert_array_equal(got.uniq[li, :n],
+                                          want.uniq[li, :n])
+            np.testing.assert_array_equal(got.rc_cluster[li, :n],
+                                          want.rc_cluster[li, :n])
+            np.testing.assert_array_equal(got.ri_cluster[li, :n],
+                                          want.ri_cluster[li, :n])
+            np.testing.assert_array_equal(got.rc_centers[li],
+                                          want.rc_centers[li])
+            np.testing.assert_array_equal(got.ri_centers[li],
+                                          want.ri_centers[li])
+            np.testing.assert_array_equal(got.features_ri[li],
+                                          want.features_ri[li])
+
+
+def test_train_family_batched_hashed_variant():
+    traces = [_synthetic_trace(n_layers=2, seed=21),
+              _synthetic_trace(n_layers=2, seed=22)]
+    hashed = lrpt.lrpt_train_hash("loptv3")
+    fam = lern.train_family_batched(traces, hash_fn=hashed, seed=2)
+    for tr, got in zip(traces, fam):
+        want = lern.train_model_batched(tr, hash_fn=hashed, seed=2)
+        np.testing.assert_array_equal(got.rc_cluster, want.rc_cluster)
+        np.testing.assert_array_equal(got.ri_cluster, want.ri_cluster)
+
+
 def test_train_batched_hashed_variant():
     """§VI-J hashed training goes through the same batched path."""
     tr = _synthetic_trace(n_layers=2, seed=5)
