@@ -1,0 +1,120 @@
+"""Bench regression gate: compare freshly-measured perf-trajectory
+artifacts against their committed baselines.
+
+CI's smoke-sweep job regenerates ``bench_sim.json`` / ``bench_lern.json``
+at smoke scale and runs::
+
+    python -m benchmarks.check_trend \
+        bench_sim.json=bench_sim.smoke.json \
+        bench_lern.json=bench_lern.smoke.json
+
+Each ``current=baseline`` pair is matched entry-by-entry on identifying
+keys (config/mix/lanes/epochs for bench-sim; config/accesses for
+bench-lern — scale-sensitive keys included so a baseline from a different
+footprint can never silently compare).  For every matched entry the
+speedup-style metrics are ratioed current/baseline, and the job FAILS when
+the geomean ratio of any metric drops below ``1 - tolerance``.  The
+default tolerance (25%) is tuned for the noisy 2-core CI runner: absolute
+seconds swing wildly there, but the engine-vs-engine speedups inside one
+run are far more stable.  No matched entries is also a failure — it means
+the baseline footprint drifted and the gate would otherwise be vacuous
+(regenerate the ``*.smoke.json`` baseline in the same commit that changes
+the smoke footprint).
+"""
+from __future__ import annotations
+
+import json
+import sys
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+# identifying keys + gated metrics per artifact family
+_PROFILES = {
+    "hydra-bench-sim": (("config", "mix", "lanes", "epochs"), ("speedup",)),
+    "hydra-bench-lern": (("config", "accesses"),
+                         ("speedup", "seg_speedup")),
+}
+
+
+def _profile(doc: Dict) -> Tuple[Tuple[str, ...], Tuple[str, ...]]:
+    schema = str(doc.get("schema", ""))
+    for prefix, prof in _PROFILES.items():
+        if schema.startswith(prefix):
+            return prof
+    raise SystemExit(f"unknown bench schema {schema!r}")
+
+
+def compare(current: Dict, baseline: Dict, tolerance: float
+            ) -> List[str]:
+    """Human-readable failure list (empty == within tolerance)."""
+    keys, metrics = _profile(current)
+    base_by_key = {tuple(e.get(k) for k in keys): e
+                   for e in baseline.get("entries", [])}
+    ratios: Dict[str, List[float]] = {m: [] for m in metrics}
+    matched = 0
+    for e in current.get("entries", []):
+        b = base_by_key.get(tuple(e.get(k) for k in keys))
+        if b is None:
+            continue
+        matched += 1
+        for m in metrics:
+            if isinstance(e.get(m), (int, float)) and \
+                    isinstance(b.get(m), (int, float)) and b[m] > 0:
+                ratios[m].append(e[m] / b[m])
+    errs = []
+    if not matched:
+        return [f"no entries matched the baseline on {keys} — baseline "
+                "footprint drifted; regenerate the smoke baseline"]
+    floor = 1.0 - tolerance
+    for m, rs in ratios.items():
+        if not rs:
+            continue
+        geo = float(np.exp(np.mean(np.log(rs))))
+        status = "ok" if geo >= floor else "REGRESSION"
+        print(f"  {m}: geomean ratio {geo:.3f} over {len(rs)} entries "
+              f"(floor {floor:.2f}) {status}")
+        if geo < floor:
+            errs.append(f"{m} geomean ratio {geo:.3f} < {floor:.2f} "
+                        f"({len(rs)} matched entries)")
+    return errs
+
+
+def main(argv: List[str]) -> int:
+    tolerance = 0.25
+    pairs = []
+    for arg in argv:
+        if arg.startswith("--tolerance="):
+            tolerance = float(arg.split("=", 1)[1])
+        elif "=" in arg:
+            pairs.append(tuple(arg.split("=", 1)))
+        else:
+            print(f"usage: python -m benchmarks.check_trend "
+                  f"[--tolerance=0.25] current.json=baseline.json ...; "
+                  f"got {arg!r}")
+            return 2
+    if not pairs:
+        print("usage: python -m benchmarks.check_trend "
+              "current.json=baseline.json ...")
+        return 2
+    bad = 0
+    for cur_path, base_path in pairs:
+        try:
+            with open(cur_path) as f:
+                cur = json.load(f)
+            with open(base_path) as f:
+                base = json.load(f)
+        except (OSError, json.JSONDecodeError) as e:
+            print(f"{cur_path} vs {base_path}: unreadable ({e})")
+            bad += 1
+            continue
+        print(f"{cur_path} vs {base_path}:")
+        errs = compare(cur, base, tolerance)
+        for e in errs:
+            print(f"  - {e}")
+        bad += bool(errs)
+    return 1 if bad else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

@@ -30,18 +30,32 @@ def run(suite: Suite):
     return rows
 
 
-def bench_lern_train(suite: Suite):
-    """Time one full LERN training pass per config, host vs device.
+def _fit_stage_inputs(tr):
+    """Extract the (shared) flat feature tables once — through the very
+    pipeline the trainers use (``lern._extract_flat``) — so the
+    fit-stage timing isolates exactly what the engine switch changes."""
+    lines_all, layer_all = lern._layer_sorted(tr)
+    n_l = max(len(tr.layer_names), 1)
+    _, f_ri_f, f_rc_f, _, offs, per_layer, elig = \
+        lern._extract_flat(lines_all, layer_all, n_l)
+    return f_ri_f, f_rc_f, offs, per_layer, elig, list(range(n_l))
 
-    ``host_s`` is the seed-era host pipeline (``lern.train_host_numpy``:
-    per-layer Python loop, numpy features, exact-shape fits, inline
-    silhouette) — the serial stage the device-resident refactor removed
-    from in front of the sweep engine.  ``aligned_s`` is the shared-shape
-    parity reference (``lern.train``), reported for transparency.  All
-    paths are measured warm (one throwaway run first, so jit compilation
-    and the trace cache are excluded).  Emits ``bench_lern.json`` (schema
-    hydra-bench-lern/v2: v1 plus the ``family`` block comparing the
-    one-dispatch family fit against per-config fits in both regimes)."""
+
+def bench_lern_train(suite: Suite):
+    """Time one full LERN training pass per config, host vs device, plus
+    the bucketed-vs-segmented k-means engine pair.
+
+    ``host_s`` is the seed-era host pipeline (``lern.train_host_numpy``);
+    ``aligned_s`` the shared-shape parity reference (``lern.train``);
+    ``device_s`` the production trainer under the default (segmented)
+    engine.  ``bucketed_fit_s`` / ``segmented_fit_s`` isolate the k-means
+    fit stage on identical pre-extracted feature tables — the part the
+    flat-segmented engine replaces — and ``seg_speedup`` is their ratio.
+    All paths are measured warm (one throwaway run first, so jit
+    compilation and the trace cache are excluded).  Emits
+    ``bench_lern.json`` (schema hydra-bench-lern/v3: every entry carries
+    the engine pair, and the ``family`` block compares family-vs-
+    individual training under both engines in both regimes)."""
     rows = []
     entries = []
     for cfg in suite.configs:
@@ -49,75 +63,85 @@ def bench_lern_train(suite: Suite):
         t_host = _best_of(lambda: lern.train_host_numpy(tr), reps=2)
         t_aligned = _best_of(lambda: lern.train(tr), reps=2)
         t_dev = _best_of(lambda: lern.train_model_batched(tr), reps=2)
+        *fit_args, seeds = _fit_stage_inputs(tr)
+        t_fb = _best_of(lambda: lern._fit_flat_bucketed(*fit_args, seeds,
+                                                        None), reps=3)
+        t_fs = _best_of(lambda: lern._fit_flat_segmented(*fit_args, seeds,
+                                                         None), reps=3)
         speedup = t_host / max(t_dev, 1e-9)
+        seg_speedup = t_fb / max(t_fs, 1e-9)
         t0 = time.time() - t_dev  # report the device path's time as the row
         rows.append(emit(f"lern_train/{cfg}", t0,
                          {"host_s": t_host, "aligned_s": t_aligned,
-                          "device_s": t_dev, "speedup": speedup,
+                          "device_s": t_dev, "bucketed_fit_s": t_fb,
+                          "segmented_fit_s": t_fs, "speedup": speedup,
+                          "seg_speedup": seg_speedup,
                           "accesses": tr.num_accesses,
                           "layers": len(tr.layer_names)}))
         entries.append({"config": cfg, "host_s": round(t_host, 4),
                         "aligned_s": round(t_aligned, 4),
                         "device_s": round(t_dev, 4),
+                        "bucketed_fit_s": round(t_fb, 4),
+                        "segmented_fit_s": round(t_fs, 4),
                         "speedup": round(speedup, 3),
+                        "seg_speedup": round(seg_speedup, 3),
                         "accesses": int(tr.num_accesses),
                         "layers": len(tr.layer_names)})
     family = None
     if len(suite.configs) > 1:
         # whole config family in ONE dispatch pair vs one-config-at-a-time
-        # batched training — the fix for tiny host-bound configs, so it
-        # is measured in that regime: every trace at the small subsample
-        # where per-dispatch overhead dominates (sim.FAMILY_MAX_ACCESSES
-        # gates the production path to the same regime).  The suite-scale
-        # reference is recorded too — it documents why big traces train
-        # individually (the concatenated extraction costs more than the
-        # dispatches it saves).
-        ss_small = min(suite.params.subsample_target, 10_000)
-        small_traces = [sim.load_trace(cfg, ss_small)
-                        for cfg in suite.configs]
-        t0 = time.time()
-        t_host = _best_of(
-            lambda: [lern.train(tr) for tr in small_traces], reps=3)
-        t_indiv = _best_of(
-            lambda: [lern.train_model_batched(tr) for tr in small_traces],
-            reps=3)
-        t_family = _best_of(
-            lambda: lern.train_family_batched(small_traces), reps=3)
-        speedup = t_indiv / max(t_family, 1e-9)
-        rows.append(emit("lern_train/family", t0,
-                         {"host_s": t_host, "individual_s": t_indiv,
-                          "family_s": t_family, "speedup": speedup,
-                          "configs": len(suite.configs)}))
-        family = {"configs": list(suite.configs),
-                  "subsample_target": ss_small,
-                  "host_s": round(t_host, 4),
-                  "individual_s": round(t_indiv, 4),
-                  "family_s": round(t_family, 4),
-                  "speedup": round(speedup, 3)}
-        if suite.params.subsample_target > ss_small:
-            traces = [sim.load_trace(cfg, suite.params.subsample_target)
-                      for cfg in suite.configs]
-            tf_i = _best_of(
+        # training, under both engines and in both regimes: the small
+        # subsample (dispatch-bound — per-dispatch overhead dominates) and
+        # the suite scale (extraction-compute-bound).  Under the bucketed
+        # engine the full-scale family fit loses (hence the old
+        # FAMILY_MAX_ACCESSES gate); the segmented engine wins both, which
+        # is what lifted the gate (sim.family_cap).
+        family = {"configs": list(suite.configs)}
+        regimes = [("dispatch_bound", min(suite.params.subsample_target,
+                                          10_000), 3)]
+        if suite.params.subsample_target > 10_000:
+            regimes.append(("full_scale", suite.params.subsample_target, 2))
+        for name, ss, reps in regimes:
+            traces = [sim.load_trace(cfg, ss) for cfg in suite.configs]
+            t0 = time.time()
+            t_indiv = _best_of(
                 lambda: [lern.train_model_batched(tr) for tr in traces],
-                reps=2)
-            tf_f = _best_of(
-                lambda: lern.train_family_batched(traces), reps=2)
-            family["full_scale"] = {
-                "subsample_target": suite.params.subsample_target,
-                "individual_s": round(tf_i, 4),
-                "family_s": round(tf_f, 4),
-                "speedup": round(tf_i / max(tf_f, 1e-9), 3)}
+                reps=reps)
+            t_fb = _best_of(
+                lambda: lern.train_family_batched(traces,
+                                                  fit_engine="bucketed"),
+                reps=reps)
+            t_fs = _best_of(
+                lambda: lern.train_family_batched(traces,
+                                                  fit_engine="segmented"),
+                reps=reps)
+            speedup = t_indiv / max(t_fs, 1e-9)
+            rows.append(emit(f"lern_train/family-{name}", t0,
+                             {"individual_s": t_indiv,
+                              "family_bucketed_s": t_fb,
+                              "family_segmented_s": t_fs,
+                              "speedup": speedup,
+                              "configs": len(suite.configs)}))
+            family[name] = {"subsample_target": ss,
+                            "individual_s": round(t_indiv, 4),
+                            "family_bucketed_s": round(t_fb, 4),
+                            "family_segmented_s": round(t_fs, 4),
+                            "speedup": round(speedup, 3)}
     if entries:
         geo = float(np.exp(np.mean([np.log(e["speedup"]) for e in entries])))
-        doc = {"schema": "hydra-bench-lern/v2",
+        geo_seg = float(np.exp(np.mean([np.log(e["seg_speedup"])
+                                        for e in entries])))
+        doc = {"schema": "hydra-bench-lern/v3",
                "geomean_speedup": round(geo, 3),
+               "geomean_seg_speedup": round(geo_seg, 3),
                "entries": entries}
         if family is not None:
             doc["family"] = family
         with open(BENCH_LERN_PATH, "w") as f:
             json.dump(doc, f, indent=1)
         print(f"# wrote {len(entries)} configs to {BENCH_LERN_PATH} "
-              f"(geomean device speedup {geo:.2f}x)", flush=True)
+              f"(geomean device speedup {geo:.2f}x, "
+              f"segmented-vs-bucketed fit {geo_seg:.2f}x)", flush=True)
     return rows
 
 

@@ -35,6 +35,17 @@ class KMeansResult(NamedTuple):
     n_iter: int
 
 
+class SegmentedKMeansResult(NamedTuple):
+    centers: jnp.ndarray     # [S, K, D] per-segment centroids
+    assign: jnp.ndarray      # [P] cluster index per flat point (pad: garbage)
+    n_iter: int
+
+
+# Flat segmented layout granularity (canonical value lives next to the
+# kernel that depends on it: repro.kernels.common.SEG_BLOCK).
+from repro.kernels.common import SEG_BLOCK  # noqa: E402
+
+
 def assign_jnp(x: jnp.ndarray, centers: jnp.ndarray) -> jnp.ndarray:
     """Nearest-center assignment via the -2 x.c + ||c||^2 expansion (the
     row-constant ||x||^2 term is dropped from the argmin — exactly the
@@ -136,6 +147,250 @@ def kmeans_fit_masked(x: jnp.ndarray, mask: jnp.ndarray, key: jnp.ndarray,
     a = assign_fn(x, centers)
     d2 = jnp.sum((x - centers[a]) ** 2, -1)
     return KMeansResult(centers, a, jnp.sum(d2 * fmask), iters)
+
+
+# ---------------------------------------------------------------------------
+# flat-segmented fit: every segment's k-means over ONE flat point array
+# ---------------------------------------------------------------------------
+def segment_layout(counts, block: int = SEG_BLOCK):
+    """Host helper: pack ragged segments into the flat blocked layout.
+
+    ``counts[i]`` points for segment i -> ``(offsets, total)`` where segment
+    i's rows occupy ``[offsets[i], offsets[i] + counts[i])`` and each run is
+    padded to a multiple of ``block`` (pad rows carry segment id ``n_seg``).
+    """
+    offsets = []
+    cur = 0
+    for n in counts:
+        offsets.append(cur)
+        cur += ((int(n) + block - 1) // block) * block
+    return np.asarray(offsets, np.int32), cur
+
+
+def _seg_cumsum(w: jnp.ndarray, seg_off: jnp.ndarray) -> jnp.ndarray:
+    """Per-segment prefix sums over the flat array: an associative scan
+    that resets at the segment start positions (``seg_off`` scatters the
+    reset flags, so pad runs between segments keep accumulating zeros and
+    the value at a segment's last row is that segment's total)."""
+    starts = jnp.zeros(w.shape[0], bool).at[seg_off].set(True)
+
+    def comb(a, b):
+        av, af = a
+        bv, bf = b
+        return jnp.where(bf, bv, av + bv), af | bf
+
+    out, _ = jax.lax.associative_scan(comb, (w, starts))
+    return out
+
+
+def _seg_pick(u: jnp.ndarray, w: jnp.ndarray, seg: jnp.ndarray,
+              seg_off: jnp.ndarray, seg_cnt: jnp.ndarray,
+              n_seg: int) -> jnp.ndarray:
+    """Per-segment inverse-CDF draw (the segmented ``_pick_masked``):
+    ``u[s]`` in [0, 1) picks the index whose within-segment cumulative
+    weight first reaches ``u * total``; returns flat point indices [S]."""
+    cum = _seg_cumsum(w, seg_off)
+    nxt = jnp.concatenate([seg_off[1:], jnp.array([w.shape[0]], jnp.int32)])
+    total = cum[nxt - 1]                           # [S] (pads add zero)
+    segc = jnp.minimum(seg, n_seg - 1)
+    below = (cum < (u * total)[segc]).astype(jnp.int32)
+    cnt = jax.ops.segment_sum(jnp.where(seg < n_seg, below, 0), segc,
+                              num_segments=n_seg)
+    return seg_off + jnp.clip(cnt, 0, seg_cnt - 1)
+
+
+def _plus_plus_init_segmented(keys, x, seg, seg_off, seg_cnt, n_seg, k):
+    """k-means++ seeding for every segment at once (the segmented
+    ``_plus_plus_init_masked``): per-segment keys drive the same draw
+    sequence — uniform first pick, then d²-weighted inverse-CDF picks —
+    so segment s reproduces the bucketed seeding given the same key."""
+    valid = seg < n_seg
+    fvalid = valid.astype(x.dtype)
+    segc = jnp.minimum(seg, n_seg - 1)
+    ks = jax.vmap(lambda kk: jax.random.split(kk, k))(keys)  # [S, k, 2]
+    u0 = jax.vmap(lambda kk: jax.random.uniform(kk, (), x.dtype))(ks[:, 0])
+    t = jnp.floor(u0 * seg_cnt.astype(x.dtype)).astype(jnp.int32)
+    centers = jnp.zeros((n_seg, k, x.shape[1]), x.dtype)
+    centers = centers.at[:, 0].set(x[seg_off + t])
+    # masked min-d² maintained incrementally (min is exact, so this equals
+    # the bucketed full re-min over the seeded prefix)
+    dmin = jnp.sum((x - centers[segc, 0]) ** 2, -1)
+    for i in range(1, k):
+        ui = jax.vmap(lambda kk: jax.random.uniform(kk, (), x.dtype))(
+            ks[:, i])
+        pick = _seg_pick(ui, dmin * fvalid, seg, seg_off, seg_cnt, n_seg)
+        centers = centers.at[:, i].set(x[pick])
+        dmin = jnp.minimum(dmin, jnp.sum((x - centers[segc, i]) ** 2, -1))
+    return centers
+
+
+def assign_segmented_jnp(x: jnp.ndarray, centers: jnp.ndarray,
+                         seg: jnp.ndarray) -> jnp.ndarray:
+    """Per-point nearest-centroid over each point's own segment block,
+    via the same -2 x.c + ||c||² decomposition as the Pallas kernel."""
+    segc = jnp.minimum(seg, centers.shape[0] - 1)
+    cg = centers[segc]                              # [P, K, D]
+    c2 = jnp.sum(cg * cg, -1)                       # [P, K]
+    d2 = c2 - 2.0 * jnp.einsum("pd,pkd->pk", x, cg)
+    return jnp.argmin(d2, axis=1).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("n_seg", "k"))
+def _pp_init_segmented(keys, x, seg, seg_off, seg_cnt, n_seg: int, k: int):
+    return _plus_plus_init_segmented(keys, x, seg, seg_off, seg_cnt,
+                                     n_seg, k)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("n_seg", "k", "iters", "use_kernel"))
+def _lloyd_segmented(x: jnp.ndarray, seg: jnp.ndarray,
+                     centers0: jnp.ndarray, n_seg: int, k: int, iters: int,
+                     use_kernel: bool):
+    """Up to ``iters`` segment-wise Lloyd sweeps from ``centers0``, exiting
+    as soon as every segment reaches its fixed point.  Returns (centers,
+    n_iter, converged [S] bool).  Per-segment math is segment-local, so a
+    segment whose centers survive one sweep unchanged is at its fixed point
+    forever — the flag lets the host re-dispatch only the stragglers."""
+    valid = seg < n_seg
+    fvalid = valid.astype(x.dtype)
+    segc = jnp.minimum(seg, n_seg - 1)
+    x2 = jnp.sum(x * x, -1)
+    p, f = x.shape
+    nb = p // SEG_BLOCK
+    bseg = seg[::SEG_BLOCK]       # one segment per block (layout invariant)
+    arange_p = jnp.arange(p, dtype=jnp.int32)
+    if use_kernel:
+        from repro.kernels.kmeans_assign import ops as _kops
+
+    def body(carry):
+        centers, i, _ = carry
+        if use_kernel:
+            a = _kops.assign_segmented(x, centers, seg)
+            # nearest-centroid score without the [P, K, D] gather the
+            # kernel exists to avoid: min_k sc == sc[a] by definition
+            cga = centers[segc, a]                   # [P, D]
+            min_sc = jnp.sum(cga * cga, -1) - 2.0 * jnp.sum(x * cga, -1)
+        else:
+            cg = centers[segc]                       # [P, K, D]
+            c2 = jnp.sum(cg * cg, -1)
+            sc = c2 - 2.0 * jnp.einsum("pd,pkd->pk", x, cg)
+            a = jnp.argmin(sc, axis=1).astype(jnp.int32)
+            min_sc = jnp.min(sc, 1)
+        # two-stage segment reduction: dense per-block partial sums (the
+        # layout guarantees one segment per block), then a scatter-add over
+        # the SEG_BLOCK-fold smaller block table — no per-point scatter and
+        # no one-hot [cap, K] matmul per capacity bucket
+        oh = jax.nn.one_hot(a, k, dtype=x.dtype) * fvalid[:, None]
+        pw = (oh[:, :, None] * x[:, None, :]).reshape(nb, SEG_BLOCK,
+                                                      k * f).sum(1)
+        pc = oh.reshape(nb, SEG_BLOCK, k).sum(1)
+        sums = jax.ops.segment_sum(pw, bseg, num_segments=n_seg + 1,
+                                   indices_are_sorted=True)[
+            :n_seg].reshape(n_seg, k, f)
+        counts = jax.ops.segment_sum(pc, bseg, num_segments=n_seg + 1,
+                                     indices_are_sorted=True)[:n_seg]
+        new = sums / jnp.maximum(counts, 1.0)[:, :, None]
+
+        def reseed(nn):
+            # re-seed empty clusters at the segment's farthest valid point
+            far_score = jnp.where(valid, x2 + min_sc, -jnp.inf)
+            bmax = far_score.reshape(nb, SEG_BLOCK).max(1)
+            m = jax.ops.segment_max(bmax, bseg, num_segments=n_seg + 1,
+                                    indices_are_sorted=True)[:n_seg]
+            pos = jnp.where(valid & (far_score == m[segc]), arange_p, p)
+            bmin = pos.reshape(nb, SEG_BLOCK).min(1)
+            fi = jax.ops.segment_min(bmin, bseg, num_segments=n_seg + 1,
+                                     indices_are_sorted=True)[:n_seg]
+            far = x[jnp.clip(fi, 0, p - 1)]          # [S, D]
+            return jnp.where((counts > 0)[:, :, None], nn, far[:, None, :])
+
+        new = jax.lax.cond(jnp.any(counts == 0), reseed, lambda nn: nn, new)
+        # Lloyd is a deterministic map of each segment's own centers; once
+        # a segment repeats its centers bitwise it is at a fixed point and
+        # every further sweep reproduces it, so exiting early is
+        # result-identical to the oracle's full fixed-iteration sweeps
+        conv = jnp.all(new == centers, axis=(1, 2))
+        return new, i + 1, conv
+
+    centers, n_iter, conv = jax.lax.while_loop(
+        lambda c: (c[1] < iters) & ~jnp.all(c[2]),
+        body, (centers0, jnp.int32(0), jnp.zeros(n_seg, bool)))
+    return centers, n_iter, conv
+
+
+def kmeans_fit_segmented(x: jnp.ndarray, seg: jnp.ndarray,
+                         seg_off: np.ndarray, seg_cnt: np.ndarray,
+                         keys: jnp.ndarray, n_seg: int, k: int = 4,
+                         iters: int = 50,
+                         use_kernel: Optional[bool] = None,
+                         first_chunk: int = 6) -> SegmentedKMeansResult:
+    """Every segment's Lloyd fit over ONE flat ``[P, D]`` point array.
+
+    ``seg`` holds each row's segment id (``n_seg`` marks pad rows); each
+    segment's rows are contiguous starting at ``seg_off[s]`` with
+    ``seg_cnt[s]`` real points, runs padded to ``SEG_BLOCK`` multiples
+    (``segment_layout``).  No power-of-two capacity padding anywhere, and
+    no fixed 50-sweep scan either: a first ``first_chunk``-sweep dispatch
+    settles most segments at their (bitwise) Lloyd fixed point, then the
+    host compacts the unconverged segments' rows — block-aligned, so their
+    FP trajectory is untouched — and only those re-dispatch for the
+    remaining sweeps.  Seeding and update math mirror
+    ``kmeans_fit_masked`` per segment, so the result is
+    cluster-assignment-equal to the bucketed oracle (same labels up to
+    centroid permutation; centroids agree to FP reassociation).
+
+    The parity contract is empirical, not a float-for-float proof: the
+    per-segment cumulative weights and centroid means are summed in a
+    different association order than the bucketed path, so a k-means++
+    draw landing within one ulp of an inverse-CDF boundary, or a point
+    within one ulp of equidistant to two centroids, could in principle
+    flip a label.  The parity suites (test_lern_batched/test_lern_props)
+    pin that this never happens on real and hypothesis-random inputs.
+    """
+    if use_kernel is None:
+        use_kernel = _default_use_kernel()
+    x = jnp.asarray(x)
+    seg = jnp.asarray(seg)
+    centers0 = _pp_init_segmented(jnp.asarray(keys), x, seg,
+                                  jnp.asarray(seg_off),
+                                  jnp.asarray(seg_cnt), n_seg, k)
+    it1 = min(first_chunk, iters)
+    centers, n1, conv = _lloyd_segmented(x, seg, centers0, n_seg, k, it1,
+                                         use_kernel)
+    total = int(n1)
+    conv_np = np.asarray(conv)
+    if it1 < iters and not conv_np.all():
+        # compact the stragglers: copy each unconverged segment's padded
+        # block run verbatim (block-aligned → bitwise-identical sweeps)
+        stragglers = np.flatnonzero(~conv_np)
+        xh = np.asarray(x)
+        counts = np.asarray(seg_cnt)[stragglers]
+        sub_off, sub_total = segment_layout(counts)
+        n_sub = stragglers.shape[0]
+        sub_p = max(((sub_total + 2047) // 2048) * 2048, SEG_BLOCK)
+        xs = np.zeros((sub_p, xh.shape[1]), xh.dtype)
+        segs = np.full(sub_p, n_sub, np.int32)
+        for si, s in enumerate(stragglers):
+            run = ((int(counts[si]) + SEG_BLOCK - 1)
+                   // SEG_BLOCK) * SEG_BLOCK
+            o = int(np.asarray(seg_off)[s])
+            xs[sub_off[si]:sub_off[si] + run] = xh[o:o + run]
+            segs[sub_off[si]:sub_off[si] + int(counts[si])] = si
+        sub_centers, n2, _ = _lloyd_segmented(
+            jnp.asarray(xs), jnp.asarray(segs),
+            jnp.asarray(np.asarray(centers)[stragglers]),
+            n_sub, k, iters - it1, use_kernel)
+        total += int(n2)
+        centers = centers.at[jnp.asarray(stragglers)].set(sub_centers)
+    if use_kernel:
+        from repro.kernels.kmeans_assign import ops as _kops
+        a = _kops.assign_segmented(x, centers, seg)
+    else:
+        a = _assign_segmented_jit(x, centers, seg)
+    return SegmentedKMeansResult(centers, a, total)
+
+
+_assign_segmented_jit = jax.jit(assign_segmented_jnp)
 
 
 @functools.partial(jax.jit, static_argnames=("k", "iters", "use_kernel"))

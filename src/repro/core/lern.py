@@ -32,6 +32,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import os
 from typing import Callable, Dict, List, Optional
 
 import jax
@@ -48,6 +49,32 @@ from .tracegen import Trace
 _CORRECT_BINS = {0: (0,), 1: (0, 1), 2: (1, 2), 3: (2, 3)}
 
 MIN_MULTI = 8  # need enough multi-occurrence lines for 4 clusters
+
+# How the batched trainers run their k-means fits:
+#   "bucketed"  — layers padded into power-of-two capacity buckets, each
+#                 bucket vmapped over `_fit_layer` (the oracle path: bitwise
+#                 equal to the per-layer host reference `train`).
+#   "segmented" — all layers' points concatenated into ONE flat array with a
+#                 segment-id column; seeding and the Lloyd loop run as
+#                 segment-wise reductions (`kmeans.kmeans_fit_segmented`) —
+#                 no capacity padding, one dispatch for the whole family.
+#                 Cluster-assignment-equal to the bucketed oracle (same
+#                 labels; centroids agree to FP reassociation).
+#   "auto"      — segmented (it wins in both regimes; the bucketed oracle
+#                 stays reachable via REPRO_LERN_FIT=bucketed).
+FIT_ENGINE = os.environ.get("REPRO_LERN_FIT", "auto")
+
+
+def resolve_engine(engine: Optional[str] = None) -> str:
+    """Resolve a fit-engine override (or the module default) to the
+    concrete engine name."""
+    e = engine or FIT_ENGINE
+    if e == "auto":
+        e = "segmented"
+    if e not in ("bucketed", "segmented"):
+        raise ValueError(f"unknown LERN fit engine {e!r} "
+                         "(expected bucketed|segmented|auto)")
+    return e
 
 
 def _bucket(n: int) -> int:
@@ -229,6 +256,95 @@ def _fit_groups(groups, use_kernel: Optional[bool] = None):
                  for f_ri, f_rc, nm, keys in groups)
 
 
+@functools.partial(jax.jit, static_argnames=("n_seg",))
+def _seg_prep(f_ri: jnp.ndarray, f_rc: jnp.ndarray, seg: jnp.ndarray,
+              keys: jnp.ndarray, n_seg: int) -> Dict:
+    """Normalize the flat feature rows into the combined 2*n_seg-segment
+    point array (RC half zero-padded to the RI feature width — distances
+    are unchanged).  Elementwise-identical to ``_fit_layer``'s
+    normalization (log1p + per-segment min-max for RC, row L1 for RI)."""
+    p = f_rc.shape[0]
+    valid = seg < n_seg
+    segc = jnp.minimum(seg, n_seg - 1)
+    xrc = jnp.log1p(f_rc.astype(jnp.float32))
+    lo = jax.ops.segment_min(jnp.where(valid, xrc, jnp.inf), segc,
+                             num_segments=n_seg)
+    hi = jax.ops.segment_max(jnp.where(valid, xrc, -jnp.inf), segc,
+                             num_segments=n_seg)
+    rng = jnp.maximum(hi - lo, 1e-9)
+    xn = jnp.where(valid, (xrc - lo[segc]) / rng[segc], 0.0)
+    x_rc = jnp.zeros((p, NUM_RI_BINS), jnp.float32).at[:, 0].set(xn)
+    raw = f_ri.astype(jnp.float32)
+    x_ri = jnp.where(valid[:, None],
+                     raw / jnp.maximum(raw.sum(1, keepdims=True), 1e-9), 0.0)
+    xx = jnp.concatenate([x_rc, x_ri], axis=0)
+    seg2 = jnp.concatenate([jnp.where(valid, seg, 2 * n_seg),
+                            jnp.where(valid, seg + n_seg, 2 * n_seg)])
+    keys2 = jnp.concatenate([
+        jax.vmap(lambda kk: jax.random.fold_in(kk, 0))(keys),
+        jax.vmap(lambda kk: jax.random.fold_in(kk, 1))(keys)])
+    return {"xx": xx, "seg2": seg2, "keys2": keys2, "lo": lo, "hi": hi}
+
+
+@functools.partial(jax.jit, static_argnames=("n_seg",))
+def _seg_post(assign2: jnp.ndarray, centers2: jnp.ndarray,
+              f_ri: jnp.ndarray, seg: jnp.ndarray, lo: jnp.ndarray,
+              hi: jnp.ndarray, n_seg: int) -> Dict:
+    """Host-facing fit tables from the combined segmented fit result:
+    de-normalized RC centers (expm1, exactly as ``_fit_layer``) and the
+    mean-raw-histogram RI centers per (segment, cluster)."""
+    p = f_ri.shape[0]
+    valid = seg < n_seg
+    rc_centers_norm = centers2[:n_seg, :, 0]              # [S, 4]
+    rc_centers = jnp.expm1(rc_centers_norm * (hi - lo)[:, None]
+                           + lo[:, None])
+    ri_assign = assign2[p:]
+    raw = f_ri.astype(jnp.float32)
+    sid = jnp.where(valid, seg * 4 + ri_assign, n_seg * 4)
+    fvalid = valid.astype(jnp.float32)
+    cnt = jax.ops.segment_sum(fvalid, sid,
+                              num_segments=n_seg * 4 + 1)[
+        :n_seg * 4].reshape(n_seg, 4)
+    sums = jax.ops.segment_sum(raw * fvalid[:, None], sid,
+                               num_segments=n_seg * 4 + 1)[
+        :n_seg * 4].reshape(n_seg, 4, NUM_RI_BINS)
+    ri_centers = sums / jnp.maximum(cnt, 1.0)[:, :, None]
+    return {"rc_assign": assign2[:p], "rc_centers": rc_centers,
+            "rc_centers_norm": rc_centers_norm,
+            "ri_assign": ri_assign, "ri_centers": ri_centers}
+
+
+def _fit_segmented(f_ri: jnp.ndarray, f_rc: jnp.ndarray, seg: jnp.ndarray,
+                   seg_off: np.ndarray, seg_cnt: np.ndarray,
+                   keys: jnp.ndarray, n_seg: int,
+                   use_kernel: Optional[bool] = None) -> Dict:
+    """All eligible layers' RC + RI fits as one flat segmented dispatch.
+
+    ``f_ri`` [P, 4] / ``f_rc`` [P] hold every layer's multi-occurrence
+    feature rows in the flat-segmented layout (layer s's rows contiguous at
+    ``seg_off[s]``, ``seg_cnt[s]`` real rows, runs padded to SEG_BLOCK
+    multiples with ``seg == n_seg``).  The two per-layer fits of
+    ``_fit_layer`` become 2*n_seg segments of one
+    ``kmeans.kmeans_fit_segmented`` call: the RC points under
+    ``fold_in(key, 0)``, the RI points under ``fold_in(key, 1)``, matching
+    the bucketed key sequence segment for segment — so the segmented fit
+    is cluster-assignment-equal to the bucketed oracle without any
+    power-of-two capacity padding.  (Host function: the segmented fit
+    itself compacts unconverged segments between dispatches.)
+    """
+    p = int(f_rc.shape[0])
+    prep = _seg_prep(f_ri, f_rc, seg, keys, n_seg)
+    off2 = np.concatenate([np.asarray(seg_off, np.int32),
+                           np.asarray(seg_off, np.int32) + p])
+    cnt2 = np.concatenate([np.asarray(seg_cnt, np.int32)] * 2)
+    res = km.kmeans_fit_segmented(prep["xx"], prep["seg2"], off2, cnt2,
+                                  prep["keys2"], n_seg=2 * n_seg, k=4,
+                                  use_kernel=use_kernel)
+    out = _seg_post(res.assign, res.centers, f_ri, seg, prep["lo"],
+                    prep["hi"], n_seg)
+    return dict(out, n_iter=res.n_iter)
+
+
 def _annotate(fit: Dict, n_multi: int) -> Dict:
     """Host-side O(k) semantic annotation of one layer's fit result."""
     label_rc = km.annotate_rc(np.asarray(fit["rc_centers_norm"]))
@@ -311,24 +427,19 @@ def train(trace: Trace, hash_fn: Optional[Callable] = None,
     return LernModel.from_layers(layers, hash_fn=hash_fn)
 
 
-def _fit_flat(lines_all: np.ndarray, layer_all: np.ndarray, n_l: int,
-              key_seeds: List[int], use_kernel: Optional[bool]):
-    """Shared flat-trace fit core of the batched trainers.
-
-    One ``reuse_features_flat`` extraction over the concatenated trace
-    (``layer_all`` non-decreasing, 0..n_l-1) and one ``_fit_groups``
-    dispatch over all layers bucketed by capacity; ``key_seeds[li]``
-    seeds layer li's k-means draws.  Returns everything the assembly
-    step needs: (uniq_f, f_ri_f, f_rc_f, n_uniq, offs, per_layer,
-    group_of, fits)."""
+def _extract_flat(lines_all: np.ndarray, layer_all: np.ndarray, n_l: int):
+    """Device program 1 + host eligibility scan, shared by the trainers
+    and the bench_lern fit-stage benchmark: one ``reuse_features_flat``
+    extraction over the concatenated trace, then the per-layer
+    multi-occurrence masks and MIN_MULTI eligibility (integer work,
+    O(N)).  Returns (uniq_f, f_ri_f, f_rc_f, n_uniq, offs, per_layer,
+    elig)."""
     m = lines_all.shape[0]
     m_pad = max(8, ((m + 4095) // 4096) * 4096)
     lines32 = np.full(m_pad, int(PAD_LINE), np.int32)
     lines32[:m] = lines_to_device(lines_all)
     layer32 = np.full(m_pad, n_l, np.int32)
     layer32[:m] = layer_all
-
-    # --- device program 1: flat whole-model feature extraction -------------
     feats = reuse_features_flat(jnp.asarray(lines32), jnp.asarray(layer32),
                                 jnp.int32(m), n_l)
     uniq_f = np.asarray(feats["uniq"], np.int64)
@@ -336,18 +447,51 @@ def _fit_flat(lines_all: np.ndarray, layer_all: np.ndarray, n_l: int,
     f_rc_f = np.asarray(feats["f_rc"])
     n_uniq = np.asarray(feats["n_uniq"], np.int32)
     offs = np.concatenate([[0], np.cumsum(n_uniq)])
-
-    # --- host: bucket layers by fit capacity (integer work, O(N)) ----------
     per_layer = []  # (multi_mask, n_multi)
-    buckets: Dict[int, List[int]] = {}
+    elig = []
     for li in range(n_l):
-        fl = f_rc_f[offs[li]:offs[li + 1]]
-        multi = fl > 1
+        multi = f_rc_f[offs[li]:offs[li + 1]] > 1
         nm = int(multi.sum())
         per_layer.append((multi, nm))
         if nm >= MIN_MULTI:
-            buckets.setdefault(_bucket(nm), []).append(li)
+            elig.append(li)
+    return uniq_f, f_ri_f, f_rc_f, n_uniq, offs, per_layer, elig
 
+
+def _fit_flat(lines_all: np.ndarray, layer_all: np.ndarray, n_l: int,
+              key_seeds: List[int], use_kernel: Optional[bool],
+              fit_engine: Optional[str] = None):
+    """Shared flat-trace fit core of the batched trainers.
+
+    One ``reuse_features_flat`` extraction over the concatenated trace
+    (``layer_all`` non-decreasing, 0..n_l-1), then every eligible layer's
+    k-means fits in one device dispatch — either the padded capacity-bucket
+    path (``_fit_groups``, the oracle) or the flat-segmented path
+    (``_fit_segmented``) per ``fit_engine``; ``key_seeds[li]`` seeds layer
+    li's k-means draws either way.  Returns everything the assembly step
+    needs: (uniq_f, f_ri_f, f_rc_f, n_uniq, offs, per_layer, layer_fits)
+    where ``layer_fits[li]`` is the host-side fit dict ``_annotate``
+    consumes (absent for ineligible layers)."""
+    engine = resolve_engine(fit_engine)
+    uniq_f, f_ri_f, f_rc_f, n_uniq, offs, per_layer, elig = \
+        _extract_flat(lines_all, layer_all, n_l)
+
+    # --- device program 2: all fits in one jitted call ---------------------
+    if engine == "segmented":
+        layer_fits = _fit_flat_segmented(f_ri_f, f_rc_f, offs, per_layer,
+                                         elig, key_seeds, use_kernel)
+    else:
+        layer_fits = _fit_flat_bucketed(f_ri_f, f_rc_f, offs, per_layer,
+                                        elig, key_seeds, use_kernel)
+    return uniq_f, f_ri_f, f_rc_f, n_uniq, offs, per_layer, layer_fits
+
+
+def _fit_flat_bucketed(f_ri_f, f_rc_f, offs, per_layer, elig, key_seeds,
+                       use_kernel: Optional[bool]) -> Dict[int, Dict]:
+    """Oracle fit path: layers vmapped in power-of-two capacity buckets."""
+    buckets: Dict[int, List[int]] = {}
+    for li in elig:
+        buckets.setdefault(_bucket(per_layer[li][1]), []).append(li)
     groups = []
     group_of: Dict[int, tuple] = {}
     for cap in sorted(buckets):
@@ -366,17 +510,58 @@ def _fit_flat(lines_all: np.ndarray, layer_all: np.ndarray, n_l: int,
             group_of[li] = (len(groups), gi)
         groups.append((jnp.asarray(g_ri), jnp.asarray(g_rc),
                        jnp.asarray(g_nm), jnp.asarray(keys)))
-
-    # --- device program 2: all fits in one jitted call ---------------------
     fits = _fit_groups(tuple(groups), use_kernel=use_kernel)
-    return uniq_f, f_ri_f, f_rc_f, n_uniq, offs, per_layer, group_of, fits
+    fits_np = jax.tree.map(np.asarray, fits)
+    return {li: {k: v[gi] for k, v in fits_np[g].items()}
+            for li, (g, gi) in group_of.items()}
+
+
+def _fit_flat_segmented(f_ri_f, f_rc_f, offs, per_layer, elig, key_seeds,
+                        use_kernel: Optional[bool]) -> Dict[int, Dict]:
+    """Flat-segmented fit path: every eligible layer's multi-occurrence
+    feature rows concatenated into ONE [P, F] array with a segment-id
+    column — no capacity padding (runs padded only to SEG_BLOCK multiples,
+    the total to a 2048 multiple to bound compile shapes)."""
+    if not elig:
+        return {}
+    counts = [per_layer[li][1] for li in elig]
+    seg_off, total = km.segment_layout(counts)
+    n_seg = len(elig)
+    p = max(((total + 2047) // 2048) * 2048, km.SEG_BLOCK)
+    f_ri_m = np.zeros((p, NUM_RI_BINS), np.int32)
+    f_rc_m = np.zeros(p, np.int32)
+    seg = np.full(p, n_seg, np.int32)
+    keys = np.zeros((n_seg, 2), np.uint32)
+    for si, li in enumerate(elig):
+        multi, nm = per_layer[li]
+        sl = slice(offs[li], offs[li + 1])
+        o = seg_off[si]
+        f_ri_m[o:o + nm] = f_ri_f[sl][multi]
+        f_rc_m[o:o + nm] = f_rc_f[sl][multi]
+        seg[o:o + nm] = si
+        keys[si] = np.asarray(jax.random.PRNGKey(key_seeds[li]))
+    fit = _fit_segmented(jnp.asarray(f_ri_m), jnp.asarray(f_rc_m),
+                         jnp.asarray(seg), jnp.asarray(seg_off),
+                         jnp.asarray(np.asarray(counts, np.int32)),
+                         jnp.asarray(keys), n_seg=n_seg,
+                         use_kernel=use_kernel)
+    fit_np = {k: np.asarray(v) for k, v in fit.items()}
+    out: Dict[int, Dict] = {}
+    for si, li in enumerate(elig):
+        nm = per_layer[li][1]
+        o = seg_off[si]
+        out[li] = {"rc_assign": fit_np["rc_assign"][o:o + nm],
+                   "ri_assign": fit_np["ri_assign"][o:o + nm],
+                   "rc_centers": fit_np["rc_centers"][si],
+                   "rc_centers_norm": fit_np["rc_centers_norm"][si],
+                   "ri_centers": fit_np["ri_centers"][si]}
+    return out
 
 
 def _assemble(flat, lo: int, hi: int,
               hash_fn: Optional[Callable]) -> LernModel:
     """Build the LernModel for layer range [lo, hi) of a flat fit."""
-    uniq_f, f_ri_f, f_rc_f, n_uniq_all, offs, per_layer, group_of, \
-        fits = flat
+    uniq_f, f_ri_f, f_rc_f, n_uniq_all, offs, per_layer, layer_fits = flat
     n_l = hi - lo
     n_uniq = n_uniq_all[lo:hi]
     n_tab = _bucket(int(n_uniq.max(initial=1)))
@@ -393,10 +578,9 @@ def _assemble(flat, lo: int, hi: int,
         sl = slice(offs[li], offs[li + 1])
         uniq[k, :nu] = uniq_f[sl]
         features.append(f_ri_f[sl][multi].astype(np.int64))
-        if li not in group_of:
+        if li not in layer_fits:
             continue
-        g, gi = group_of[li]
-        ann = _annotate(jax.tree.map(lambda a, i=gi: a[i], fits[g]), nm)
+        ann = _annotate(layer_fits[li], nm)
         rc[k, :nu][multi] = ann["rc_label"].astype(np.int8)
         ri[k, :nu][multi] = ann["ri_label"].astype(np.int8)
         rc_c[k], ri_c[k] = ann["rc_centers"], ann["ri_centers"]
@@ -418,7 +602,8 @@ def _layer_sorted(trace: Trace):
 
 def train_model_batched(trace: Trace, hash_fn: Optional[Callable] = None,
                         seed: int = 0,
-                        use_kernel: Optional[bool] = None) -> LernModel:
+                        use_kernel: Optional[bool] = None,
+                        fit_engine: Optional[str] = None) -> LernModel:
     """Device-resident trainer: the whole model as two device programs.
 
     Program 1 (``reuse.reuse_features_flat``) extracts every layer's
@@ -430,22 +615,26 @@ def train_model_batched(trace: Trace, hash_fn: Optional[Callable] = None,
     k-means fits as one jitted call, layers grouped into power-of-two
     capacity buckets (``use_kernel``: None = Pallas assignment where it
     compiles).  No per-layer Python k-means loop; only the O(k)-sized
-    semantic annotation runs on the host.  Bitwise-equal to ``train`` on
-    the cluster tables (the float pipeline is the shared ``_fit_layer`` at
-    identical padded shapes)."""
+    semantic annotation runs on the host.  With ``fit_engine="bucketed"``
+    it is bitwise-equal to ``train`` (the float pipeline is the shared
+    ``_fit_layer`` at identical padded shapes); the default segmented
+    engine is cluster-assignment-equal to that oracle (same label tables,
+    centers to FP reassociation) with no capacity padding."""
     lines_all, layer_all = _layer_sorted(trace)
     if hash_fn is not None:
         lines_all = hash_fn(lines_all)
     n_l = max(len(trace.layer_names), 1)
     flat = _fit_flat(lines_all, layer_all, n_l,
-                     [seed + li for li in range(n_l)], use_kernel)
+                     [seed + li for li in range(n_l)], use_kernel,
+                     fit_engine)
     return _assemble(flat, 0, n_l, hash_fn)
 
 
 def train_family_batched(traces: List[Trace],
                          hash_fn: Optional[Callable] = None,
                          seed: int = 0,
-                         use_kernel: Optional[bool] = None
+                         use_kernel: Optional[bool] = None,
+                         fit_engine: Optional[str] = None
                          ) -> List[LernModel]:
     """Train several configs' LERN models in ONE device dispatch pair.
 
@@ -475,7 +664,7 @@ def train_family_batched(traces: List[Trace],
     if hash_fn is not None and lines_all.size:
         lines_all = hash_fn(lines_all)
     flat = _fit_flat(lines_all, layer_all, int(bounds[-1]), seeds,
-                     use_kernel)
+                     use_kernel, fit_engine)
     return [_assemble(flat, int(bounds[ci]), int(bounds[ci + 1]), hash_fn)
             for ci in range(len(traces))]
 

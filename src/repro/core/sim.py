@@ -32,6 +32,7 @@ from . import llc as llc_mod
 from . import lrpt as lrpt_mod
 from .apm import APMState, bypass_mask
 from .dram import DDR3_1600, DramModel
+from . import lern as lern_mod
 from .lern import LernModel, train_family_batched, train_model_batched
 from .llc import (A_HINT, A_NONE, A_RAND, A_SHIP, HW_SCALE, LLCConfig,
                   build_rounds, pack_meta)
@@ -172,14 +173,22 @@ def load_trace(config: str, subsample_target: int) -> Trace:
     return tr
 
 
+def _lern_tag() -> str:
+    """Cache-key suffix for LERN artifacts.
+
+    v4: the default fit engine became the flat-segmented k-means
+    (cluster-assignment-equal to the bucketed oracle, but centers differ
+    by FP reassociation, so models trained by the two engines must not
+    share cache entries).  A non-default engine (``REPRO_LERN_FIT``)
+    lands under its own tag."""
+    eng = lern_mod.resolve_engine()
+    return "v4" if eng == "segmented" else f"v4-{eng}"
+
+
 def load_lern(config: str, lrpt_variant: str, subsample_target: int,
               seed: int = 0) -> LernModel:
-    """Train (or load) the LERN model through the device-batched trainer.
-
-    v3 cache key: the model layout changed to stacked lookup arrays, the
-    k-means++ draw scheme became padding-invariant, and each layer fits at
-    its own power-of-two capacity bucket."""
-    key = f"{config}-{lrpt_variant}-ss{subsample_target}-s{seed}-v3"
+    """Train (or load) the LERN model through the device-batched trainer."""
+    key = f"{config}-{lrpt_variant}-ss{subsample_target}-s{seed}-{_lern_tag()}"
     path = _cache_path("lern", key)
     if os.path.exists(path):
         with open(path, "rb") as f:
@@ -191,12 +200,24 @@ def load_lern(config: str, lrpt_variant: str, subsample_target: int,
     return model
 
 
-# Family-fit regime bound: the one-dispatch family fit amortizes the
-# fixed per-dispatch cost that dominates *tiny* traces (the ROADMAP's
-# host-bound config1-class workloads, bench_lern.json family entry);
-# big traces are extraction-compute-bound and the concatenated sort
-# costs more than the dispatches saved, so they train individually.
+# Family-fit regime bound for the BUCKETED engine: the one-dispatch
+# family fit amortizes the fixed per-dispatch cost that dominates *tiny*
+# traces (the ROADMAP's host-bound config1-class workloads); with padded
+# capacity buckets, big traces lose (the concatenated extraction costs
+# more than the dispatches saved), so they train individually.  The
+# flat-segmented engine removed the padding, and the family fit now wins
+# in both regimes (bench_lern.json v3 family block), so the gate is
+# lifted there.
 FAMILY_MAX_ACCESSES = 64_000
+
+
+def family_cap() -> float:
+    """Max trace size eligible for family-batched training under the
+    active LERN fit engine (unbounded for segmented — it wins at full
+    scale too; bench_lern.json v3)."""
+    if lern_mod.resolve_engine() == "segmented":
+        return float("inf")
+    return FAMILY_MAX_ACCESSES
 
 
 def load_lern_family(configs, lrpt_variant: str, subsample_target: int,
@@ -205,20 +226,24 @@ def load_lern_family(configs, lrpt_variant: str, subsample_target: int,
     """Train every *uncached* config's LERN model, family-batching the
     small ones into one dispatch pair.
 
-    ``lern.train_family_batched`` is bitwise-identical per config to
-    ``train_model_batched``, so results land under the same v3 cache
-    keys ``load_lern`` reads — the sweep engine calls this up front
-    (sweep.map_points) to turn N tiny host-bound training dispatches
-    into one, and every later ``load_lern``/``trace_clusters`` is a
-    cache read.  Traces above ``FAMILY_MAX_ACCESSES`` train alone (the
-    family concatenation only pays off in the dispatch-bound regime);
+    ``lern.train_family_batched`` is identical per config to
+    ``train_model_batched`` (bitwise under the bucketed engine,
+    assignment-equal tables under segmented), so results land under the
+    same cache keys ``load_lern`` reads — the sweep engine calls this up
+    front (sweep.map_points) to turn N tiny host-bound training
+    dispatches into one, and every later ``load_lern``/``trace_clusters``
+    is a cache read.  Traces above ``family_cap()`` train alone (no cap
+    under the segmented engine; the bucketed engine's family
+    concatenation only pays off in the dispatch-bound regime);
     ``family_only=True`` skips them entirely — the sweep pre-pass uses
-    this so big models keep training *in parallel* inside the pool
-    workers instead of serially in the parent."""
+    this so big models that must train individually keep training *in
+    parallel* inside the pool workers instead of serially in the
+    parent."""
     out: Dict[str, LernModel] = {}
     missing = []
     for config in configs:
-        key = f"{config}-{lrpt_variant}-ss{subsample_target}-s{seed}-v3"
+        key = (f"{config}-{lrpt_variant}-ss{subsample_target}-s{seed}-"
+               f"{_lern_tag()}")
         path = _cache_path("lern", key)
         if os.path.exists(path):
             with open(path, "rb") as f:
@@ -228,8 +253,9 @@ def load_lern_family(configs, lrpt_variant: str, subsample_target: int,
     if missing:
         hash_fn = lrpt_train_hash(lrpt_variant)
         traces = [load_trace(c, subsample_target) for c, _ in missing]
+        cap = family_cap()
         small = [i for i, tr in enumerate(traces)
-                 if tr.num_accesses <= FAMILY_MAX_ACCESSES]
+                 if tr.num_accesses <= cap]
         if len(small) > 1:
             models = train_family_batched(
                 [traces[i] for i in small], hash_fn=hash_fn, seed=seed)
@@ -266,7 +292,8 @@ def trace_clusters(config: str, lrpt_variant: str, subsample_target: int
                    ) -> Dict[str, np.ndarray]:
     """Per-access (rc, ri) cluster ids via the L-RPT, plus per-layer cold
     centers — precomputed once (the table is static per layer)."""
-    key = f"{config}-{lrpt_variant}-ss{subsample_target}-clusters-v3"
+    key = (f"{config}-{lrpt_variant}-ss{subsample_target}-clusters-"
+           f"{_lern_tag()}")
     path = _cache_path("lern", key)
     if os.path.exists(path):
         with open(path, "rb") as f:

@@ -234,10 +234,13 @@ def _prepare_lern(tasks) -> None:
     Tiny configs are host-bound when trained one dispatch at a time
     (bench_lern.json); training whole config families in one device
     dispatch up front means workers (and inline groups) only read the
-    cache for them.  Models are bitwise-equal to per-config training,
-    so this is purely a scheduling change.  Only the small
-    (dispatch-bound) traces train here — big uncached models stay with
-    the workers, which train them in parallel as before."""
+    cache for them.  Models are identical to per-config training, so
+    this is purely a scheduling change.  Under the default segmented
+    fit engine every uncached trace trains here (the family fit wins in
+    both regimes — sim.family_cap() is unbounded); under the bucketed
+    oracle engine only the small dispatch-bound traces do, and big
+    uncached models stay with the workers, which train them in parallel
+    as before."""
     fam: Dict[Tuple, List[str]] = {}
     for config, _mix, pols, params, _dram, _paths in tasks:
         for pol in pols:

@@ -80,6 +80,13 @@ _BENCH_PREFIX = "hydra-bench-"
 # per-entry numeric requirements of the bench-sim artifact
 _BENCH_SIM_NUMERIC = ("lanes", "epochs", "host_s", "fused_s",
                       "host_eps", "fused_eps", "speedup")
+# bench-lern v3: every entry carries the bucketed/segmented fit pair (the
+# engine comparison the segmented k-means tentpole is gated on); v2-only
+# writers (no pair) are rejected so the artifact gate stays honest
+_BENCH_LERN_SCHEMA = "hydra-bench-lern/v3"
+_BENCH_LERN_NUMERIC = ("host_s", "device_s", "bucketed_fit_s",
+                       "segmented_fit_s", "speedup", "seg_speedup",
+                       "accesses", "layers")
 
 
 def validate_bench(doc: Dict) -> List[str]:
@@ -91,10 +98,15 @@ def validate_bench(doc: Dict) -> List[str]:
     if not isinstance(schema, str) or not schema.startswith(_BENCH_PREFIX):
         errs.append(f"schema: expected '{_BENCH_PREFIX}*', got {schema!r}")
         schema = ""
+    if schema.startswith("hydra-bench-lern") and schema != _BENCH_LERN_SCHEMA:
+        errs.append(f"schema: bench-lern writers must emit "
+                    f"{_BENCH_LERN_SCHEMA!r} (got {schema!r}; v2-only "
+                    "entries lack the bucketed/segmented fit pair)")
     entries = doc.get("entries")
     if not isinstance(entries, list) or not entries:
         return errs + ["entries: expected a non-empty list"]
     is_sim = schema.startswith("hydra-bench-sim")
+    is_lern = schema == _BENCH_LERN_SCHEMA
     for i, e in enumerate(entries):
         where = f"entries[{i}]"
         if not isinstance(e, dict):
@@ -112,6 +124,10 @@ def validate_bench(doc: Dict) -> List[str]:
                     errs.append(f"{where}.{k}: expected a number")
             if not isinstance(e.get("mix"), str):
                 errs.append(f"{where}.mix: expected string")
+        if is_lern:
+            for k in _BENCH_LERN_NUMERIC:
+                if not isinstance(e.get(k), numbers.Real):
+                    errs.append(f"{where}.{k}: expected a number")
     return errs
 
 

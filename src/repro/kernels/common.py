@@ -13,6 +13,12 @@ import jax.numpy as jnp
 # True -> run Pallas kernels in interpret mode (non-TPU backends).
 INTERPRET: bool = jax.default_backend() != "tpu"
 
+# Row granularity of the flat-segmented k-means layout: every segment's
+# point run is padded to a multiple of this, so each SEG_BLOCK-row block
+# belongs to exactly one segment and the segmented assignment kernel can
+# map block -> centroid slab with one prefetched id per block.
+SEG_BLOCK = 8
+
 
 def round_up(n: int, multiple: int) -> int:
     """Smallest multiple of ``multiple`` that is >= ``n``."""

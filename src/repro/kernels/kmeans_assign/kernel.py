@@ -25,6 +25,50 @@ def _kernel(x_ref, c_ref, o_ref):
     o_ref[...] = jnp.argmin(d2, axis=1).astype(jnp.int32)
 
 
+def _seg_kernel(bseg_ref, x_ref, c_ref, o_ref):
+    del bseg_ref  # consumed by the index maps (scalar prefetch)
+    x = x_ref[...].astype(jnp.float32)          # [block_n, D]
+    c = c_ref[0].astype(jnp.float32)            # [K, D] — this block's segment
+    xc = jax.lax.dot_general(x, c, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    c2 = jnp.sum(c * c, axis=1)                 # [K]
+    d2 = c2[None, :] - 2.0 * xc                 # [block_n, K]
+    o_ref[...] = jnp.argmin(d2, axis=1).astype(jnp.int32)
+
+
+def kmeans_assign_segmented(x: jnp.ndarray, centers: jnp.ndarray,
+                            block_seg: jnp.ndarray, *, block_n: int = 8,
+                            interpret: bool = True) -> jnp.ndarray:
+    """Segment-blocked assignment: x [P, D] (P % block_n == 0), centers
+    [S, K, D], block_seg [P // block_n] int32 mapping each row block to its
+    segment -> assignment [P] int32.
+
+    The flat-segmented k-means layout pads every segment's point run to a
+    multiple of ``block_n`` (``kernels.common.SEG_BLOCK``), so a block never
+    straddles segments; ``block_seg`` is scalar-prefetched and drives the
+    centroid BlockSpec index map — each program instance only ever sees its
+    own segment's [K, D] centroid slab, not the full [S, K, D] table.
+    """
+    from jax.experimental.pallas import tpu as pltpu
+
+    p, d = x.shape
+    s, k, _ = centers.shape
+    assert p % block_n == 0 and block_seg.shape[0] == p // block_n, \
+        (p, block_n, block_seg.shape)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(p // block_n,),
+        in_specs=[pl.BlockSpec((block_n, d), lambda b, bs: (b, 0)),
+                  pl.BlockSpec((1, k, d), lambda b, bs: (bs[b], 0, 0))],
+        out_specs=pl.BlockSpec((block_n,), lambda b, bs: (b,)))
+    return pl.pallas_call(
+        _seg_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((p,), jnp.int32),
+        interpret=interpret,
+    )(block_seg, x, centers)
+
+
 def kmeans_assign(x: jnp.ndarray, centers: jnp.ndarray, *,
                   block_n: int = 1024, interpret: bool = True) -> jnp.ndarray:
     """x [N, D] (N % block_n == 0, D % 128 == 0 — ops pads), centers [K, D]

@@ -4,8 +4,25 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from ..common import INTERPRET, block_and_pad, round_up
-from .kernel import kmeans_assign
+from ..common import INTERPRET, SEG_BLOCK, block_and_pad, round_up
+from .kernel import kmeans_assign, kmeans_assign_segmented
+
+
+@jax.jit
+def assign_segmented(x: jnp.ndarray, centers: jnp.ndarray,
+                     seg: jnp.ndarray) -> jnp.ndarray:
+    """x [P, D] in the flat-segmented layout (each segment's rows padded
+    to SEG_BLOCK multiples), centers [S, K, D], seg [P] int32 (pad rows
+    carry S) -> [P] int32 (pad rows: garbage, matches kmeans.assign_segmented_jnp
+    on real rows).  One prefetched segment id per SEG_BLOCK row block."""
+    p, d = x.shape
+    s, k, _ = centers.shape
+    dp = round_up(d, 128)
+    xp = jnp.zeros((p, dp), x.dtype).at[:, :d].set(x)
+    cp = jnp.zeros((s, k, dp), centers.dtype).at[:, :, :d].set(centers)
+    bseg = jnp.minimum(seg[::SEG_BLOCK], s - 1)
+    return kmeans_assign_segmented(xp, cp, bseg, block_n=SEG_BLOCK,
+                                   interpret=INTERPRET)
 
 
 @jax.jit

@@ -6,3 +6,12 @@ def assign_ref(x: jnp.ndarray, centers: jnp.ndarray) -> jnp.ndarray:
     d2 = jnp.sum((x[:, None, :].astype(jnp.float32)
                   - centers[None, :, :].astype(jnp.float32)) ** 2, axis=-1)
     return jnp.argmin(d2, axis=1).astype(jnp.int32)
+
+
+def assign_segmented_ref(x: jnp.ndarray, centers: jnp.ndarray,
+                         seg: jnp.ndarray) -> jnp.ndarray:
+    """Per-point nearest centroid within the point's own segment block."""
+    segc = jnp.minimum(seg, centers.shape[0] - 1)
+    cg = centers[segc].astype(jnp.float32)           # [P, K, D]
+    d2 = jnp.sum((x[:, None, :].astype(jnp.float32) - cg) ** 2, axis=-1)
+    return jnp.argmin(d2, axis=1).astype(jnp.int32)

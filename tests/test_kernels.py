@@ -66,3 +66,54 @@ def test_kmeans_fit_uses_kernel():
     np.testing.assert_allclose(np.asarray(a.centers), np.asarray(b.centers),
                                atol=1e-5)
     np.testing.assert_array_equal(np.asarray(a.assign), np.asarray(b.assign))
+
+
+@pytest.mark.parametrize("sizes,d,k", [
+    ([13, 8, 29], 4, 4), ([100], 4, 4), ([8, 8, 8, 8], 8, 4),
+    ([5, 300, 11], 4, 6),
+])
+def test_kmeans_assign_segmented(sizes, d, k):
+    """Segment-blocked Pallas assignment == per-point jnp oracle on the
+    flat-segmented layout (ragged segments, SEG_BLOCK-padded runs)."""
+    from repro.core.kmeans import segment_layout
+    rng = np.random.default_rng(11)
+    off, total = segment_layout(sizes)
+    s = len(sizes)
+    x = np.zeros((total, d), np.float32)
+    seg = np.full(total, s, np.int32)
+    for i, n in enumerate(sizes):
+        x[off[i]:off[i] + n] = rng.normal(size=(n, d)) * 3
+        seg[off[i]:off[i] + n] = i
+    centers = jnp.asarray(rng.normal(size=(s, k, d)).astype(np.float32))
+    got = kops.assign_segmented(jnp.asarray(x), centers, jnp.asarray(seg))
+    want = kref.assign_segmented_ref(jnp.asarray(x), centers,
+                                     jnp.asarray(seg))
+    valid = seg < s
+    np.testing.assert_array_equal(np.asarray(got)[valid],
+                                  np.asarray(want)[valid])
+
+
+def test_kmeans_fit_segmented_uses_kernel():
+    """kmeans_fit_segmented(use_kernel=True) equals the jnp path."""
+    from repro.core.kmeans import kmeans_fit_segmented, segment_layout
+    rng = np.random.default_rng(1)
+    sizes = [40, 120, 17]
+    off, total = segment_layout(sizes)
+    s = len(sizes)
+    x = np.zeros((total, 4), np.float32)
+    seg = np.full(total, s, np.int32)
+    for i, n in enumerate(sizes):
+        x[off[i]:off[i] + n] = rng.normal(size=(n, 4))
+        seg[off[i]:off[i] + n] = i
+    keys = jnp.stack([jax.random.PRNGKey(i) for i in range(s)])
+    a = kmeans_fit_segmented(jnp.asarray(x), jnp.asarray(seg), off,
+                             np.asarray(sizes, np.int32), keys, n_seg=s,
+                             k=4, iters=12, use_kernel=False)
+    b = kmeans_fit_segmented(jnp.asarray(x), jnp.asarray(seg), off,
+                             np.asarray(sizes, np.int32), keys, n_seg=s,
+                             k=4, iters=12, use_kernel=True)
+    np.testing.assert_allclose(np.asarray(a.centers), np.asarray(b.centers),
+                               atol=1e-5)
+    valid = seg < s
+    np.testing.assert_array_equal(np.asarray(a.assign)[valid],
+                                  np.asarray(b.assign)[valid])

@@ -1,14 +1,20 @@
 """Device-resident LERN training: the batched pipeline must reproduce the
-host-numpy reference bitwise.
+host-numpy reference bitwise, and the flat-segmented fit engine must be
+cluster-assignment-equal to that bucketed oracle.
 
-Three layers of parity:
+Layers of parity:
 * jitted ``reuse_features_jax`` == numpy oracle, for any padding amount
   and ragged layer batches (hypothesis property; integer-exact);
 * ``kmeans_fit_batched`` row == single ``kmeans_fit_masked`` at the same
   padded shape (the vmap-vs-single bitwise claim the trainer rests on);
-* ``train_model_batched`` == ``train`` on a multi-layer trace (cluster
-  tables, centers, uniq sets — all bitwise), plus packed L-RPT images ==
-  per-layer ``load_layer`` tables.
+* ``train_model_batched(fit_engine="bucketed")`` == ``train`` on a
+  multi-layer trace (cluster tables, centers, uniq sets — all bitwise),
+  plus packed L-RPT images == per-layer ``load_layer`` tables;
+* ``train_model_batched(fit_engine="segmented")`` == the bucketed oracle
+  on the semantic cluster-label tables (the annotation step's
+  centroid-sort IS the permutation canonicalization), with centers equal
+  to FP reassociation — across ragged, empty, single-point, same-size,
+  and one-giant-layer shapes.
 """
 import jax
 import jax.numpy as jnp
@@ -80,10 +86,35 @@ def _synthetic_trace(n_layers: int = 3, seed: int = 0) -> Trace:
                  compute_cycles=len(line))
 
 
+def _assert_labels_equal(a, b, centers_exact=True):
+    """a (oracle) and b agree on every cluster-label table; centers are
+    bitwise when ``centers_exact`` else allclose (FP reassociation)."""
+    assert a.n_layers == b.n_layers
+    np.testing.assert_array_equal(a.n_uniq, b.n_uniq)
+    for li in range(a.n_layers):
+        n = int(a.n_uniq[li])
+        np.testing.assert_array_equal(a.uniq[li, :n], b.uniq[li, :n])
+        np.testing.assert_array_equal(a.rc_cluster[li, :n],
+                                      b.rc_cluster[li, :n])
+        np.testing.assert_array_equal(a.ri_cluster[li, :n],
+                                      b.ri_cluster[li, :n])
+        np.testing.assert_array_equal(a.features_ri[li], b.features_ri[li])
+        if centers_exact:
+            np.testing.assert_array_equal(a.rc_centers[li],
+                                          b.rc_centers[li])
+            np.testing.assert_array_equal(a.ri_centers[li],
+                                          b.ri_centers[li])
+        else:
+            np.testing.assert_allclose(a.rc_centers[li], b.rc_centers[li],
+                                       rtol=1e-4, atol=1e-4)
+            np.testing.assert_allclose(a.ri_centers[li], b.ri_centers[li],
+                                       rtol=1e-4, atol=1e-4)
+
+
 def test_train_batched_matches_host_bitwise():
     tr = _synthetic_trace()
     a = lern.train(tr, seed=3)
-    b = lern.train_model_batched(tr, seed=3)
+    b = lern.train_model_batched(tr, seed=3, fit_engine="bucketed")
     np.testing.assert_array_equal(a.n_uniq, b.n_uniq)
     for li in range(a.n_layers):
         n = int(a.n_uniq[li])
@@ -97,6 +128,60 @@ def test_train_batched_matches_host_bitwise():
         np.testing.assert_array_equal(a.features_ri[li], b.features_ri[li])
 
 
+def test_train_segmented_matches_bucketed_labels():
+    """The flat-segmented engine reproduces the bucketed oracle's cluster
+    tables exactly (labels canonicalized by the annotation centroid sort)
+    with centers equal up to FP reassociation."""
+    tr = _synthetic_trace()
+    a = lern.train_model_batched(tr, seed=3, fit_engine="bucketed")
+    b = lern.train_model_batched(tr, seed=3, fit_engine="segmented")
+    _assert_labels_equal(a, b, centers_exact=False)
+
+
+def test_segmented_engine_shape_edge_cases():
+    """Empty layer, single-point layer, all-same-size layers, and one
+    giant layer among tiny ones — segmented == bucketed labels on all."""
+    def mk(chunks):
+        line = np.concatenate([np.asarray(c, np.int64) for c in chunks]) \
+            if any(len(c) for c in chunks) else np.zeros(0, np.int64)
+        layer = np.concatenate([np.full(len(c), i, np.int32)
+                                for i, c in enumerate(chunks)]) \
+            if any(len(c) for c in chunks) else np.zeros(0, np.int32)
+        return Trace(line=line, write=np.zeros_like(line, bool),
+                     cycle=np.arange(len(line)), layer=layer,
+                     layer_names=[f"l{i}" for i in range(len(chunks))],
+                     compute_cycles=max(len(line), 1))
+
+    rng = np.random.default_rng(0)
+    hot = lambda n, base: rng.choice(np.arange(24) + base, n)  # noqa: E731
+    cases = [
+        # empty middle layer
+        [hot(400, 0), [], hot(300, 1000)],
+        # single-point layer (and a single-line layer)
+        [hot(500, 0), [7], [9] * 40],
+        # all layers the same size
+        [hot(256, 0), hot(256, 1000), hot(256, 2000)],
+        # one giant segment among tiny ones
+        [hot(20, 0), hot(5000, 1000), hot(12, 2000)],
+    ]
+    for chunks in cases:
+        tr = mk(chunks)
+        a = lern.train_model_batched(tr, seed=5, fit_engine="bucketed")
+        b = lern.train_model_batched(tr, seed=5, fit_engine="segmented")
+        _assert_labels_equal(a, b, centers_exact=False)
+
+
+def test_resolve_engine():
+    assert lern.resolve_engine("auto") == "segmented"
+    assert lern.resolve_engine("bucketed") == "bucketed"
+    assert lern.resolve_engine("segmented") == "segmented"
+    try:
+        lern.resolve_engine("nope")
+        assert False, "expected ValueError"
+    except ValueError:
+        pass
+
+
 def test_train_family_batched_matches_individual_bitwise():
     """One family dispatch over several configs' traces == per-config
     ``train_model_batched``, model for model, bit for bit — the property
@@ -104,10 +189,14 @@ def test_train_family_batched_matches_individual_bitwise():
     traces = [_synthetic_trace(n_layers=3, seed=11),
               _synthetic_trace(n_layers=2, seed=12),
               _synthetic_trace(n_layers=4, seed=13)]
-    fam = lern.train_family_batched(traces, seed=7)
+    fam = lern.train_family_batched(traces, seed=7, fit_engine="bucketed")
     assert len(fam) == len(traces)
+    segf = lern.train_family_batched(traces, seed=7,
+                                     fit_engine="segmented")
+    for got, seg in zip(fam, segf):
+        _assert_labels_equal(got, seg, centers_exact=False)
     for tr, got in zip(traces, fam):
-        want = lern.train_model_batched(tr, seed=7)
+        want = lern.train_model_batched(tr, seed=7, fit_engine="bucketed")
         assert got.n_layers == want.n_layers
         np.testing.assert_array_equal(got.n_uniq, want.n_uniq)
         for li in range(want.n_layers):
@@ -130,21 +219,26 @@ def test_train_family_batched_hashed_variant():
     traces = [_synthetic_trace(n_layers=2, seed=21),
               _synthetic_trace(n_layers=2, seed=22)]
     hashed = lrpt.lrpt_train_hash("loptv3")
-    fam = lern.train_family_batched(traces, hash_fn=hashed, seed=2)
+    fam = lern.train_family_batched(traces, hash_fn=hashed, seed=2,
+                                    fit_engine="bucketed")
     for tr, got in zip(traces, fam):
-        want = lern.train_model_batched(tr, hash_fn=hashed, seed=2)
+        want = lern.train_model_batched(tr, hash_fn=hashed, seed=2,
+                                        fit_engine="bucketed")
         np.testing.assert_array_equal(got.rc_cluster, want.rc_cluster)
         np.testing.assert_array_equal(got.ri_cluster, want.ri_cluster)
 
 
 def test_train_batched_hashed_variant():
-    """§VI-J hashed training goes through the same batched path."""
+    """§VI-J hashed training goes through the same batched path — both
+    fit engines."""
     tr = _synthetic_trace(n_layers=2, seed=5)
     hashed = lrpt.lrpt_train_hash("loptv3")
     a = lern.train(tr, hash_fn=hashed, seed=1)
-    b = lern.train_model_batched(tr, hash_fn=hashed, seed=1)
-    np.testing.assert_array_equal(a.rc_cluster, b.rc_cluster)
-    np.testing.assert_array_equal(a.ri_cluster, b.ri_cluster)
+    for engine in ("bucketed", "segmented"):
+        b = lern.train_model_batched(tr, hash_fn=hashed, seed=1,
+                                     fit_engine=engine)
+        np.testing.assert_array_equal(a.rc_cluster, b.rc_cluster)
+        np.testing.assert_array_equal(a.ri_cluster, b.ri_cluster)
 
 
 def test_packed_tables_match_load_layer():
