@@ -1,22 +1,38 @@
-"""``bench-sim`` — epochs/sec of the main simulation path, host vs fused.
+"""``bench-sim`` — simulation-path throughput: engines and whole sweeps.
 
 The perf-trajectory artifact for the device-resident epoch loop
-(core/fused.py), sibling to ``bench_lern.json``: for every suite config
-it times the sequential host loop (``sim.drive_lane``, one lane at a
-time — the oracle the fused engine is bitwise-pinned against) and the
-fused super-step engine on the same policy group, at ``lanes`` of 1 and
-4, and records epochs/sec.  Emits ``bench_sim.json`` (schema
-hydra-bench-sim/v1).
+(core/fused.py), sibling to ``bench_lern.json``.  Two entry kinds
+(schema hydra-bench-sim/v2):
+
+``kind="engine"`` — for every suite config it times the sequential host
+loop (``sim.drive_lane``, one lane at a time — the oracle the fused
+engine is bitwise-pinned against) and the fused super-step engine on
+the same policy group, at ``lanes`` of 1 and 4, and records epochs/sec.
+
+``kind="sweep"`` — sweep-level points/sec: the CI smoke sweep (a
+deadline-factor axis x the 4-policy lane set, i.e. several geometry-
+compatible groups in one bucket) is driven end to end through
+``sweep.map_points(jobs=1)`` (the per-group host/process fallback path)
+and through ``sweep.run_bucketed`` (the whole-sweep vmapped device
+program), and ``pps_speedup = bucketed_pps / map_pps`` is recorded.
+On a single-core single-device host the two are within the group-vmap
+overhead of each other (ratio ~0.8-1.0x); the bucketed engine pulls
+ahead when the group axis actually parallelises — multiple devices
+(``shard_map``) or an accelerator backend — so this metric is gated as
+a *trend* against the committed baseline, not an absolute floor.
 
 Methodology: artifacts (trace, LERN tables, deadline calibration) are
 loaded/warmed first so both engines measure pure simulation; each
 engine then runs the full bounded simulation (fresh lanes, fresh LLC
-state) ``REPS`` times and the best time is reported — rep 1 carries
-this shape's jit compilation, so min() excludes it (the same best-of
-convention as bench_lern).
+state, fresh result cache) ``REPS`` times and the best time is
+reported — rep 1 carries this shape's jit compilation, so min()
+excludes it (the same best-of convention as bench_lern).
 """
 import dataclasses
 import json
+import os
+import shutil
+import tempfile
 import time
 
 import numpy as np
@@ -30,6 +46,9 @@ LANE_SETS = {
     1: ("hydra",),
     4: ("fifo-nb", "arp-cs", "arp-cs-as", "hydra"),
 }
+# the sweep-level shape: a deadline-factor axis over the 4-policy lane
+# set — distinct groups sharing one bucket (the common figure sweep)
+SWEEP_FACTORS = (1.0, 1.05, 1.1, 1.15)
 # bounded epoch budget: full per-epoch work at the suite's scale, but a
 # capped horizon so the bench stays minutes, not the full sweep's hours
 BENCH_INPUTS = 2
@@ -71,6 +90,38 @@ def _best_of(fn, reps: int = REPS):
     return best, epochs
 
 
+def _sweep_points(cfg: str, mix: str, p: sim.SimParams):
+    """The CI smoke sweep: deadline-factor axis x the 4-policy lane set."""
+    pts = []
+    for f in SWEEP_FACTORS:
+        pf = dataclasses.replace(p, deadline_factor=f)
+        sim.calibrated_deadline(cfg, pf, DDR3_1600)  # warm (shared quotient)
+        for name in LANE_SETS[4]:
+            pts.append(sweep.SweepPoint(cfg, mix, policies.get(name), pf))
+    return pts
+
+
+def _bench_sweep(pts, fn):
+    """Best-of-REPS seconds for one sweep leg, with the result cache
+    redirected to a scratch dir wiped per rep (so every rep simulates —
+    the cache layer is part of both legs, hits are not)."""
+    scratch = tempfile.mkdtemp(prefix="bench-sweep-")
+    keep = sim.CACHE_DIR
+    best = float("inf")
+    try:
+        for _ in range(REPS):
+            shutil.rmtree(scratch, ignore_errors=True)
+            os.makedirs(scratch)
+            sim.CACHE_DIR = scratch
+            t0 = time.time()
+            fn()
+            best = min(best, time.time() - t0)
+    finally:
+        sim.CACHE_DIR = keep
+        shutil.rmtree(scratch, ignore_errors=True)
+    return best
+
+
 def run(suite: Suite):
     rows = []
     entries = []
@@ -94,23 +145,49 @@ def run(suite: Suite):
                 {"host_eps": host_eps, "fused_eps": fused_eps,
                  "speedup": speedup, "epochs": ef}))
             entries.append({
+                "kind": "engine",
                 "config": cfg, "mix": mix, "lanes": lanes,
                 "epochs": int(ef),
                 "host_s": round(host_s, 4), "fused_s": round(fused_s, 4),
                 "host_eps": round(host_eps, 2),
                 "fused_eps": round(fused_eps, 2),
                 "speedup": round(speedup, 3)})
+        # sweep-level points/sec: map_points --jobs 1 vs the bucketed
+        # whole-sweep device program, same points, same cache handling
+        pts = _sweep_points(cfg, mix, p)
+        t1 = time.time()
+        map_s = _bench_sweep(pts, lambda: sweep.map_points(pts, jobs=1))
+        bucketed_s = _bench_sweep(pts, lambda: sweep.run_bucketed(pts))
+        map_pps = len(pts) / max(map_s, 1e-9)
+        bucketed_pps = len(pts) / max(bucketed_s, 1e-9)
+        pps_speedup = bucketed_pps / max(map_pps, 1e-9)
+        rows.append(emit(
+            f"bench_sim/sweep-{cfg}-{mix}", t1,
+            {"map_pps": map_pps, "bucketed_pps": bucketed_pps,
+             "pps_speedup": pps_speedup, "points": len(pts)}))
+        entries.append({
+            "kind": "sweep", "config": cfg, "mix": mix,
+            "lanes": len(LANE_SETS[4]), "points": len(pts),
+            "groups": len(SWEEP_FACTORS), "epochs": BENCH_EPOCHS,
+            "map_s": round(map_s, 4), "bucketed_s": round(bucketed_s, 4),
+            "map_pps": round(map_pps, 3),
+            "bucketed_pps": round(bucketed_pps, 3),
+            "pps_speedup": round(pps_speedup, 3)})
     if entries:
         geo = {}
         for lanes in LANE_SETS:
-            sp = [e["speedup"] for e in entries if e["lanes"] == lanes]
+            sp = [e["speedup"] for e in entries
+                  if e["kind"] == "engine" and e["lanes"] == lanes]
             geo[str(lanes)] = round(float(np.exp(np.mean(np.log(sp)))), 3)
+        pp = [e["pps_speedup"] for e in entries if e["kind"] == "sweep"]
+        geo_pps = round(float(np.exp(np.mean(np.log(pp)))), 3)
         with open(BENCH_SIM_PATH, "w") as f:
-            json.dump({"schema": "hydra-bench-sim/v1",
+            json.dump({"schema": "hydra-bench-sim/v2",
                        "geomean_speedup_by_lanes": geo,
+                       "geomean_pps_speedup": geo_pps,
                        "entries": entries}, f, indent=1)
         print(f"# wrote {len(entries)} entries to {BENCH_SIM_PATH} "
               f"(geomean fused speedup: "
               + ", ".join(f"{k} lanes {v}x" for k, v in geo.items())
-              + ")", flush=True)
+              + f"; sweep pps speedup {geo_pps}x)", flush=True)
     return rows

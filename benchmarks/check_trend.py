@@ -9,7 +9,7 @@ at smoke scale and runs::
         bench_lern.json=bench_lern.smoke.json
 
 Each ``current=baseline`` pair is matched entry-by-entry on identifying
-keys (config/mix/lanes/epochs for bench-sim; config/accesses for
+keys (kind/config/mix/lanes/epochs for bench-sim; config/accesses for
 bench-lern — scale-sensitive keys included so a baseline from a different
 footprint can never silently compare).  For every matched entry the
 speedup-style metrics are ratioed current/baseline, and the job FAILS when
@@ -29,9 +29,14 @@ from typing import Dict, List, Tuple
 
 import numpy as np
 
-# identifying keys + gated metrics per artifact family
+# identifying keys + gated metrics per artifact family; bench-sim/v2
+# entries split by kind — "engine" rows carry ``speedup`` (fused vs
+# host), "sweep" rows carry ``pps_speedup`` (bucketed vs map_points);
+# a metric absent from an entry is simply skipped for it, so one
+# profile gates both kinds
 _PROFILES = {
-    "hydra-bench-sim": (("config", "mix", "lanes", "epochs"), ("speedup",)),
+    "hydra-bench-sim": (("kind", "config", "mix", "lanes", "epochs"),
+                        ("speedup", "pps_speedup")),
     "hydra-bench-lern": (("config", "accesses"),
                          ("speedup", "seg_speedup")),
 }

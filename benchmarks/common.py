@@ -47,20 +47,28 @@ class Suite:
     mixes: Tuple[str, ...]
     configs: Tuple[str, ...]
     jobs: int = 1
+    engine: str = "auto"        # ExecPlan engine for every figure sweep
 
     @property
     def quick(self) -> bool:
         return self.preset != "full"
 
+    @property
+    def plan(self) -> exp.ExecPlan:
+        """The execution plan every figure module passes to ``exp.run``."""
+        return exp.ExecPlan(engine=self.engine, jobs=self.jobs)
 
-def suite(preset: str = "quick", jobs: int = 1) -> Suite:
+
+def suite(preset: str = "quick", jobs: int = 1,
+          engine: str = "auto") -> Suite:
     """Resolve a preset name through the params registry into a Suite."""
     if preset not in _FOOTPRINT:
         raise ValueError(f"unknown preset {preset!r} "
                          f"(choose from {sorted(_FOOTPRINT)})")
     mixes, configs = _FOOTPRINT[preset]
     return Suite(preset=preset, params=exp.PARAMS.get(preset),
-                 mixes=mixes, configs=configs, jobs=max(1, int(jobs)))
+                 mixes=mixes, configs=configs, jobs=max(1, int(jobs)),
+                 engine=engine)
 
 
 # incremental artifact capture: every emitted row lands here the moment

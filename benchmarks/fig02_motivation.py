@@ -13,7 +13,7 @@ def run(suite: Suite):
     pols = sorted({p for g in GROUPS.values() for p in g} | {"fifo-nb"})
     spec = exp.ExperimentSpec.grid(config="config1", mix=suite.mixes,
                                    policy=pols, params=suite.params)
-    rs = exp.run(spec, jobs=suite.jobs)
+    rs = exp.run(spec, plan=suite.plan)
     rows = []
     for fig, group in GROUPS.items():
         rows.extend(policy_bar_rows(rs, fig, group, config="config1"))

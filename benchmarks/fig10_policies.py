@@ -15,7 +15,7 @@ def run(suite: Suite):
     # a subset of 10a's, so its points are covered)
     spec = exp.ExperimentSpec.grid(config="config1", mix=suite.mixes,
                                    policy=POLICIES_10A, params=suite.params)
-    rs = exp.run(spec, jobs=suite.jobs)
+    rs = exp.run(spec, plan=suite.plan)
     rows = policy_bar_rows(rs, "fig10a", POLICIES_10A, config="config1")
     # 10b: HyDRA vs deadline-aware SHIP per mix
     for mix in suite.mixes:

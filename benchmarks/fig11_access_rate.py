@@ -11,7 +11,7 @@ def run(suite: Suite):
     t0 = time.time()
     spec = exp.ExperimentSpec.grid(config="config1", mix="mix4",
                                    policy="hydra", params=suite.params)
-    rs = exp.run(spec, jobs=suite.jobs)
+    rs = exp.run(spec, plan=suite.plan)
     row = rs.one()
     r = row["result"]
     rate = np.array(r.history["accel_rate"])

@@ -9,7 +9,7 @@ POLICIES = ["fifo-nb", "arp-nb", "arp-as-d", "arp-cs-as-d", "hydra",
 def run(suite: Suite):
     spec = exp.ExperimentSpec.grid(config=suite.configs, mix=suite.mixes,
                                    policy=POLICIES, params=suite.params)
-    rs = exp.run(spec, jobs=suite.jobs)
+    rs = exp.run(spec, plan=suite.plan)
     rows = []
     for cfg in suite.configs:
         rows.extend(policy_bar_rows(rs, f"fig12/{cfg}", POLICIES,

@@ -13,7 +13,7 @@ def run(suite: Suite):
     spec = exp.ExperimentSpec.grid(config="config1", mix="mix3",
                                    policy=POLICIES, params=suite.params,
                                    record_occupancy=True)
-    rs = exp.run(spec, jobs=suite.jobs)
+    rs = exp.run(spec, plan=suite.plan)
     rows = []
     for pol in POLICIES:
         t0 = time.time()

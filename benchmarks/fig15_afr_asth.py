@@ -12,7 +12,7 @@ def run(suite: Suite):
     spec = exp.ExperimentSpec.grid(config=configs, mix=suite.mixes,
                                    policy=POLICIES + ["fifo-nb"],
                                    params=suite.params)
-    rs = exp.run(spec, jobs=suite.jobs)
+    rs = exp.run(spec, plan=suite.plan)
     rows = []
     for cfg in configs:
         rows.extend(policy_bar_rows(rs, f"fig15/{cfg}", POLICIES,

@@ -15,7 +15,7 @@ def run(suite: Suite):
         config=configs, mix=suite.mixes, policy=list(POLICIES),
         params=suite.params,
         llc_size_bytes=[mb * 1024 * 1024 // HW_SCALE for mb in SIZES_MB])
-    rs = exp.run(spec, jobs=suite.jobs)
+    rs = exp.run(spec, plan=suite.plan)
     rows = []
     for cfg in configs:
         for mb in SIZES_MB:

@@ -10,7 +10,7 @@ def run(suite: Suite):
                                    policy=list(POLICIES),
                                    params=suite.params,
                                    dram=exp.DRAM.names())
-    rs = exp.run(spec, jobs=suite.jobs)
+    rs = exp.run(spec, plan=suite.plan)
     rows = []
     for dname in exp.DRAM.names():
         rows.extend(policy_bar_rows(rs, f"fig17/{dname}", POLICIES,

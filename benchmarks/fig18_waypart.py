@@ -11,5 +11,5 @@ def run(suite: Suite):
                 for v in (name, (name, WP))]
     spec = exp.ExperimentSpec.grid(config="config1", mix=suite.mixes,
                                    policy=variants, params=suite.params)
-    rs = exp.run(spec, jobs=suite.jobs)
+    rs = exp.run(spec, plan=suite.plan)
     return policy_bar_rows(rs, "fig18", variants, config="config1")

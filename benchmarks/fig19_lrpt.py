@@ -9,5 +9,5 @@ def run(suite: Suite):
     spec = exp.ExperimentSpec.grid(config="config1", mix=suite.mixes,
                                    policy=["fifo-nb"] + variants,
                                    params=suite.params)
-    rs = exp.run(spec, jobs=suite.jobs)
+    rs = exp.run(spec, plan=suite.plan)
     return policy_bar_rows(rs, "fig19", variants, config="config1")

@@ -2,24 +2,28 @@
 
     PYTHONPATH=src python -m benchmarks.run [--preset smoke|quick|full]
                                             [--only fig12,...] [--jobs N]
+                                            [--engine auto|host|fused|bucketed]
                                             [--out sweep.json]
 
 A thin CLI over the declarative experiment API: ``--preset`` resolves a
 registered params preset + mix/config footprint into a frozen
 ``common.Suite`` that every figure module receives (no module-global
-mutation), each module expresses its sweep as an ``ExperimentSpec``, and
-the returned rows are assembled into the machine-readable **sweep.json
-v2** artifact (``hydra-sweep/v2``: every row embeds its point spec;
-validate with ``python -m repro.exp.schema sweep.json``).  Results are
-disk-cached (.cache/sim); ``--jobs N`` fans uncached sweep points over N
-worker processes.
+mutation), each module expresses its sweep as an ``ExperimentSpec`` run
+under the suite's ``exp.ExecPlan`` (``suite.plan``), and the returned
+rows are assembled into the machine-readable **sweep.json v2** artifact
+(``hydra-sweep/v2``: every row embeds its point spec; validate with
+``python -m repro.exp.schema sweep.json``).  Results are disk-cached
+(.cache/sim); ``--jobs N`` fans uncached sweep points over N worker
+processes, ``--engine`` pins the sweep engine (auto routes single-job
+sweeps through the bucketed whole-sweep device program).
 
 ``fig05_clustering`` additionally times host-numpy vs device-batched LERN
 training (the ``lern_train/*`` rows) and writes ``bench_lern.json``
-(schema hydra-bench-lern/v2) — the perf-trajectory record for the
+(schema hydra-bench-lern/v3) — the perf-trajectory record for the
 device-resident training pipeline; ``bench_sim`` does the same for the
-main simulation path (``bench_sim.json``, schema hydra-bench-sim/v1,
-host ``drive_lane`` vs the fused epoch engine).
+main simulation path (``bench_sim.json``, schema hydra-bench-sim/v2:
+host ``drive_lane`` vs the fused epoch engine, plus the sweep-level
+map-vs-bucketed points/sec entries).
 """
 import argparse
 import importlib
@@ -50,6 +54,11 @@ def main() -> None:
                     help="comma-separated module subset")
     ap.add_argument("--jobs", type=int, default=1,
                     help="worker processes for uncached sweep points")
+    ap.add_argument("--engine", default="auto",
+                    choices=["auto", "host", "fused", "bucketed"],
+                    help="sweep engine for every figure (ExecPlan.engine); "
+                         "auto = bucketed device program when --jobs 1, "
+                         "process pool otherwise")
     ap.add_argument("--out", default="sweep.json",
                     help="machine-readable results artifact path")
     args = ap.parse_args()
@@ -58,7 +67,7 @@ def main() -> None:
 
     from repro.exp import ResultSet
     from . import common
-    suite = common.suite(preset=preset, jobs=args.jobs)
+    suite = common.suite(preset=preset, jobs=args.jobs, engine=args.engine)
 
     mods = args.only.split(",") if args.only else MODULES
     print("name,us_per_call,derived")

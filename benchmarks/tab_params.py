@@ -28,7 +28,7 @@ def run(suite: Suite):
                          for v in values],
                  params=suite.params)
              for field, values in sweeps.items()]
-    rs = exp.run(specs, jobs=suite.jobs)
+    rs = exp.run(specs, plan=suite.plan)
     rows = []
     for field, values in sweeps.items():
         for v in values:

@@ -31,13 +31,18 @@ def main():
                     help="comma-separated policy names (default: the zoo)")
     ap.add_argument("--jobs", type=int, default=1,
                     help="worker processes for uncached points")
+    ap.add_argument("--engine", default="auto",
+                    choices=["auto", "host", "fused", "bucketed"],
+                    help="sweep engine (auto = bucketed device program "
+                         "when --jobs 1, process pool otherwise)")
     args = ap.parse_args()
     pols = args.policies.split(",") if args.policies else POLS
     params = dataclasses.replace(exp.PARAMS.get("default"),
                                  n_inputs=args.inputs)
     spec = exp.ExperimentSpec.grid(config=args.config, mix=args.mix,
                                    policy=pols, params=params)
-    rs = exp.run(spec, jobs=args.jobs)
+    rs = exp.run(spec, plan=exp.ExecPlan(engine=args.engine,
+                                         jobs=args.jobs))
     print("policy,ipc_speedup,dmr,core_bypass_rate,accel_bypass_rate,"
           "core_hit_rate,accel_hit_rate")
     base = None

@@ -85,6 +85,7 @@ class FusedDims:
     k_epochs: int
     max_rounds: int
     sparse_cap: int                 # 0 = rounds always dense
+    record_occ: bool                # emit per-epoch occupancy counters
 
 
 class SharedConsts(NamedTuple):
@@ -185,6 +186,7 @@ class StepOut(NamedTuple):
     rc_th: jnp.ndarray        # i64
     core_ipc: jnp.ndarray     # f64
     amal: jnp.ndarray         # f64
+    occ: jnp.ndarray          # int [2] core/accel occupancy (record_occ)
 
 
 def _np_sum_order(terms: List[jnp.ndarray]):
@@ -730,12 +732,22 @@ def _finish_lane(dims: FusedDims, sh: SharedConsts, lc, cy, bg: _Begin,
         completions=completions, totals=totals,
         total_llc=total_llc, total_dram=total_dram,
         overflow=cy.overflow | bg.ovf)
+    # per-epoch occupancy readback, fused (llc.occupancy's counts on the
+    # epoch-end state; the write-back only consumes active steps)
+    if dims.record_occ:
+        occ_valid = new_st.tags != -1
+        occ_accel = occ_valid & (new_st.owner == 1)
+        occ = jnp.stack([jnp.sum(occ_valid & ~occ_accel),
+                         jnp.sum(occ_accel)])
+    else:
+        occ = jnp.zeros(2, jnp.int32)
+
     # freeze everything when the step didn't run
     out_cy = jax.tree.map(
         lambda a, b: jnp.where(step_active, a, b), new, cy)
     out = StepOut(active=step_active, pos_before=cy.pos, n_a=n_a,
                   req=bg.req_out, ri_th=ri_th, rc_th=rc_th,
-                  core_ipc=core_ipc_sum, amal=out_cy.amal)
+                  core_ipc=core_ipc_sum, amal=out_cy.amal, occ=occ)
     return out_cy, out
 
 
@@ -763,12 +775,13 @@ def _superstep(dims: FusedDims, sh: SharedConsts, lc: LaneConsts,
 # ---------------------------------------------------------------------------
 def lane_supported(lane: Lane) -> bool:
     """Can this lane run through the fused engine?  The host path stays
-    authoritative for occupancy recording (a per-epoch state readback),
-    the core-traffic-free calibration runs, and any workload whose line
-    addresses exceed the engine's int32 staging range — ``auto`` routing
-    must degrade to the host loop for those, not crash in staging."""
+    authoritative for the core-traffic-free calibration runs and for any
+    workload whose line addresses exceed the engine's int32 staging
+    range — ``auto`` routing must degrade to the host loop for those,
+    not crash in staging.  (Occupancy recording is fused: per-epoch [2]
+    counters ride the scan outputs, see ``StepOut.occ``.)"""
     i32max = np.iinfo(np.int32).max
-    return (lane.core_traffic and not lane.p.record_occupancy
+    return (lane.core_traffic
             and lane.n_cores <= llc_mod.NUM_CORES
             and lane.m_total < i32max
             # -1 headroom: DPCP prefetches stage line + 1
@@ -786,9 +799,17 @@ def _i32(a: np.ndarray) -> np.ndarray:
 
 
 class _Staged:
-    """Everything the driver holds between super-steps."""
+    """Everything the driver holds between super-steps.
 
-    def __init__(self, lanes: List[Lane], k_epochs: int, max_rounds: int):
+    ``pads`` (m_pad, wmax_pad, nl_pad) sizes the trace/stream/layer
+    staging arrays beyond this group's natural extents so several groups
+    can stack along a leading group axis (drive_lanes_bucketed).  Padded
+    slots are zeros behind the validity masks — ``jnp.take`` clips and
+    no valid index ever reaches them, so padding cannot change results.
+    """
+
+    def __init__(self, lanes: List[Lane], k_epochs: int, max_rounds: int,
+                 pads: Optional[Tuple[int, int, int]] = None):
         lane0 = lanes[0]
         p = lane0.p
         dram = lane0.dram
@@ -806,17 +827,28 @@ class _Staged:
             has_dpcp=any(lane.policy.dpcp for lane in lanes),
             n_inputs=int(p.n_inputs), k_epochs=int(k_epochs),
             max_rounds=int(max_rounds),
-            sparse_cap=SPARSE_CAP if num_sets > SPARSE_CAP else 0)
+            sparse_cap=SPARSE_CAP if num_sets > SPARSE_CAP else 0,
+            record_occ=bool(p.record_occupancy))
 
         tr = lane0.tr
-        wmax = max([s.shape[0] for s in lane0.streams] or [1])
+        m = tr.num_accesses
+        wmax_nat = max([s.shape[0] for s in lane0.streams] or [1])
+        nl_nat = len(tr.layer_names)
+        m_pad, wmax, nl_pad = pads or (m, wmax_nat, nl_nat)
+        assert m_pad >= m and wmax >= wmax_nat and nl_pad >= nl_nat
         streams = np.zeros((n_cores, wmax), np.int32)
         for k, s in enumerate(lane0.streams):
             streams[k, :s.shape[0]] = _i32(s)
+        line = np.zeros(m_pad, np.int32)
+        line[:m] = _i32(tr.line)
+        write = np.zeros(m_pad, bool)
+        write[:m] = np.asarray(tr.write, bool)
+        layer = np.zeros(m_pad, np.int32)
+        layer[:m] = np.asarray(tr.layer, np.int32)
         self.sh = SharedConsts(
-            line=jnp.asarray(_i32(tr.line)),
-            write=jnp.asarray(np.asarray(tr.write, bool)),
-            layer=jnp.asarray(np.asarray(tr.layer, np.int32)),
+            line=jnp.asarray(line),
+            write=jnp.asarray(write),
+            layer=jnp.asarray(layer),
             streams=jnp.asarray(streams),
             nominal=jnp.asarray(np.array(
                 [pr.apkc / 1000.0 * et for pr in profiles])),
@@ -850,16 +882,17 @@ class _Staged:
             zero=jnp.float64(0.0))
 
         self._wmax = wmax
-        self._m = tr.num_accesses
-        self._n_layers = len(tr.layer_names)
+        self._m = m
+        self._m_pad = m_pad
+        self._n_layers = nl_pad
         self.lc = self._stage_lanes(lanes)
 
     def _stage_lanes(self, lanes: List[Lane]) -> LaneConsts:
         n_l, m, n_c = len(lanes), self._m, len(lanes[0].profiles)
-        rc = np.zeros((n_l, m), np.int8)
-        ri = np.zeros((n_l, m), np.int8)
+        rc = np.zeros((n_l, self._m_pad), np.int8)
+        ri = np.zeros((n_l, self._m_pad), np.int8)
         cold = np.zeros((n_l, max(self._n_layers, 1)))
-        afr = np.zeros((n_l, m), bool)
+        afr = np.zeros((n_l, self._m_pad), bool)
         writes = np.zeros((n_l, n_c, self._wmax), bool)
         mag = lanes[0].apm.ma_global
         apm_cols = {k: np.zeros(n_l) for k in (
@@ -870,12 +903,12 @@ class _Staged:
         switch = np.full(n_l, -1, np.int64)
         for i, lane in enumerate(lanes):
             if lane.clusters is not None:
-                rc[i] = lane.clusters["rc"]
-                ri[i] = lane.clusters["ri"]
+                rc[i, :m] = lane.clusters["rc"]
+                ri[i, :m] = lane.clusters["ri"]
                 cc = lane.clusters["cold_center"]
                 cold[i, :len(cc)] = cc
             if lane.afr_hints is not None:
-                afr[i] = lane.afr_hints
+                afr[i, :m] = lane.afr_hints
             for k, w in enumerate(lane.writes):
                 writes[i, k, :w.shape[0]] = w
             ap = lane.apm.params
@@ -1012,6 +1045,8 @@ def _write_back(lanes: List[Lane], carry: FusedCarry, ys: StepOut) -> None:
             h["rc_th"].append(float(y.rc_th[t, i]))
             h["core_ipc"].append(float(y.core_ipc[t, i]))
             h["amal"].append(float(y.amal[t, i]))
+            if lane.p.record_occupancy:
+                lane.occ.append([int(y.occ[t, i, 0]), int(y.occ[t, i, 1])])
             # the host's total_instr accumulation, op for op
             lane.total_instr += float(y.core_ipc[t, i] * et)
             if lane._retrain_every is not None and y.n_a[t, i] > 0:
@@ -1128,3 +1163,224 @@ def drive_lanes_fused(lanes: List[Lane], states=None,
         if retrained:
             with enable_x64():
                 staged.refresh_clusters(lanes)
+
+
+# ---------------------------------------------------------------------------
+# whole-sweep bucketing: a leading group axis over compatible lane groups
+# ---------------------------------------------------------------------------
+def bucket_key(lanes: List[Lane]) -> Tuple:
+    """Static-compatibility key for ``drive_lanes_bucketed``: two lane
+    groups may share one bucketed device program iff every compile-time
+    ``FusedDims`` field agrees — LLC geometry, lane count, core slot
+    layout, accel capacity, the DPCP prefetch segment, input count, and
+    the occupancy-record flag.  Everything else (traces, streams, knobs,
+    deadlines, max_epochs) rides as data under the group axis."""
+    lane0 = lanes[0]
+    from . import cores as cores_mod
+    core_caps = tuple(
+        max(int(cores_mod.epoch_accesses(pr, pr.ipc0, lane0.et)), 0)
+        for pr in lane0.profiles)
+    return (llc_mod.geometry_key(lane0.llc_cfg), len(lanes),
+            lane0.n_cores, core_caps, int(lane0.p.accel_epoch_cap),
+            any(lane.policy.dpcp for lane in lanes),
+            int(lane0.p.n_inputs), bool(lane0.p.record_occupancy))
+
+
+def _epoch_bucket_step(dims: FusedDims, sh_g, stop_g, lc_g, cy_g):
+    """One epoch of every group in the bucket.
+
+    The begin/finish halves vmap over the group axis (then lanes, as in
+    the per-group engine) — they are elementwise per lane, so the extra
+    batch axis cannot change their values.  The round loop runs ONCE
+    over the (G*L)-flattened lane axis: its while-loop trip count and
+    width-tier cond predicates stay scalars, exactly as in the per-group
+    engine (vmapping the loop over groups would batch the predicates and
+    execute every width branch for every round).  Flattening is safe for
+    the same reason the lane batch itself is: ``_run_rounds_batch`` is
+    already per-lane-independent, and padded trailing rounds only
+    advance the LRU tick, never per-way order (see its docstring)."""
+    n_l = dims.n_lanes
+
+    def begin_group(sh, stop, lc, cy):
+        return jax.vmap(functools.partial(_begin_lane, dims, sh, stop)
+                        )(lc, cy)
+
+    bg = jax.vmap(begin_group)(sh_g, stop_g, lc_g, cy_g)
+    n_g = bg.n_a.shape[0]
+
+    def flat(x):
+        return x.reshape((n_g * n_l,) + x.shape[2:])
+
+    def unflat(x):
+        return x.reshape((n_g, n_l) + x.shape[1:])
+
+    new_st, stats, percore = _run_rounds_batch(
+        dims, jax.tree.map(flat, lc_g.knobs), jax.tree.map(flat, cy_g.st),
+        jax.tree.map(flat, bg))
+    new_st = jax.tree.map(unflat, new_st)
+    stats, percore = unflat(stats), unflat(percore)
+
+    def finish_group(sh, lc, cy, bg_i, st_i, stats_i, pc_i):
+        return jax.vmap(functools.partial(_finish_lane, dims, sh)
+                        )(lc, cy, bg_i, st_i, stats_i, pc_i)
+
+    return jax.vmap(finish_group)(sh_g, lc_g, cy_g, bg, new_st, stats,
+                                  percore)
+
+
+@functools.partial(jax.jit, static_argnums=(0, 1))
+def _superstep_bucket(dims: FusedDims, n_shards: int, sh_g, lc_g, carry_g,
+                      stop_g):
+    """K epochs of every group in the bucket as one device program.
+
+    With ``n_shards > 1`` the group axis is ``shard_map``ped across
+    devices: groups are fully independent, so each shard runs its local
+    slice with no cross-device communication (the round loop's trip
+    count becomes a per-shard max, which only helps)."""
+    def run(sh, lc, carry, stop):
+        def body(c, _):
+            return _epoch_bucket_step(dims, sh, stop, lc, c)
+        return jax.lax.scan(body, carry, None, length=dims.k_epochs)
+
+    if n_shards > 1:
+        from jax.sharding import Mesh, PartitionSpec as P
+
+        from repro.sharding.compat import shard_map
+        mesh = Mesh(np.asarray(jax.devices()[:n_shards]), ("g",))
+        run = shard_map(run, mesh=mesh,
+                        in_specs=(P("g"), P("g"), P("g"), P("g")),
+                        out_specs=(P("g"), P(None, "g")),
+                        check_rep=False)
+    return run(sh_g, lc_g, carry_g, stop_g)
+
+
+def _stack_trees(trees):
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def drive_lanes_bucketed(groups: List[List[Lane]], states=None,
+                         k_epochs: int = DEFAULT_SUPERSTEP,
+                         max_rounds: int = DEFAULT_MAX_ROUNDS,
+                         devices: Optional[int] = None) -> None:
+    """Drive several static-compatible lane groups (equal ``bucket_key``)
+    to completion as ONE vmapped fused program with a leading group axis.
+
+    Per-group results are bitwise-identical to ``drive_lanes_fused`` on
+    each group alone (tests/test_bucketed.py): the begin/finish halves
+    are elementwise under the extra batch axis and the shared round loop
+    runs on the flattened (group, lane) axis it already batches over.
+
+    Overflow handling demotes surgically: the shared round capacity is
+    escalated first (one re-jit the whole bucket amortizes; the round
+    loop's trip count follows the data, so shallow groups don't pay for
+    the new depth), and once the capacity is exhausted only the
+    *offending* groups leave — each is replayed through
+    ``drive_lanes_fused`` (host fallback and all) from its rolled-back
+    state and its batch slot is frozen, so one pathological group never
+    knocks the whole bucket off the device.
+
+    ``devices`` bounds the ``shard_map`` shard count for the group axis
+    (None = all visible devices); sharding engages when more than one
+    device is present and the group count divides evenly.
+    """
+    assert groups and len({bucket_key(g) for g in groups}) == 1
+    for g in groups:
+        assert all(lane_supported(lane) for lane in g)
+    n_groups = len(groups)
+    max_epochs = [int(g[0].p.max_epochs) for g in groups]
+    pads = (max(g[0].tr.num_accesses for g in groups),
+            max(max([s.shape[0] for s in g[0].streams] or [1])
+                for g in groups),
+            max(len(g[0].tr.layer_names) for g in groups))
+    with enable_x64():
+        staged = [_Staged(g, k_epochs, max_rounds, pads=pads)
+                  for g in groups]
+        dims = staged[0].dims
+        # Groups in one bucket agree on every static field except the
+        # incidental choice of lane0's LLCConfig for ``cfg`` — behaviour
+        # knobs ride as LaneKnobs data, so only geometry_key must match
+        # (mixed-policy rosters chunked by max_lanes hit this: each
+        # chunk's lane0 is a different policy's config).
+        assert all(
+            dataclasses.replace(s.dims, cfg=dims.cfg) == dims
+            and llc_mod.geometry_key(s.dims.cfg)
+            == llc_mod.geometry_key(dims.cfg)
+            for s in staged)
+        sh_g = _stack_trees([s.sh for s in staged])
+        lc_g = _stack_trees([s.lc for s in staged])
+        if states is None:
+            states = [llc_mod.stack_states(dims.cfg, dims.n_lanes)
+                      for _ in groups]
+        carry = _stack_trees([_init_carry(g, st, dims.n_inputs)
+                              for g, st in zip(groups, states)])
+    n_dev = devices if devices else len(jax.devices())
+    n_shards = n_dev if (n_dev > 1 and n_groups % n_dev == 0) else 1
+    live = [True] * n_groups       # False once demoted to its own driver
+
+    def group_active(i: int) -> bool:
+        return live[i] and any(lane.active for lane in groups[i])
+
+    while any(group_active(i) for i in range(n_groups)):
+        stops = [_next_stop(groups[i], max_epochs[i]) if group_active(i)
+                 else 0 for i in range(n_groups)]
+        epochs_before = [[lane.epoch for lane in g] for g in groups]
+        with enable_x64():
+            new_carry, ys = _superstep_bucket(
+                dims, n_shards, sh_g, lc_g, carry,
+                jnp.asarray(stops, jnp.int64))
+            ovf = np.asarray(new_carry.overflow).any(axis=1)   # [G]
+        if ovf.any():
+            # roll the whole super-step back (the old carry is live)
+            if dims.max_rounds < MAX_ROUNDS_CAP:
+                dims = dataclasses.replace(
+                    dims, max_rounds=min(dims.max_rounds * 2,
+                                         MAX_ROUNDS_CAP))
+                continue
+            for i in np.flatnonzero(ovf):
+                if not live[i]:
+                    continue
+                live[i] = False
+                with enable_x64():     # f64 leaves: slice under x64
+                    st_i = jax.tree.map(lambda x: x[i], carry.st)
+                drive_lanes_fused(groups[i], states=st_i,
+                                  k_epochs=k_epochs,
+                                  max_rounds=dims.max_rounds)
+            with enable_x64():
+                dead = jnp.asarray(np.asarray([not a for a in live]))
+                carry = carry._replace(
+                    active=jnp.where(dead[:, None], False, carry.active),
+                    overflow=jnp.zeros_like(carry.overflow))
+            continue
+        # one bulk device->host transfer, then numpy views per group:
+        # slicing each group's leaves on device would cost O(G x leaves)
+        # eager dispatches per super-step and erase the batching win
+        host_carry = jax.tree.map(np.asarray, new_carry._replace(st=None))
+        host_ys = jax.tree.map(np.asarray, ys)
+        for i in range(n_groups):
+            if not live[i]:
+                continue
+            _write_back(groups[i],
+                        jax.tree.map(lambda x: x[i], host_carry),
+                        jax.tree.map(lambda y: y[:, i], host_ys))
+        with enable_x64():
+            carry = new_carry._replace(
+                overflow=jnp.zeros_like(new_carry.overflow))
+        # online-LERN boundaries land at the super-step edge per group
+        # (_next_stop): run the host refit hooks and re-upload that
+        # group's tables into its slot of the stacked constants
+        for i in range(n_groups):
+            if not live[i]:
+                continue
+            retrained = False
+            for j, lane in enumerate(groups[i]):
+                r = lane._retrain_every
+                if (r is not None and lane.epoch > epochs_before[i][j]
+                        and lane.epoch % r == 0):
+                    lane._online_retrain()
+                    retrained = True
+            if retrained:
+                with enable_x64():
+                    staged[i].refresh_clusters(groups[i])
+                    lc_g = jax.tree.map(
+                        lambda full, new: full.at[i].set(new),
+                        lc_g, staged[i].lc)

@@ -30,6 +30,7 @@ per-layer views for analysis code.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import functools
 import os
@@ -75,6 +76,25 @@ def resolve_engine(engine: Optional[str] = None) -> str:
         raise ValueError(f"unknown LERN fit engine {e!r} "
                          "(expected bucketed|segmented|auto)")
     return e
+
+
+@contextlib.contextmanager
+def fit_engine_override(engine: Optional[str]):
+    """Temporarily pin the module-default fit engine (``FIT_ENGINE``) —
+    how ``exp.ExecPlan.fit_engine`` reaches call sites that consult the
+    default at fit time.  ``None`` is a no-op (keep the ambient default);
+    spawn pool workers get the same pin via ``sweep._worker_init``."""
+    global FIT_ENGINE
+    if engine is None:
+        yield
+        return
+    resolve_engine(engine)  # validate eagerly, before any fit runs
+    prev = FIT_ENGINE
+    FIT_ENGINE = engine
+    try:
+        yield
+    finally:
+        FIT_ENGINE = prev
 
 
 def _bucket(n: int) -> int:

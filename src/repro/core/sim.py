@@ -788,34 +788,6 @@ def drive_lane(lane: Lane, state=None) -> SimResult:
     return lane.result()
 
 
-def run(config: str, mix: str, policy: Policy,
-        params: Optional[SimParams] = None,
-        dram: DramModel = DDR3_1600,
-        deadline_cycles: Optional[float] = None,
-        core_traffic: bool = True) -> SimResult:
-    """Single-point evaluation.
-
-    With default knobs this is a shim over the declarative experiment API
-    (``repro.exp``): the point goes through a one-point spec and the
-    lane-batched group engine — bitwise-identical to the sequential loop
-    (tests/test_sweep.py pins the engines against each other).  Explicit
-    ``deadline_cycles``/``core_traffic`` keep the direct sequential path:
-    those knobs are engine-internal (calibration, bitwise-reference
-    tests), not part of a spec cell.
-    """
-    p = params or SimParams()
-    if deadline_cycles is None and core_traffic:
-        from repro.exp import runner as _exp  # deferred: exp layers above sim
-        from repro.exp.spec import Point
-        return _exp.run_points([Point(config, mix, policy, p, dram)],
-                               cache=False)[0]
-    art = load_artifacts(config, mix, p, core_traffic)
-    if deadline_cycles is None:
-        deadline_cycles = calibrated_deadline(config, p, dram)
-    return drive_lane(Lane(config, mix, policy, p, dram,
-                           float(deadline_cycles), art, core_traffic))
-
-
 def calibrated_deadline(config: str, p: SimParams, dram: DramModel) -> float:
     """Deadline = deadline_factor x this config's standalone (no core
     traffic, ARP-NB) completion time — the 10-IPS analogue for the scaled
@@ -830,9 +802,10 @@ def calibrated_deadline(config: str, p: SimParams, dram: DramModel) -> float:
         with open(path, "rb") as f:
             return pickle.load(f) * p.deadline_factor
     from .policies import get
-    res = run(config, "mix1", get("arp-nb"), dataclasses.replace(
-        p, n_inputs=1, deadline_factor=1.0), dram,
-        deadline_cycles=10**12, core_traffic=False)
+    pq = dataclasses.replace(p, n_inputs=1, deadline_factor=1.0)
+    art = load_artifacts(config, "mix1", pq, False)
+    res = drive_lane(Lane(config, "mix1", get("arp-nb"), pq, dram,
+                          float(10**12), art, False))
     t0 = res.completion_cycles[0] if res.completion_cycles else 10**9
     _atomic_dump(t0, path)
     return t0 * p.deadline_factor
@@ -842,7 +815,8 @@ def result_cache_path(config: str, mix: str, policy: Policy,
                       params: Optional[SimParams] = None,
                       dram: DramModel = DDR3_1600, **kw) -> str:
     """Disk-cache location of one simulated point, keyed by all inputs.
-    Shared between run_cached and the sweep engine's dedup layer."""
+    Shared by the sweep engine's dedup layer and anything that wants a
+    pure cache read of a finished point."""
     p = params or SimParams()
     # "v": engine-semantics version.  v2: epoch event interleaving moved
     # from float linspace timestamps to the exact integer when_keys —
@@ -853,28 +827,3 @@ def result_cache_path(config: str, mix: str, policy: Policy,
                       "kw": {k: str(v) for k, v in kw.items()}},
                      sort_keys=True, default=str)
     return _cache_path("sim", hashlib.md5(key.encode()).hexdigest())
-
-
-def run_cached(config: str, mix: str, policy: Policy,
-               params: Optional[SimParams] = None,
-               dram: DramModel = DDR3_1600, **kw) -> SimResult:
-    """Disk-cached wrapper keyed by all inputs.
-
-    Legacy entry point, kept as a shim: with no extra knobs it delegates
-    through a one-point ``repro.exp`` spec into ``sweep.map_points``,
-    whose dedup layer reads/writes the *same* cache path
-    (``result_cache_path``) this function always used — keys and results
-    are bitwise-unchanged (tests/test_exp.py).  Prefer ``exp.run`` for
-    anything bigger than one point."""
-    p = params or SimParams()
-    if not kw:
-        from repro.exp import runner as _exp  # deferred: exp layers above sim
-        from repro.exp.spec import Point
-        return _exp.run_points([Point(config, mix, policy, p, dram)])[0]
-    path = result_cache_path(config, mix, policy, p, dram, **kw)
-    if os.path.exists(path):
-        with open(path, "rb") as f:
-            return pickle.load(f)
-    res = run(config, mix, policy, p, dram, **kw)
-    _atomic_dump(res, path)
-    return res

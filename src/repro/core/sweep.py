@@ -2,8 +2,8 @@
 
 The paper's evaluation is a large cross-product — policies x configs x
 mixes x DRAM/LLC variants (Figs. 10-20) — and every point used to go
-through ``sim.run`` one at a time.  This module batches that cross-product
-at two levels:
+through the sequential single-point loop one at a time.  This module
+batches that cross-product at three levels:
 
 * **Within a (config, mix, params, dram) group** all requested policies
   are simulated in one pass: the trace, LERN clusters and core streams are
@@ -13,8 +13,15 @@ at two levels:
   dispatch per policy.  Lanes whose LLC geometry diverges (e.g. the
   SHIP_LARGE predictor-size study) are partitioned into geometry-compatible
   sub-batches, degenerating to a per-lane loop when nothing matches.
-  Results are bitwise-identical to sequential ``sim.run``
-  (tests/test_sweep.py).
+  Results are bitwise-identical to the sequential ``sim.drive_lane``
+  reference (tests/test_sweep.py).
+
+* **Across groups, on device** ``run_bucketed``/``simulate_bucket``
+  bucket whole groups by fused-engine static shape (``fused.bucket_key``)
+  and drive each bucket as ONE vmapped device program with a leading
+  group axis (``fused.drive_lanes_bucketed``) — thousands of sweep
+  points become a handful of dispatch chains.  Bitwise-equal to
+  per-group ``simulate_group`` (tests/test_bucketed.py).
 
 Online-LERN lanes (``*-ol`` policies) ride the same batching: their
 retrain hook lives inside ``Lane.finish_epoch`` (refit on the observed
@@ -23,17 +30,22 @@ in place), so a group can mix offline and online policies freely and an
 infinite retrain period stays bitwise-equal to the offline lane
 (tests/test_sweep.py).
 
-* **Across groups** ``map_points`` fans independent groups over a
-  spawn-based process pool.  The existing sim disk cache is the dedup
-  layer: cached points are skipped up front, finished groups are written
-  back with atomic renames so concurrent workers (or concurrent benchmark
-  invocations) never observe torn results.  Deadline calibrations — the
-  one artifact shared *across* groups of one config — are precomputed
-  first so workers don't race to simulate them redundantly.
+* **Across groups, across processes** ``map_points`` — the host/process
+  fallback — fans independent groups over a spawn-based process pool.
+  The existing sim disk cache is the dedup layer: cached points are
+  skipped up front, finished groups are written back with atomic renames
+  so concurrent workers (or concurrent benchmark invocations) never
+  observe torn results.  Deadline calibrations — the one artifact shared
+  *across* groups of one config — are precomputed first so workers don't
+  race to simulate them redundantly.
+
+Engine selection lives in ``repro.exp.ExecPlan`` — this module only
+provides the mechanisms.
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 import json
 import os
 import pickle
@@ -51,6 +63,10 @@ from .policies import Policy
 # pool enough independent tasks to fill its workers even for single-mix
 # figure sweeps.
 MAX_LANES = 4
+# Groups per bucketed device program: per-group SharedConsts (trace +
+# core streams) are duplicated along the group axis, so a slab cap keeps
+# the staged working set bounded on big sweeps.
+BUCKET_GROUPS = int(os.environ.get("REPRO_BUCKET_GROUPS", "16"))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -81,8 +97,9 @@ def simulate_group(config: str, mix: str, pols: Sequence[Policy],
                    engine: str = "auto") -> List[sim.SimResult]:
     """Simulate several policies on one (config, mix) trace in one pass.
 
-    Order of results matches ``pols``.  Equivalent to (and bitwise
-    consistent with) ``[sim.run(config, mix, p, ...) for p in pols]``.
+    Order of results matches ``pols``.  Bitwise-consistent with driving
+    each point alone through the sequential ``sim.drive_lane`` loop —
+    this is the sweep-level oracle ``simulate_bucket`` is pinned against.
 
     ``engine`` selects the epoch loop: ``"fused"`` forces the
     device-resident super-step engine (core/fused.py), ``"host"`` the
@@ -151,7 +168,7 @@ def _drive_lanes(lanes: List[sim.Lane]) -> None:
     while pending:
         if len(pending) == 1:
             # lone survivor (or single-lane group): static engine, shared
-            # kernels with sim.run, no vmap padding; continue from the
+            # kernels with sim.drive_lane, no vmap padding; continue from the
             # lane's current LLC content
             sim.drive_lane(pending[0], state=_lane_state(states, 0))
             return
@@ -197,6 +214,58 @@ def _lane_state(states: llc.LLCState, i: int) -> llc.LLCState:
 
 
 # ---------------------------------------------------------------------------
+# whole-sweep-on-device: geometry-bucketed vmap over groups
+# ---------------------------------------------------------------------------
+def simulate_bucket(tasks: Sequence[Tuple], devices: Optional[int] = None
+                    ) -> List[List[sim.SimResult]]:
+    """Simulate many ``(config, mix, pols, params, dram, paths)`` group
+    tasks at once: groups are bucketed by fused-engine static shape
+    (``fused.bucket_key``) and each bucket runs as one vmapped device
+    program (``fused.drive_lanes_bucketed``), so a whole sweep is a
+    handful of dispatch chains instead of one per group.
+
+    Bitwise-equal to per-task ``simulate_group`` — the oracle it is
+    pinned against (tests/test_bucketed.py).  Geometry batches the fused
+    engine can't take fall back to the host loop, exactly like
+    ``engine="auto"``.  Each finished point is dumped to its ``paths``
+    entry (pass empty paths to skip the cache).  Returns per-task result
+    lists in task order."""
+    from . import fused
+    task_lanes: List[List[sim.Lane]] = []
+    buckets: Dict[Tuple, List[List[sim.Lane]]] = {}
+    host_batches: List[List[sim.Lane]] = []
+    for config, mix, pols, params, dram, _paths in tasks:
+        p = params or sim.SimParams()
+        deadline = sim.calibrated_deadline(config, p, dram)
+        art = sim.load_artifacts(config, mix, p, True)
+        lanes = [sim.Lane(config, mix, pol, p, dram, float(deadline), art,
+                          True) for pol in pols]
+        task_lanes.append(lanes)
+        batches: Dict[Tuple, List[sim.Lane]] = {}
+        for lane in lanes:
+            batches.setdefault(llc.geometry_key(lane.llc_cfg),
+                               []).append(lane)
+        for batch in batches.values():
+            if all(fused.lane_supported(lane) for lane in batch):
+                buckets.setdefault(fused.bucket_key(batch), []).append(batch)
+            else:
+                host_batches.append(batch)
+    for batch_list in buckets.values():
+        for lo in range(0, len(batch_list), BUCKET_GROUPS):
+            fused.drive_lanes_bucketed(batch_list[lo:lo + BUCKET_GROUPS],
+                                       devices=devices)
+    for batch in host_batches:
+        _drive_lanes(batch)
+    out: List[List[sim.SimResult]] = []
+    for task, lanes in zip(tasks, task_lanes):
+        results = [lane.result() for lane in lanes]
+        for res, path in zip(results, task[5]):
+            sim._atomic_dump(res, path)
+        out.append(results)
+    return out
+
+
+# ---------------------------------------------------------------------------
 # cross-group orchestration (process pool + disk-cache dedup)
 # ---------------------------------------------------------------------------
 def _params_key(p: sim.SimParams, dram: DramModel) -> str:
@@ -204,12 +273,18 @@ def _params_key(p: sim.SimParams, dram: DramModel) -> str:
                       sort_keys=True, default=str)
 
 
-def _worker_init(cache_dir: str, extra_configs: Optional[Dict] = None) -> None:
+def _worker_init(cache_dir: str, extra_configs: Optional[Dict] = None,
+                 fit_engine: Optional[str] = None) -> None:
     # sim is already imported (unpickling this initializer imports sweep),
     # so its import-time XLA-cache config came from the inherited env;
     # propagate a programmatic CACHE_DIR override (e.g. test monkeypatch)
     # to the artifact caches here, and to the persistent XLA cache too.
     sim.CACHE_DIR = cache_dir
+    if fit_engine is not None:
+        # ExecPlan.fit_engine: spawn workers don't see the parent's
+        # lern.fit_engine_override, so pin the module default here
+        from . import lern as lern_mod
+        lern_mod.FIT_ENGINE = fit_engine
     # spawn re-imports workloads.py fresh, so configs registered at
     # runtime in the parent (phase-drift variants, ad-hoc AccelConfigs)
     # must be re-registered or CONFIGS[config] raises in every worker
@@ -254,26 +329,26 @@ def _prepare_lern(tasks) -> None:
         sim.load_lern_family(configs, variant, sub, family_only=True)
 
 
-def _group_task(task) -> List[sim.SimResult]:
+def _group_task(task, engine: str = "auto") -> List[sim.SimResult]:
     """Pool task: simulate one policy group and persist each point."""
     config, mix, pols, params, dram, paths = task
-    results = simulate_group(config, mix, list(pols), params, dram)
+    results = simulate_group(config, mix, list(pols), params, dram,
+                             engine=engine)
     for res, path in zip(results, paths):
         sim._atomic_dump(res, path)
     return results
 
 
-def map_points(points: Sequence[SweepPoint], jobs: int = 1,
-               max_lanes: int = MAX_LANES) -> List[sim.SimResult]:
-    """Evaluate a list of sweep points, batched and (optionally) parallel.
+def _plan_tasks(points: Sequence[SweepPoint], max_lanes: int,
+                cache: bool = True):
+    """The shared front half of ``map_points``/``run_bucketed``: cache
+    reads (when ``cache``), duplicate-point dedup, grouping by (config,
+    mix, params, dram) and chunking into <= ``max_lanes`` policy lanes.
 
-    Cached points are loaded and skipped; the remainder are grouped by
-    (config, mix, params, dram), chunked into <= ``max_lanes`` policy
-    lanes, and executed — inline for ``jobs <= 1``, else on a spawn-based
-    process pool of ``jobs`` workers.  Every finished point is written to
-    the sim disk cache, so later ``sim.run_cached`` calls (and concurrent
-    sweeps) are free.  Returns results in ``points`` order.
-    """
+    Returns ``(results, tasks, task_idxs, calib, seen_paths)`` —
+    ``results`` pre-filled with cache hits, ``tasks`` as
+    ``(config, mix, pols, params, dram, paths)`` tuples (empty paths
+    when ``cache`` is off, so executors skip the dump)."""
     results: List[Optional[sim.SimResult]] = [None] * len(points)
     seen_paths: Dict[str, List[int]] = {}
     groups: Dict[str, List[Tuple[int, SweepPoint, str]]] = {}
@@ -283,7 +358,7 @@ def map_points(points: Sequence[SweepPoint], jobs: int = 1,
             seen_paths[path].append(idx)
             continue
         seen_paths[path] = [idx]
-        if os.path.exists(path):
+        if cache and os.path.exists(path):
             with open(path, "rb") as f:
                 results[idx] = pickle.load(f)
             continue
@@ -302,13 +377,42 @@ def map_points(points: Sequence[SweepPoint], jobs: int = 1,
             chunk = members[lo:lo + max_lanes]
             tasks.append((first.config, first.mix,
                           tuple(pt.policy for _, pt, _ in chunk),
-                          params, dram, tuple(path for _, _, path in chunk)))
+                          params, dram,
+                          tuple(path for _, _, path in chunk) if cache
+                          else ()))
             task_idxs.append([idx for idx, _, _ in chunk])
+    return results, tasks, task_idxs, calib, seen_paths
+
+
+def _fill_twins(results, seen_paths) -> None:
+    for _path, idxs in seen_paths.items():
+        for idx in idxs[1:]:
+            results[idx] = results[idxs[0]]
+
+
+def map_points(points: Sequence[SweepPoint], jobs: int = 1,
+               max_lanes: int = MAX_LANES, engine: str = "auto",
+               fit_engine: Optional[str] = None) -> List[sim.SimResult]:
+    """Evaluate a list of sweep points, batched and (optionally) parallel
+    — the host/process fallback behind ``exp.ExecPlan`` (the bucketed
+    device path is ``run_bucketed``).
+
+    Cached points are loaded and skipped; the remainder are grouped by
+    (config, mix, params, dram), chunked into <= ``max_lanes`` policy
+    lanes, and executed — inline for ``jobs <= 1``, else on a spawn-based
+    process pool of ``jobs`` workers.  ``engine`` is the per-group epoch
+    engine (``simulate_group``'s ``auto|host|fused``); ``fit_engine``
+    pins the LERN fit engine inside pool workers.  Every finished point
+    is written to the sim disk cache, so concurrent sweeps (and later
+    cached runs) are free.  Returns results in ``points`` order.
+    """
+    results, tasks, task_idxs, calib, seen_paths = _plan_tasks(
+        points, max_lanes, cache=True)
 
     if tasks:
         _prepare_lern(tasks)
         if jobs <= 1 or len(tasks) == 1:
-            task_results = [_group_task(t) for t in tasks]
+            task_results = [_group_task(t, engine) for t in tasks]
         else:
             import multiprocessing as mp
             from .workloads import CONFIGS
@@ -320,18 +424,37 @@ def map_points(points: Sequence[SweepPoint], jobs: int = 1,
             extra = {t[0]: CONFIGS[t[0]] for t in tasks}
             with ProcessPoolExecutor(max_workers=workers, mp_context=ctx,
                                      initializer=_worker_init,
-                                     initargs=(sim.CACHE_DIR, extra)) as ex:
+                                     initargs=(sim.CACHE_DIR, extra,
+                                               fit_engine)) as ex:
                 # phase 1: deadline calibration, one task per unique
                 # (config, params, dram) — otherwise every group of a
                 # config would redundantly simulate the standalone run
                 list(ex.map(_calibrate_task, calib.values()))
                 # phase 2: the groups themselves
-                task_results = list(ex.map(_group_task, tasks))
+                task_results = list(ex.map(
+                    functools.partial(_group_task, engine=engine), tasks))
         for idxs, rs in zip(task_idxs, task_results):
             for idx, res in zip(idxs, rs):
                 results[idx] = res
 
-    for path, idxs in seen_paths.items():
-        for idx in idxs[1:]:
-            results[idx] = results[idxs[0]]
+    _fill_twins(results, seen_paths)
+    return results  # type: ignore[return-value]
+
+
+def run_bucketed(points: Sequence[SweepPoint], max_lanes: int = MAX_LANES,
+                 devices: Optional[int] = None, cache: bool = True
+                 ) -> List[sim.SimResult]:
+    """Bucketed twin of ``map_points``: the same cache/dedup/grouping
+    front half, but every uncached group executes together through
+    ``simulate_bucket`` — whole-sweep-on-device instead of a process
+    farm.  Returns results in ``points`` order, bitwise-equal to
+    ``map_points`` on the same points."""
+    results, tasks, task_idxs, _calib, seen_paths = _plan_tasks(
+        points, max_lanes, cache=cache)
+    if tasks:
+        _prepare_lern(tasks)
+        for idxs, rs in zip(task_idxs, simulate_bucket(tasks, devices)):
+            for idx, res in zip(idxs, rs):
+                results[idx] = res
+    _fill_twins(results, seen_paths)
     return results  # type: ignore[return-value]

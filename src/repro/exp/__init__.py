@@ -6,16 +6,19 @@
         config=["config1", "config3"], mix=["moti1", "mix3"],
         policy=["fifo-nb", "hydra", ("hydra", exp.online(50))],
         params="quick")
-    rs = exp.run(spec, jobs=4)
+    rs = exp.run(spec, plan=exp.ExecPlan(engine="bucketed"))
     for row in rs.mean_over("mix"):
         print(row["config"], row["policy"], row["ipc"], row["dmr"])
 
 Pieces: frozen :class:`ExperimentSpec`/:class:`Point` cell descriptions,
-four uniform registries (policies, workload configs, DRAM models,
-SimParams presets), and :func:`run` -> columnar :class:`ResultSet`
-(filter / group_by / mean_over, hydra-sweep/v2 serialization).  The
-engine underneath is unchanged ``repro.core.sweep``.
+a frozen :class:`ExecPlan` execution plan (engine / jobs / devices /
+cache / fit_engine — env vars are its defaults), four uniform registries
+(policies, workload configs, DRAM models, SimParams presets), and
+:func:`run` -> columnar :class:`ResultSet` (filter / group_by /
+mean_over, hydra-sweep/v2 serialization).  The engines underneath live
+in ``repro.core.sweep``.
 """
+from .plan import ExecPlan
 from .registry import DRAM, PARAMS, POLICIES, REGISTRIES, WORKLOADS, Registry
 from .resultset import SWEEP_SCHEMA, ResultSet
 from .runner import run, run_points
@@ -26,7 +29,8 @@ from .spec import (ExperimentSpec, Point, lrpt, online, resolve_policy,
 # imported here so `python -m repro.exp.schema` runs without a runpy warning)
 
 __all__ = [
-    "ExperimentSpec", "Point", "ResultSet", "Registry", "run", "run_points",
+    "ExecPlan", "ExperimentSpec", "Point", "ResultSet", "Registry",
+    "run", "run_points",
     "POLICIES", "WORKLOADS", "DRAM", "PARAMS", "REGISTRIES",
     "online", "way_partition", "lrpt", "with_apm", "resolve_policy",
     "SWEEP_SCHEMA",

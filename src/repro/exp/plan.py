@@ -1,0 +1,93 @@
+"""ExecPlan — the one object that says *how* a spec is executed.
+
+Historically execution knobs were scattered: ``REPRO_FUSED`` env var,
+``engine=`` strings on ``sweep.simulate_group``, ``jobs=``/``cache=``
+kwargs on ``exp.run``, ``REPRO_LERN_FIT`` for the k-means fit engine.
+``ExecPlan`` unifies them:
+
+    from repro import exp
+    rs = exp.run(spec, plan=exp.ExecPlan(engine="bucketed", devices=4))
+
+Fields left ``None`` resolve to the environment defaults (the old env
+vars keep working, as documented below), so ``ExecPlan()`` is always a
+valid "just do the right thing" plan.
+
+Engine names:
+
+* ``"auto"``    — bucketed whole-sweep-on-device when ``jobs <= 1``,
+  else the process-pool host path with per-group fused scans.
+* ``"host"``    — per-epoch host loop (the sequential oracle's engine).
+* ``"fused"``   — per-group fused super-step scan, groups sequential.
+* ``"bucketed"``— geometry-bucketed vmap of the fused engine: every
+  sweep group with the same (sets, ways, rounds-cap, lane-count)
+  geometry runs as one device program (``sweep.run_bucketed``).
+
+All engines are bitwise-equal on integer stats and f64 float histories
+(tests/test_sweep.py, tests/test_fused.py, tests/test_bucketed.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import Optional
+
+_ENGINES = ("auto", "host", "fused", "bucketed")
+_FIT_ENGINES = ("auto", "bucketed", "segmented")
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecPlan:
+    """How to execute a spec.  ``None`` fields resolve to env defaults.
+
+    engine:     "auto" | "host" | "fused" | "bucketed"
+                (default: env ``REPRO_ENGINE``; legacy ``REPRO_FUSED=0``
+                means "host"; else "auto")
+    jobs:       process-pool width for the host fallback (default 1;
+                ignored by the bucketed engine, which batches on device)
+    devices:    device count for ``shard_map`` over buckets (default:
+                all visible devices)
+    cache:      read/write the sim disk result cache (default True)
+    fit_engine: "auto" | "bucketed" | "segmented" k-means fit engine
+                (default: env ``REPRO_LERN_FIT``, else "auto")
+    max_lanes:  lane cap per device batch (default ``sweep.MAX_LANES``)
+    """
+    engine: Optional[str] = None
+    jobs: Optional[int] = None
+    devices: Optional[int] = None
+    cache: Optional[bool] = None
+    fit_engine: Optional[str] = None
+    max_lanes: Optional[int] = None
+
+    def __post_init__(self):
+        if self.engine is not None and self.engine not in _ENGINES:
+            raise ValueError(f"unknown engine {self.engine!r} "
+                             f"(expected one of {_ENGINES})")
+        if self.fit_engine is not None and self.fit_engine not in _FIT_ENGINES:
+            raise ValueError(f"unknown fit_engine {self.fit_engine!r} "
+                             f"(expected one of {_FIT_ENGINES})")
+
+    def resolve(self) -> "ExecPlan":
+        """Fill every ``None`` field from the environment defaults,
+        returning a fully-concrete plan (``devices`` may stay ``None`` =
+        all visible)."""
+        engine = self.engine or os.environ.get("REPRO_ENGINE")
+        if engine is None:
+            # legacy opt-out: REPRO_FUSED=0 forced the host epoch loop
+            engine = ("host" if os.environ.get("REPRO_FUSED", "1") == "0"
+                      else "auto")
+        if engine not in _ENGINES:  # env var can carry junk
+            raise ValueError(f"unknown engine {engine!r} from REPRO_ENGINE "
+                             f"(expected one of {_ENGINES})")
+        fit = self.fit_engine or os.environ.get("REPRO_LERN_FIT") or "auto"
+        if fit not in _FIT_ENGINES:
+            raise ValueError(f"unknown fit_engine {fit!r} from "
+                             f"REPRO_LERN_FIT (expected one of {_FIT_ENGINES})")
+        from repro.core import sweep  # deferred: exp layers above core
+        return dataclasses.replace(
+            self, engine=engine,
+            jobs=max(1, int(self.jobs if self.jobs is not None else 1)),
+            devices=self.devices,
+            cache=True if self.cache is None else bool(self.cache),
+            fit_engine=fit,
+            max_lanes=(sweep.MAX_LANES if self.max_lanes is None
+                       else int(self.max_lanes)))

@@ -1,18 +1,25 @@
-"""``run(spec) -> ResultSet`` — the single public entry point for
-evaluating anything.
+"""``run(spec, plan=ExecPlan(...)) -> ResultSet`` — the single public
+entry point for evaluating anything.
 
-Routing is unchanged at the engine level: points go through
-``sweep.map_points`` (lane-batched ``simulate_group`` + process pool +
-disk-cache dedup), so every row is bitwise-identical to what the legacy
-``sim.run_cached`` path produced for the same point — pinned by
-tests/test_exp.py.
+``ExecPlan`` routes points to an engine: ``bucketed`` (and the ``auto``
+default when ``jobs <= 1``) batches whole sweeps on device through
+``sweep.run_bucketed``; otherwise points go through ``sweep.map_points``
+(lane-batched ``simulate_group`` + process pool + disk-cache dedup).
+Every engine is bitwise-identical on integer stats and f64 histories —
+pinned by tests/test_exp.py and tests/test_bucketed.py.
+
+The pre-ExecPlan kwargs (``jobs=``, ``cache=``, ``max_lanes=``) still
+work for one release with a ``DeprecationWarning``.
 """
 from __future__ import annotations
 
-from typing import Dict, Iterable, List, Sequence, Tuple, Union
+import warnings
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple, Union
 
+from repro.core import lern as lern_mod
 from repro.core import sim, sweep
 
+from .plan import ExecPlan
 from .resultset import ResultSet
 from .spec import ExperimentSpec, Point
 
@@ -30,17 +37,31 @@ def _record(point: Point, axes: Dict, res: sim.SimResult) -> Dict:
     return rec
 
 
-def run_points(points: Sequence[Point], jobs: int = 1, cache: bool = True,
-               max_lanes: int = sweep.MAX_LANES) -> List[sim.SimResult]:
-    """Evaluate resolved points in order; the engine behind ``run``.
+def _coerce_plan(plan: Optional[ExecPlan], jobs, cache, max_lanes) -> ExecPlan:
+    """One ExecPlan out of either the new ``plan=`` or the legacy kwargs
+    (deprecated, one-release grace)."""
+    legacy = {k: v for k, v in
+              (("jobs", jobs), ("cache", cache), ("max_lanes", max_lanes))
+              if v is not None}
+    if plan is not None:
+        if legacy:
+            raise ValueError(
+                f"pass either plan= or legacy kwargs {sorted(legacy)}, "
+                "not both")
+        return plan
+    if legacy:
+        warnings.warn(
+            f"exp.run/run_points kwargs {sorted(legacy)} are deprecated; "
+            "use plan=exp.ExecPlan(...)", DeprecationWarning, stacklevel=3)
+        return ExecPlan(**legacy)
+    return ExecPlan()
 
-    ``cache=True`` routes through ``sweep.map_points`` (reads and writes
-    the sim disk cache).  ``cache=False`` drives the same lane-batched
-    ``simulate_group`` without touching the result cache — fresh numbers
-    every call (artifact caches for traces/LERN models still apply)."""
-    sps = [p.sweep_point() for p in points]
-    if cache:
-        return sweep.map_points(sps, jobs=jobs, max_lanes=max_lanes)
+
+def _run_points_uncached(points: Sequence[Point], rp: ExecPlan
+                         ) -> List[sim.SimResult]:
+    """Cache-off host path: lane-batched ``simulate_group`` per (config,
+    mix, params, dram) group, never touching the result cache — fresh
+    numbers every call (artifact caches for traces/LERN still apply)."""
     results: List[sim.SimResult] = [None] * len(points)  # type: ignore
     groups: Dict[Tuple, List[int]] = {}
     for i, p in enumerate(points):
@@ -50,23 +71,47 @@ def run_points(points: Sequence[Point], jobs: int = 1, cache: bool = True,
         for i in idxs:
             uniq.setdefault(points[i], []).append(i)
         members = list(uniq.items())
-        for lo in range(0, len(members), max_lanes):
-            chunk = members[lo:lo + max_lanes]
+        for lo in range(0, len(members), rp.max_lanes):
+            chunk = members[lo:lo + rp.max_lanes]
             rs = sweep.simulate_group(config, mix,
                                       [pt.policy for pt, _ in chunk],
-                                      params, dram)
+                                      params, dram, engine=rp.engine)
             for (_, twin_idxs), res in zip(chunk, rs):
                 for i in twin_idxs:
                     results[i] = res
     return results
 
 
-def run(spec: SpecLike, jobs: int = 1, cache: bool = True,
-        max_lanes: int = sweep.MAX_LANES) -> ResultSet:
+def run_points(points: Sequence[Point], plan: Optional[ExecPlan] = None, *,
+               jobs: Optional[int] = None, cache: Optional[bool] = None,
+               max_lanes: Optional[int] = None) -> List[sim.SimResult]:
+    """Evaluate resolved points in order; the engine behind ``run``.
+
+    ``plan`` picks the engine (see :class:`ExecPlan`); the bare-kwarg
+    form is deprecated.  ``engine="bucketed"`` (and ``"auto"`` with
+    ``jobs <= 1``) batches geometry-compatible groups into single device
+    programs; other engines go through ``sweep.map_points``."""
+    rp = _coerce_plan(plan, jobs, cache, max_lanes).resolve()
+    sps = [p.sweep_point() for p in points]
+    with lern_mod.fit_engine_override(rp.fit_engine):
+        if rp.engine == "bucketed" or (rp.engine == "auto" and rp.jobs <= 1):
+            return sweep.run_bucketed(sps, max_lanes=rp.max_lanes,
+                                      devices=rp.devices, cache=rp.cache)
+        if rp.cache:
+            return sweep.map_points(sps, jobs=rp.jobs, max_lanes=rp.max_lanes,
+                                    engine=rp.engine,
+                                    fit_engine=rp.fit_engine)
+        return _run_points_uncached(points, rp)
+
+
+def run(spec: SpecLike, plan: Optional[ExecPlan] = None, *,
+        jobs: Optional[int] = None, cache: Optional[bool] = None,
+        max_lanes: Optional[int] = None) -> ResultSet:
     """Expand ``spec`` (one ExperimentSpec or several, concatenated) and
-    evaluate every point; returns a columnar ResultSet whose key columns
-    are the spec's axes and whose ``result`` column holds the full
-    SimResults."""
+    evaluate every point under ``plan``; returns a columnar ResultSet
+    whose key columns are the spec's axes and whose ``result`` column
+    holds the full SimResults."""
+    plan = _coerce_plan(plan, jobs, cache, max_lanes)  # warn once, here
     specs = [spec] if isinstance(spec, ExperimentSpec) else list(spec)
     expanded: List[Tuple[Point, Dict]] = []
     keys: List[str] = []
@@ -75,8 +120,7 @@ def run(spec: SpecLike, jobs: int = 1, cache: bool = True,
         for name, _ in s.axes:
             if name not in keys:
                 keys.append(name)
-    results = run_points([pt for pt, _ in expanded], jobs=jobs, cache=cache,
-                         max_lanes=max_lanes)
+    results = run_points([pt for pt, _ in expanded], plan)
     records = [_record(pt, axes, res)
                for (pt, axes), res in zip(expanded, results)]
     return ResultSet.from_records(records, keys=keys)

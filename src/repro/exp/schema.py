@@ -77,9 +77,17 @@ def validate_sweep(doc: Dict) -> List[str]:
 
 
 _BENCH_PREFIX = "hydra-bench-"
-# per-entry numeric requirements of the bench-sim artifact
+# bench-sim v2: entries are tagged by kind — "engine" rows carry the
+# host-vs-fused epochs/sec pair, "sweep" rows the map-vs-bucketed
+# points/sec pair (the whole-sweep device program the bucketed tentpole
+# is gated on); v1 writers (untagged, no sweep rows) are rejected so the
+# artifact gate stays honest
+_BENCH_SIM_SCHEMA = "hydra-bench-sim/v2"
 _BENCH_SIM_NUMERIC = ("lanes", "epochs", "host_s", "fused_s",
                       "host_eps", "fused_eps", "speedup")
+_BENCH_SIM_SWEEP_NUMERIC = ("lanes", "points", "groups", "epochs",
+                            "map_s", "bucketed_s", "map_pps",
+                            "bucketed_pps", "pps_speedup")
 # bench-lern v3: every entry carries the bucketed/segmented fit pair (the
 # engine comparison the segmented k-means tentpole is gated on); v2-only
 # writers (no pair) are rejected so the artifact gate stays honest
@@ -102,11 +110,16 @@ def validate_bench(doc: Dict) -> List[str]:
         errs.append(f"schema: bench-lern writers must emit "
                     f"{_BENCH_LERN_SCHEMA!r} (got {schema!r}; v2-only "
                     "entries lack the bucketed/segmented fit pair)")
+    if schema.startswith("hydra-bench-sim") and schema != _BENCH_SIM_SCHEMA:
+        errs.append(f"schema: bench-sim writers must emit "
+                    f"{_BENCH_SIM_SCHEMA!r} (got {schema!r}; v1 entries "
+                    "lack the sweep-level points/sec rows)")
     entries = doc.get("entries")
     if not isinstance(entries, list) or not entries:
         return errs + ["entries: expected a non-empty list"]
-    is_sim = schema.startswith("hydra-bench-sim")
+    is_sim = schema == _BENCH_SIM_SCHEMA
     is_lern = schema == _BENCH_LERN_SCHEMA
+    n_sweep = 0
     for i, e in enumerate(entries):
         where = f"entries[{i}]"
         if not isinstance(e, dict):
@@ -119,7 +132,15 @@ def validate_bench(doc: Dict) -> List[str]:
         if bad_vals:
             errs.append(f"{where}: non-scalar values for {bad_vals}")
         if is_sim:
-            for k in _BENCH_SIM_NUMERIC:
+            kind = e.get("kind")
+            if kind not in ("engine", "sweep"):
+                errs.append(f"{where}.kind: expected 'engine' or 'sweep', "
+                            f"got {kind!r}")
+                continue
+            n_sweep += kind == "sweep"
+            numeric = (_BENCH_SIM_SWEEP_NUMERIC if kind == "sweep"
+                       else _BENCH_SIM_NUMERIC)
+            for k in numeric:
                 if not isinstance(e.get(k), numbers.Real):
                     errs.append(f"{where}.{k}: expected a number")
             if not isinstance(e.get("mix"), str):
@@ -128,6 +149,9 @@ def validate_bench(doc: Dict) -> List[str]:
             for k in _BENCH_LERN_NUMERIC:
                 if not isinstance(e.get(k), numbers.Real):
                     errs.append(f"{where}.{k}: expected a number")
+    if is_sim and not n_sweep:
+        errs.append("entries: bench-sim/v2 requires at least one "
+                    "kind='sweep' points/sec entry")
     return errs
 
 

@@ -142,8 +142,8 @@ class Point:
                                     self.params, self.dram)
 
     def cache_path(self) -> str:
-        """Same disk-cache location as legacy ``sim.run_cached`` — the
-        shims and the sweep engine dedup through one key space."""
+        """Disk-cache location of this point (``sim.result_cache_path``)
+        — every engine dedups through this one key space."""
         return result_cache_path(self.config, self.mix, self.policy,
                                  self.params, self.dram)
 

@@ -1,0 +1,203 @@
+"""Geometry-bucketed whole-sweep engine vs the per-group oracle.
+
+Contract (core/fused.py::drive_lanes_bucketed and sweep.run_bucketed):
+per-group results are bitwise-identical — integer stats and f64 float
+histories — to ``sweep.simulate_group`` on each group alone.  Covers
+mixed-geometry bucketing, the single-group degenerate bucket, surgical
+overflow demotion of one group inside a bucket, `shard_map` over a
+multi-device group axis (subprocess with forced host devices), and the
+ExecPlan ``engine="bucketed"`` end-to-end route.
+"""
+import dataclasses
+import os
+import subprocess
+import sys
+
+import numpy as np
+
+from _reference import assert_bitwise
+from repro import exp
+from repro.core import fused, policies, sim, sweep
+
+TINY = dataclasses.replace(sim.SimParams(), n_inputs=1, max_epochs=40,
+                           subsample_target=50_000)
+DEADLINE = 2.0e6  # explicit: skips the calibration run, keeps tests fast
+POLS = [policies.get(n) for n in ("fifo-nb", "arp-cs-as")]
+
+
+def _mk_group(config, mix, pols, p):
+    art = sim.load_artifacts(config, mix, p, True)
+    return [sim.Lane(config, mix, pol, p, sim.DDR3_1600, DEADLINE, art,
+                     True) for pol in pols]
+
+
+def _oracle(config, mix, pols, p):
+    return sweep.simulate_group(config, mix, pols, p,
+                                deadline_cycles=DEADLINE)
+
+
+# ---------------------------------------------------------------------------
+# bucket routing + bitwise parity across mixed geometries
+# ---------------------------------------------------------------------------
+def test_bucket_parity_mixed_geometry():
+    """Four groups, three distinct static shapes: (a) two same-mix groups
+    whose params differ only in data (max_epochs) share one bucket and
+    run as a single vmapped program; (b) another mix (different core
+    caps) and (c) a halved LLC (different geometry) each get their own.
+    Every group must be bitwise the per-group oracle."""
+    shorter = dataclasses.replace(TINY, max_epochs=25)
+    small = dataclasses.replace(TINY, llc_size_bytes=TINY.llc_size_bytes // 2)
+    gspecs = [("config1", "moti1", POLS, TINY),
+              ("config1", "moti1", POLS, shorter),
+              ("config1", "moti2", POLS, TINY),
+              ("config1", "moti1", POLS, small)]
+    groups = [_mk_group(*gs) for gs in gspecs]
+    keys = [fused.bucket_key(g) for g in groups]
+    assert keys[0] == keys[1]                      # shared bucket
+    assert len({keys[0], keys[2], keys[3]}) == 3   # the others are alone
+
+    buckets = {}
+    for g, k in zip(groups, keys):
+        buckets.setdefault(k, []).append(g)
+    for batch_list in buckets.values():
+        fused.drive_lanes_bucketed(batch_list)
+    for (config, mix, pols, p), g in zip(gspecs, groups):
+        for pol, lane, want in zip(pols, g, _oracle(config, mix, pols, p)):
+            assert_bitwise(lane.result(), want, (mix, p.max_epochs, pol.name))
+
+
+def test_bucket_mixed_policy_rosters_share_bucket():
+    """Bucket-mates whose lane0 *policies* differ (the shape max_lanes
+    chunking of a wide policy roster produces) still share one program:
+    FusedDims.cfg is the incidental first lane's LLCConfig, but only its
+    geometry_key feeds the compiled kernels — behaviour knobs ride as
+    LaneKnobs data — so the groups must agree modulo cfg and stay
+    bitwise."""
+    rosters = [[policies.get(n) for n in ("fifo-nb", "arp-cs-as")],
+               [policies.get(n) for n in ("arp-cs-as-d", "arp-al")]]
+    groups = [_mk_group("config1", "moti1", r, TINY) for r in rosters]
+    assert fused.bucket_key(groups[0]) == fused.bucket_key(groups[1])
+    assert groups[0][0].llc_cfg != groups[1][0].llc_cfg  # the premise
+    fused.drive_lanes_bucketed(groups)
+    for pols, g in zip(rosters, groups):
+        for pol, lane, want in zip(pols, g,
+                                   _oracle("config1", "moti1", pols, TINY)):
+            assert_bitwise(lane.result(), want, pol.name)
+
+
+def test_bucket_single_group_degenerate():
+    """A one-group bucket (the common tail case) is just the fused engine
+    with a unit group axis — still bitwise."""
+    groups = [_mk_group("config1", "moti1", POLS, TINY)]
+    fused.drive_lanes_bucketed(groups)
+    for pol, lane, want in zip(POLS, groups[0],
+                               _oracle("config1", "moti1", POLS, TINY)):
+        assert_bitwise(lane.result(), want, pol.name)
+
+
+# ---------------------------------------------------------------------------
+# overflow: only the offending group leaves the bucket
+# ---------------------------------------------------------------------------
+HP = dataclasses.replace(sim.SimParams(), n_inputs=1, max_epochs=12,
+                         accel_epoch_cap=400, subsample_target=50_000)
+
+
+def _synthetic_group(seed, n_lines, length=2000):
+    from test_fused import _synthetic_artifacts
+    art = _synthetic_artifacts(seed, n_lines, length)
+    return art, [sim.Lane("synthetic", "moti2", pol, HP, sim.DDR3_1600,
+                          DEADLINE, art, True) for pol in POLS]
+
+
+def test_bucket_overflow_demotes_offending_group_only(monkeypatch):
+    """One group hammering 8 hot lines blows the round capacity; its
+    bucket-mate with a spread-out trace must stay on the vmapped path.
+    The hot group is replayed through per-group ``drive_lanes_fused``
+    (whose own host fallback absorbs the depth) and both still match the
+    sequential oracle."""
+    demoted = []
+    orig = fused.drive_lanes_fused
+
+    def spy(lanes, *a, **kw):
+        demoted.append(tuple(lanes))
+        return orig(lanes, *a, **kw)
+
+    monkeypatch.setattr(fused, "drive_lanes_fused", spy)
+    # measured: the tame trace fits in 64 rounds/set, the hot one needs
+    # 128 — capping at 64 forces exactly one group over the edge
+    monkeypatch.setattr(fused, "MAX_ROUNDS_CAP", 64)
+    hot_art, hot = _synthetic_group(3, n_lines=8)
+    tame_art, tame = _synthetic_group(4, n_lines=6000)
+    assert fused.bucket_key(hot) == fused.bucket_key(tame)
+    fused.drive_lanes_bucketed([hot, tame], k_epochs=4, max_rounds=32)
+    assert demoted == [tuple(hot)], "exactly the hot group must demote"
+    for name, art, group in (("hot", hot_art, hot),
+                             ("tame", tame_art, tame)):
+        for pol, lane in zip(POLS, group):
+            want = sim.drive_lane(
+                sim.Lane("synthetic", "moti2", pol, HP, sim.DDR3_1600,
+                         DEADLINE, art, True))
+            assert_bitwise(lane.result(), want, (name, pol.name))
+
+
+# ---------------------------------------------------------------------------
+# shard_map over the group axis (forced 2 host devices, subprocess)
+# ---------------------------------------------------------------------------
+_SHARD_SCRIPT = r"""
+import dataclasses
+import numpy as np
+from repro.core import fused, policies, sim
+from test_fused import _synthetic_artifacts
+from test_bucketed import HP, DEADLINE, POLS
+import jax
+assert len(jax.devices()) == 2, jax.devices()
+
+def mk(seed):
+    art = _synthetic_artifacts(seed, 4000, 1500)
+    return [sim.Lane("synthetic", "moti2", pol, HP, sim.DDR3_1600,
+                     DEADLINE, art, True) for pol in POLS]
+
+groups = [mk(11), mk(12)]
+oracle = [mk(11), mk(12)]
+fused.drive_lanes_bucketed(groups, devices=2)
+for g in oracle:
+    fused.drive_lanes_fused(g)
+for got_g, want_g in zip(groups, oracle):
+    for got, want in zip(got_g, want_g):
+        assert got.result().summary() == want.result().summary()
+        assert got.result().history == want.result().history
+print("SHARDED-OK")
+"""
+
+
+def test_bucket_shard_map_two_host_devices():
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                        + " --xla_force_host_platform_device_count=2")
+    src = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "src")
+    env["PYTHONPATH"] = os.pathsep.join(
+        [src, os.path.dirname(os.path.abspath(__file__))]
+        + ([env["PYTHONPATH"]] if env.get("PYTHONPATH") else []))
+    out = subprocess.run([sys.executable, "-c", _SHARD_SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, out.stderr
+    assert "SHARDED-OK" in out.stdout
+
+
+# ---------------------------------------------------------------------------
+# ExecPlan end-to-end: engine="bucketed" through exp.run
+# ---------------------------------------------------------------------------
+def test_execplan_bucketed_end_to_end(tmp_path, monkeypatch):
+    monkeypatch.setattr(sim, "CACHE_DIR", str(tmp_path))
+    spec = exp.ExperimentSpec.grid(
+        config="config1", mix=["moti1", "moti2"],
+        policy=["fifo-nb", "arp-cs-as"], params=TINY)
+    bucketed = exp.run(spec, plan=exp.ExecPlan(engine="bucketed",
+                                               cache=False))
+    oracle = exp.run(spec, plan=exp.ExecPlan(engine="fused", cache=False))
+    assert len(bucketed) == len(oracle) == 4
+    for got, want in zip(bucketed, oracle):
+        assert (got["mix"], got["policy"]) == (want["mix"], want["policy"])
+        assert_bitwise(got["result"], want["result"],
+                       (got["mix"], got["policy"]))

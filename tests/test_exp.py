@@ -4,10 +4,12 @@ bitwise parity of exp.run against the pre-redesign sequential path,
 phase-drift workloads, and the serve-side online retrain hook."""
 import dataclasses
 import math
+import pickle
 
 import numpy as np
 import pytest
 
+from _reference import run_reference
 from repro import exp
 from repro.core import sim, tracegen, workloads
 from repro.exp.schema import validate_sweep
@@ -161,8 +163,7 @@ def test_sweep_v2_validator_rejects_malformed():
 # bitwise parity: exp.run == the pre-redesign per-point path
 # ---------------------------------------------------------------------------
 def test_exp_run_bitwise_parity_with_legacy_path(tmp_path, monkeypatch):
-    """Every row exp.run emits for the smoke cross-product equals what the
-    pre-redesign ``run_cached`` produced for the same point: the
+    """Every row exp.run emits for the smoke cross-product equals the
     sequential reference loop with the calibrated deadline.  Fresh cache
     dir, so both sides really compute."""
     monkeypatch.setattr(sim, "CACHE_DIR", str(tmp_path))
@@ -174,15 +175,15 @@ def test_exp_run_bitwise_parity_with_legacy_path(tmp_path, monkeypatch):
     for row in rs:
         pt, got = row["point"], row["result"]
         deadline = sim.calibrated_deadline(pt.config, pt.params, pt.dram)
-        want = sim.run(pt.config, pt.mix, pt.policy, pt.params, pt.dram,
-                       deadline_cycles=deadline)
+        want = run_reference(pt.config, pt.mix, pt.policy, pt.params,
+                             pt.dram, deadline_cycles=deadline)
         assert got.summary() == want.summary(), pt.policy.name
         assert got.completion_cycles == want.completion_cycles
         assert got.epochs == want.epochs
         assert got.history == want.history
-        # the run_cached shim reads the very same cache entry
-        cached = sim.run_cached(pt.config, pt.mix, pt.policy, pt.params,
-                                pt.dram)
+        # the row landed in the shared disk cache under the same key
+        with open(pt.cache_path(), "rb") as f:
+            cached = pickle.load(f)
         assert cached.summary() == got.summary()
 
 
@@ -190,10 +191,58 @@ def test_exp_run_uncached_matches_cached(tmp_path, monkeypatch):
     monkeypatch.setattr(sim, "CACHE_DIR", str(tmp_path))
     spec = exp.ExperimentSpec.grid(config="config1", mix="moti1",
                                    policy=["fifo-nb"], params=TINY)
-    fresh = exp.run(spec, cache=False).one()["result"]
-    again = exp.run(spec, cache=True).one()["result"]
+    fresh = exp.run(spec, plan=exp.ExecPlan(cache=False)).one()["result"]
+    again = exp.run(spec, plan=exp.ExecPlan(cache=True)).one()["result"]
     assert fresh.summary() == again.summary()
     assert fresh.history == again.history
+
+
+# ---------------------------------------------------------------------------
+# ExecPlan: the unified execution-plan surface
+# ---------------------------------------------------------------------------
+def test_execplan_env_defaults_and_validation(monkeypatch):
+    monkeypatch.delenv("REPRO_ENGINE", raising=False)
+    monkeypatch.delenv("REPRO_FUSED", raising=False)
+    monkeypatch.delenv("REPRO_LERN_FIT", raising=False)
+    rp = exp.ExecPlan().resolve()
+    assert (rp.engine, rp.jobs, rp.cache, rp.fit_engine) == \
+        ("auto", 1, True, "auto")
+    from repro.core import sweep
+    assert rp.max_lanes == sweep.MAX_LANES
+    # env vars are the defaults...
+    monkeypatch.setenv("REPRO_FUSED", "0")
+    assert exp.ExecPlan().resolve().engine == "host"
+    monkeypatch.setenv("REPRO_ENGINE", "bucketed")
+    assert exp.ExecPlan().resolve().engine == "bucketed"
+    monkeypatch.setenv("REPRO_LERN_FIT", "bucketed")
+    assert exp.ExecPlan().resolve().fit_engine == "bucketed"
+    # ...and explicit fields beat them
+    assert exp.ExecPlan(engine="fused").resolve().engine == "fused"
+    assert exp.ExecPlan(fit_engine="segmented").resolve().fit_engine == \
+        "segmented"
+    # junk rejected, eagerly and from the env
+    with pytest.raises(ValueError):
+        exp.ExecPlan(engine="warp")
+    with pytest.raises(ValueError):
+        exp.ExecPlan(fit_engine="warp")
+    monkeypatch.setenv("REPRO_ENGINE", "warp")
+    with pytest.raises(ValueError):
+        exp.ExecPlan().resolve()
+    # frozen: plans are shareable constants
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        exp.ExecPlan().engine = "host"
+
+
+def test_execplan_legacy_kwargs_deprecated(tmp_path, monkeypatch):
+    monkeypatch.setattr(sim, "CACHE_DIR", str(tmp_path))
+    spec = exp.ExperimentSpec.grid(config="config1", mix="moti1",
+                                   policy=["fifo-nb"], params=TINY)
+    with pytest.warns(DeprecationWarning, match="ExecPlan"):
+        legacy = exp.run(spec, jobs=1).one()["result"]
+    planned = exp.run(spec, plan=exp.ExecPlan(jobs=1)).one()["result"]
+    assert legacy.summary() == planned.summary()
+    with pytest.raises(ValueError, match="not both"):
+        exp.run(spec, plan=exp.ExecPlan(), jobs=2)
 
 
 # ---------------------------------------------------------------------------

@@ -15,6 +15,7 @@ import math
 import numpy as np
 import pytest
 
+from _reference import assert_bitwise, run_reference
 from repro.core import cores as cores_mod
 from repro.core import fused, llc, policies, sim, sweep
 from repro.core.tracegen import Trace
@@ -22,20 +23,6 @@ from repro.core.tracegen import Trace
 TINY = dataclasses.replace(sim.SimParams(), n_inputs=1, max_epochs=40,
                            subsample_target=50_000)
 DEADLINE = 2.0e6  # explicit: skips the calibration run, keeps tests fast
-
-
-def assert_bitwise(got: sim.SimResult, want: sim.SimResult, who: str):
-    """Full bitwise equality: integer-derived counters exactly, float
-    timing exactly (the engine's guarantee is rtol=1e-6; on the pinned
-    CI stack the fences make it exact, so equality is what we assert)."""
-    assert got.summary() == want.summary(), who
-    assert got.epochs == want.epochs, who
-    assert got.completion_cycles == want.completion_cycles, who
-    assert got.core_hit_rate == want.core_hit_rate, who
-    assert got.accel_hit_rate == want.accel_hit_rate, who
-    assert got.llc_accesses == want.llc_accesses, who
-    assert got.dram_accesses == want.dram_accesses, who
-    assert got.history == want.history, who
 
 
 # ---------------------------------------------------------------------------
@@ -56,7 +43,8 @@ def test_fused_matches_oracle_across_policies(mix):
     grp = sweep.simulate_group("config1", mix, POLS, TINY,
                                deadline_cycles=DEADLINE, engine="fused")
     for pol, got in zip(POLS, grp):
-        want = sim.run("config1", mix, pol, TINY, deadline_cycles=DEADLINE)
+        want = run_reference("config1", mix, pol, TINY,
+                             deadline_cycles=DEADLINE)
         assert_bitwise(got, want, (mix, pol.name))
 
 
@@ -67,7 +55,8 @@ def test_fused_multi_input_cycling():
     pol = policies.get("arp-cas")
     got = sweep.simulate_group("config1", "moti2", [pol], p,
                                deadline_cycles=DEADLINE, engine="fused")[0]
-    want = sim.run("config1", "moti2", pol, p, deadline_cycles=DEADLINE)
+    want = run_reference("config1", "moti2", pol, p,
+                         deadline_cycles=DEADLINE)
     assert len(got.completion_cycles) == 3
     assert_bitwise(got, want, "multi-input")
 
@@ -80,7 +69,8 @@ def test_fused_online_lern_retrain_boundary():
     pol = dataclasses.replace(policies.get("arp-al-ol"), retrain_period=5)
     got = sweep.simulate_group("config1", "moti1", [pol], p,
                                deadline_cycles=DEADLINE, engine="fused")[0]
-    want = sim.run("config1", "moti1", pol, p, deadline_cycles=DEADLINE)
+    want = run_reference("config1", "moti1", pol, p,
+                         deadline_cycles=DEADLINE)
     assert_bitwise(got, want, "online-lern")
 
 
@@ -116,7 +106,8 @@ def test_fused_overflow_falls_back_to_host(monkeypatch):
     fused.drive_lanes_fused([lane], k_epochs=4, max_rounds=8)
     got = lane.result()
     assert calls["n"] > 0, "overflow fallback never fired"
-    want = sim.run("config1", "moti1", pol, TINY, deadline_cycles=DEADLINE)
+    want = run_reference("config1", "moti1", pol, TINY,
+                         deadline_cycles=DEADLINE)
     assert_bitwise(got, want, "overflow-fallback")
 
 
@@ -132,12 +123,21 @@ def test_fused_sparse_and_dense_rounds_agree(monkeypatch):
     assert_bitwise(dense, got, "sparse-vs-dense")
 
 
+def test_fused_occupancy_recording():
+    """record_occupancy lanes are fused-eligible: the per-epoch [2]
+    core/accel occupancy counters ride the scan outputs and must match
+    the host loop's llc.occupancy reads exactly."""
+    p = dataclasses.replace(TINY, record_occupancy=True, max_epochs=20)
+    pol = policies.get("arp-cs-as")
+    got = sweep.simulate_group("config1", "moti1", [pol], p,
+                               deadline_cycles=DEADLINE, engine="fused")[0]
+    want = run_reference("config1", "moti1", pol, p,
+                         deadline_cycles=DEADLINE)
+    assert_bitwise(got, want, "occupancy")
+    assert got.occupancy and got.occupancy == want.occupancy
+
+
 def test_engine_selection_and_gate(monkeypatch):
-    # occupancy recording stays on the host path; forcing fused raises
-    p = dataclasses.replace(TINY, record_occupancy=True)
-    with pytest.raises(ValueError):
-        sweep.simulate_group("config1", "moti1", [policies.get("fifo-nb")],
-                             p, deadline_cycles=DEADLINE, engine="fused")
     # REPRO_FUSED=0 pins auto to the host loop
     monkeypatch.setenv("REPRO_FUSED", "0")
     called = {"n": 0}

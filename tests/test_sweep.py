@@ -1,4 +1,4 @@
-"""Sweep engine: batched multi-policy == sequential sim.run (bitwise),
+"""Sweep engine: batched multi-policy == sequential reference (bitwise),
 lane-batched LLC engine == static engine, online-LERN degeneration,
 atomic cache writes under concurrency."""
 import dataclasses
@@ -10,6 +10,7 @@ import threading
 import jax.numpy as jnp
 import numpy as np
 
+from _reference import run_reference
 from repro.core import llc, policies, sim, sweep
 
 TINY = dataclasses.replace(sim.SimParams(), n_inputs=1, max_epochs=40,
@@ -26,8 +27,8 @@ def test_group_matches_sequential_bitwise():
         grp = sweep.simulate_group("config1", mix, pols, TINY,
                                    deadline_cycles=DEADLINE)
         for pol, got in zip(pols, grp):
-            want = sim.run("config1", mix, pol, TINY,
-                           deadline_cycles=DEADLINE)
+            want = run_reference("config1", mix, pol, TINY,
+                                 deadline_cycles=DEADLINE)
             assert got.summary() == want.summary(), (mix, pol.name)
             assert got.completion_cycles == want.completion_cycles
             assert got.epochs == want.epochs
@@ -42,8 +43,8 @@ def test_group_diverging_lane_lengths():
     pols = [policies.get(n) for n in ("arp-nb", "fifo-nb")]
     grp = sweep.simulate_group("config1", "moti1", pols, p,
                                deadline_cycles=DEADLINE)
-    seq = [sim.run("config1", "moti1", pol, p, deadline_cycles=DEADLINE)
-           for pol in pols]
+    seq = [run_reference("config1", "moti1", pol, p,
+                         deadline_cycles=DEADLINE) for pol in pols]
     assert grp[0].epochs != grp[1].epochs  # the premise: lanes diverge
     for pol, got, want in zip(pols, grp, seq):
         assert got.summary() == want.summary(), pol.name
@@ -58,8 +59,8 @@ def test_group_geometry_fallback():
     grp = sweep.simulate_group("config1", "moti1", pols, TINY,
                                deadline_cycles=DEADLINE)
     for pol, got in zip(pols, grp):
-        want = sim.run("config1", "moti1", pol, TINY,
-                       deadline_cycles=DEADLINE)
+        want = run_reference("config1", "moti1", pol, TINY,
+                             deadline_cycles=DEADLINE)
         assert got.summary() == want.summary(), pol.name
 
 
@@ -87,7 +88,8 @@ def test_online_lern_retrains_end_to_end():
     grp = sweep.simulate_group("config1", "moti1",
                                [pol, policies.get("fifo-nb")], p,
                                deadline_cycles=DEADLINE)
-    want = sim.run("config1", "moti1", pol, p, deadline_cycles=DEADLINE)
+    want = run_reference("config1", "moti1", pol, p,
+                         deadline_cycles=DEADLINE)
     assert grp[0].summary() == want.summary()
     assert grp[0].epochs == want.epochs > 0
     assert np.isfinite(grp[0].ipc_total)
@@ -101,10 +103,11 @@ def test_map_points_order_cache_and_dedup(tmp_path, monkeypatch):
     rs = sweep.map_points(pts, jobs=1)
     assert [r.policy for r in rs] == ["fifo-nb", "arp-nb", "fifo-nb"]
     assert rs[0].summary() == rs[2].summary()
-    # results landed in the sim disk cache: run_cached is now a pure read
+    # results landed in the sim disk cache as complete, re-readable rows
     for pt, r in zip(pts, rs):
         assert os.path.exists(pt.cache_path())
-        c = sim.run_cached("config1", "moti1", pt.policy, TINY)
+        with open(pt.cache_path(), "rb") as f:
+            c = pickle.load(f)
         assert c.summary() == r.summary()
 
 
