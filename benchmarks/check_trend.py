@@ -16,7 +16,11 @@ speedup-style metrics are ratioed current/baseline, and the job FAILS when
 the geomean ratio of any metric drops below ``1 - tolerance``.  The
 default tolerance (25%) is tuned for the noisy 2-core CI runner: absolute
 seconds swing wildly there, but the engine-vs-engine speedups inside one
-run are far more stable.  No matched entries is also a failure — it means
+run are far more stable.  Metrics listed in ``_ABS_FLOORS`` additionally
+gate the current run's geomean against an absolute floor (bench-sim's
+``pps_speedup`` >= 1.0: the bucketed engine must beat ``map_points`` on
+one device outright, not merely track a baseline that might itself have
+regressed).  No matched entries is also a failure — it means
 the baseline footprint drifted and the gate would otherwise be vacuous
 (regenerate the ``*.smoke.json`` baseline in the same commit that changes
 the smoke footprint).
@@ -29,7 +33,7 @@ from typing import Dict, List, Tuple
 
 import numpy as np
 
-# identifying keys + gated metrics per artifact family; bench-sim/v2
+# identifying keys + gated metrics per artifact family; bench-sim/v3
 # entries split by kind — "engine" rows carry ``speedup`` (fused vs
 # host), "sweep" rows carry ``pps_speedup`` (bucketed vs map_points);
 # a metric absent from an entry is simply skipped for it, so one
@@ -40,20 +44,27 @@ _PROFILES = {
     "hydra-bench-lern": (("config", "accesses"),
                          ("speedup", "seg_speedup")),
 }
+# absolute geomean floors, checked against the CURRENT run alone (no
+# baseline ratio): the flat/donated/staged bucketed engine must win
+# outright on one device — a trend ratio can't see a regression that
+# the baseline itself already carried
+_ABS_FLOORS = {
+    "hydra-bench-sim": {"pps_speedup": 1.0},
+}
 
 
-def _profile(doc: Dict) -> Tuple[Tuple[str, ...], Tuple[str, ...]]:
+def _profile(doc: Dict) -> Tuple[Tuple[str, ...], Tuple[str, ...], Dict]:
     schema = str(doc.get("schema", ""))
     for prefix, prof in _PROFILES.items():
         if schema.startswith(prefix):
-            return prof
+            return prof + (_ABS_FLOORS.get(prefix, {}),)
     raise SystemExit(f"unknown bench schema {schema!r}")
 
 
 def compare(current: Dict, baseline: Dict, tolerance: float
             ) -> List[str]:
     """Human-readable failure list (empty == within tolerance)."""
-    keys, metrics = _profile(current)
+    keys, metrics, abs_floors = _profile(current)
     base_by_key = {tuple(e.get(k) for k in keys): e
                    for e in baseline.get("entries", [])}
     ratios: Dict[str, List[float]] = {m: [] for m in metrics}
@@ -82,6 +93,20 @@ def compare(current: Dict, baseline: Dict, tolerance: float
         if geo < floor:
             errs.append(f"{m} geomean ratio {geo:.3f} < {floor:.2f} "
                         f"({len(rs)} matched entries)")
+    for m, abs_floor in abs_floors.items():
+        vals = [e[m] for e in current.get("entries", [])
+                if isinstance(e.get(m), (int, float))]
+        if not vals:
+            errs.append(f"{m}: absolute floor {abs_floor:.2f} set but no "
+                        "current entries carry the metric")
+            continue
+        geo = float(np.exp(np.mean(np.log(vals))))
+        status = "ok" if geo >= abs_floor else "REGRESSION"
+        print(f"  {m}: geomean {geo:.3f} over {len(vals)} entries "
+              f"(absolute floor {abs_floor:.2f}) {status}")
+        if geo < abs_floor:
+            errs.append(f"{m} geomean {geo:.3f} < absolute floor "
+                        f"{abs_floor:.2f} ({len(vals)} entries)")
     return errs
 
 

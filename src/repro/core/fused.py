@@ -29,19 +29,27 @@ Parity contract (tests/test_fused.py):
 
 Fallback contract: the per-epoch round matrix has a static round
 capacity (``max_rounds``).  A hot set overflowing it — or an
-online-LERN retrain boundary — raises a flag; the driver rolls the
-super-step back and replays that stretch through the host path (which
-chunks hot sets), then resumes fused.  Two consecutive overflowing
-super-steps make the host path sticky for the rest of the run, so a
-pathological trace never pays for doomed device dispatches repeatedly.
-``sim.drive_lane`` survives unchanged as the sequential oracle;
-``sweep.simulate_group(engine=...)`` routes eligible groups here.
+online-LERN retrain boundary — raises a flag.  An overflowing epoch
+never commits: the lane *freezes in place* on its pre-overflow carry
+(``_finish_lane`` selects the old state, the sticky flag gates further
+steps), so the carry is always valid and the driver can resume from it
+directly — no rollback buffer is needed, which is what lets the
+bucketed driver donate its carry.  ``drive_lanes_fused`` re-dispatches
+the stretch at an escalated capacity (re-jit, doubling up to the host's
+largest round bucket), then replays through the host path (which chunks
+hot sets) and goes host-sticky after two consecutive overflows.
+``drive_lanes_bucketed`` escalates the whole bucket's capacity the same
+way and, once exhausted, demotes only the offending groups to
+``drive_lanes_fused``.  ``sim.drive_lane`` survives unchanged as the
+sequential oracle; ``sweep.simulate_group(engine=...)`` routes eligible
+groups here.
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
 import os
+import time
 from typing import List, NamedTuple, Optional, Tuple
 
 import jax
@@ -70,6 +78,27 @@ MAX_ROUNDS_CAP = llc_mod.ROUND_BUCKETS[-1]
 SPARSE_CAP = int(os.environ.get("REPRO_FUSED_SPARSE_CAP", "256"))
 
 _HUGE_KEY = np.int64(1) << 62
+
+# Donation + double-buffered dispatch for the bucketed driver (off = one
+# undonated dispatch at a time, the reference path the parity tests pin).
+PIPELINE_DEFAULT = os.environ.get("REPRO_BUCKET_PIPELINE", "1") != "0"
+
+# Wall-clock split of the bucketed driver, accumulated across calls:
+# stage_s (host->device staging + carry init), dispatch_s (tracing,
+# compilation and enqueue of super-steps), device_s (blocked fetching
+# StepOut), writeback_s (host history/carry sync).  bench_sim resets
+# before a leg and reports the split per kind="sweep" entry.
+_PHASES = {"stage_s": 0.0, "dispatch_s": 0.0, "device_s": 0.0,
+           "writeback_s": 0.0}
+
+
+def reset_phase_times() -> None:
+    for k in _PHASES:
+        _PHASES[k] = 0.0
+
+
+def phase_times() -> dict:
+    return dict(_PHASES)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -178,7 +207,7 @@ class FusedCarry(NamedTuple):
 
 class StepOut(NamedTuple):
     """Per-epoch per-lane scan outputs (history write-back)."""
-    active: jnp.ndarray       # bool — this step actually ran
+    active: jnp.ndarray       # bool — this step ran AND committed
     pos_before: jnp.ndarray   # i64  — accel window start (online-LERN)
     n_a: jnp.ndarray          # i64  — hist accel_rate
     req: jnp.ndarray          # f64  — hist requirement
@@ -187,6 +216,8 @@ class StepOut(NamedTuple):
     core_ipc: jnp.ndarray     # f64
     amal: jnp.ndarray         # f64
     occ: jnp.ndarray          # int [2] core/accel occupancy (record_occ)
+    alive: jnp.ndarray        # bool — lane still active after this step
+    ovf: jnp.ndarray          # bool — sticky round-capacity flag after it
 
 
 def _np_sum_order(terms: List[jnp.ndarray]):
@@ -270,8 +301,15 @@ def _pack_meta(is_accel, write, hint, prefetch, dlok, src):
 
 
 def _build_rounds_device(dims: FusedDims, sh: SharedConsts, lc, n_a, n_c,
-                         pos, stream_pos, ri_th, rc_th, special):
+                         pos, stream_pos, ri_th, rc_th, special, gid=None):
     """Build one epoch's round-major [R, S] event matrices on device.
+
+    ``gid`` is the flat-bucket variant's group index: the big trace and
+    stream arrays then carry a leading group axis (vmapped with
+    ``in_axes=None``) and every access becomes a (group, element) gather
+    — same elements, so values are unchanged — letting a bucket of G
+    groups run begin/finish over one flat (G*L) lane axis with no group
+    vmap.
 
     Reproduces the host pipeline's per-set event order exactly: static
     segment layout (accel, optional DPCP prefetch, core 0..C-1) with
@@ -295,10 +333,15 @@ def _build_rounds_device(dims: FusedDims, sh: SharedConsts, lc, n_a, n_c,
     when_a = (ia << WHEN_BITS) // na_safe
     idx_a = pos + ia
     valid_a = ia < n_a
-    line_a = jnp.take(sh.line, idx_a)
-    write_a = jnp.take(sh.write, idx_a)
+    if gid is None:
+        line_a = jnp.take(sh.line, idx_a)
+        write_a = jnp.take(sh.write, idx_a)
+        layer_now = jnp.take(sh.layer, pos)
+    else:
+        line_a = sh.line[gid, idx_a]
+        write_a = sh.write[gid, idx_a]
+        layer_now = sh.layer[gid, pos]
     # per-event bypass hint: LERN clusters x epoch thresholds, or AFRp
-    layer_now = jnp.take(sh.layer, pos)
     cold_now = jnp.take(lc.cold, layer_now)
     rc_a = jnp.take(lc.rc, idx_a)
     ri_a = jnp.take(lc.ri, idx_a)
@@ -332,7 +375,8 @@ def _build_rounds_device(dims: FusedDims, sh: SharedConsts, lc, n_a, n_c,
         nk = n_c[k]
         whens.append((jk << WHEN_BITS) // jnp.maximum(nk, 1))
         idx_k = stream_pos[k] + jk
-        lines.append(jnp.take(sh.streams[k], idx_k))
+        lines.append(jnp.take(sh.streams[k], idx_k) if gid is None
+                     else sh.streams[gid, k, idx_k])
         fk = jnp.zeros(cap, bool)
         metas.append(_pack_meta(fk, jnp.take(lc.writes[k], idx_k), fk, fk,
                                 fk, jnp.int32(k)))
@@ -527,14 +571,18 @@ class _Begin(NamedTuple):
 # ---------------------------------------------------------------------------
 # one fused epoch: vmapped begin half -> batch round loop -> vmapped finish
 # ---------------------------------------------------------------------------
-def _begin_lane(dims: FusedDims, sh: SharedConsts, stop_epoch, lc, cy
-                ) -> _Begin:
+def _begin_lane(dims: FusedDims, sh: SharedConsts, stop_epoch, lc, cy,
+                gid=None) -> _Begin:
     """Port of Lane.begin_epoch for one lane (the caller vmaps): epoch
     arbitration, admission, APM thresholds, and the on-device round
     build.  Integer results match the host's int() truncations exactly;
     float intermediates replicate the host operation order at float64.
+    ``gid`` routes the flat-bucket variant's (group, element) trace
+    gathers; see _build_rounds_device.
     """
-    step_active = cy.active & (cy.epoch < stop_epoch)
+    # ~overflow: an overflowed lane freezes in place (its last epoch
+    # never committed) until the driver escalates capacity or demotes it
+    step_active = cy.active & (cy.epoch < stop_epoch) & ~cy.overflow
     f64 = jnp.float64
 
     # ---- arbitration mode (begin_epoch) -------------------------------
@@ -629,7 +677,7 @@ def _begin_lane(dims: FusedDims, sh: SharedConsts, stop_epoch, lc, cy
     (line_m, meta_m, counts, perm, inv_perm, n_rounds,
      ovf) = _build_rounds_device(
         dims, sh, lc, n_a, n_c, cy.pos, cy.stream_pos,
-        ri_th, rc_th, special)
+        ri_th, rc_th, special, gid)
     # frozen lanes contribute no rounds to the batch loop
     n_rounds = jnp.where(step_active, n_rounds, jnp.int32(0))
     counts = jnp.where(step_active, counts, jnp.int32(0))
@@ -731,7 +779,7 @@ def _finish_lane(dims: FusedDims, sh: SharedConsts, lc, cy, bg: _Begin,
         pf_prev=pf_fills.astype(jnp.float64), epoch=epoch,
         completions=completions, totals=totals,
         total_llc=total_llc, total_dram=total_dram,
-        overflow=cy.overflow | bg.ovf)
+        overflow=cy.overflow)
     # per-epoch occupancy readback, fused (llc.occupancy's counts on the
     # epoch-end state; the write-back only consumes active steps)
     if dims.record_occ:
@@ -742,12 +790,20 @@ def _finish_lane(dims: FusedDims, sh: SharedConsts, lc, cy, bg: _Begin,
     else:
         occ = jnp.zeros(2, jnp.int32)
 
-    # freeze everything when the step didn't run
+    # commit only steps that ran AND fit the round capacity: a frozen or
+    # overflowing step is an identity on the carry, so the carry is
+    # always a valid resume point (no rollback buffer — the bucketed
+    # driver donates it) and the overflowing lane simply re-attempts the
+    # same epoch after the driver escalates capacity
+    commit = step_active & ~bg.ovf
     out_cy = jax.tree.map(
-        lambda a, b: jnp.where(step_active, a, b), new, cy)
-    out = StepOut(active=step_active, pos_before=cy.pos, n_a=n_a,
+        lambda a, b: jnp.where(commit, a, b), new, cy)
+    out_cy = out_cy._replace(
+        overflow=cy.overflow | (step_active & bg.ovf))
+    out = StepOut(active=commit, pos_before=cy.pos, n_a=n_a,
                   req=bg.req_out, ri_th=ri_th, rc_th=rc_th,
-                  core_ipc=core_ipc_sum, amal=out_cy.amal, occ=occ)
+                  core_ipc=core_ipc_sum, amal=out_cy.amal, occ=occ,
+                  alive=out_cy.active, ovf=out_cy.overflow)
     return out_cy, out
 
 
@@ -886,6 +942,10 @@ class _Staged:
         self._m_pad = m_pad
         self._n_layers = nl_pad
         self.lc = self._stage_lanes(lanes)
+        # flipped by refresh_clusters: an online retrain rewrote the
+        # device tables, so a staging cache must not reuse this object
+        # for a fresh point (sweep._staged_for checks it)
+        self.stale = False
 
     def _stage_lanes(self, lanes: List[Lane]) -> LaneConsts:
         n_l, m, n_c = len(lanes), self._m, len(lanes[0].profiles)
@@ -953,6 +1013,29 @@ class _Staged:
     def refresh_clusters(self, lanes: List[Lane]) -> None:
         """Re-upload per-lane cluster tables (after an online retrain)."""
         self.lc = self._stage_lanes(lanes)
+        self.stale = True
+
+
+def bucket_pads(groups: List[List[Lane]]) -> Tuple[int, int, int]:
+    """Common staging pads (m_pad, wmax_pad, nl_pad) for one bucket slab
+    — every group's arrays are sized to the slab maxima so they stack
+    along the leading group axis."""
+    return (max(g[0].tr.num_accesses for g in groups),
+            max(max([s.shape[0] for s in g[0].streams] or [1])
+                for g in groups),
+            max(len(g[0].tr.layer_names) for g in groups))
+
+
+def stage_group(lanes: List[Lane], k_epochs: int = DEFAULT_SUPERSTEP,
+                max_rounds: int = DEFAULT_MAX_ROUNDS,
+                pads: Optional[Tuple[int, int, int]] = None) -> _Staged:
+    """Build one group's staged device constants (the unit sweep's
+    staging cache holds); time lands in the stage_s phase bucket."""
+    t0 = time.perf_counter()
+    with enable_x64():
+        staged = _Staged(lanes, k_epochs, max_rounds, pads=pads)
+    _PHASES["stage_s"] += time.perf_counter() - t0
+    return staged
 
 
 def _init_carry(lanes: List[Lane], states: llc_mod.LLCState,
@@ -1001,16 +1084,16 @@ def _init_carry(lanes: List[Lane], states: llc_mod.LLCState,
 # ---------------------------------------------------------------------------
 # write-back / host fallback / driver
 # ---------------------------------------------------------------------------
-def _write_back(lanes: List[Lane], carry: FusedCarry, ys: StepOut) -> None:
-    """Sync an accepted super-step's results into the host Lane objects —
-    the exact fields (and python/numpy types) the sequential loop would
-    have produced, so ``Lane.result()`` and any later host epochs are
-    indistinguishable from a pure-host run."""
-    c = jax.tree.map(np.asarray, carry._replace(st=None))
-    y = jax.tree.map(np.asarray, ys)
+def _write_back_carry(lanes: List[Lane], c, skip=None) -> None:
+    """Sync per-lane carry scalars into the host Lane objects — the exact
+    fields (and python/numpy types) the sequential loop would have
+    produced, so ``Lane.result()`` and any later host epochs are
+    indistinguishable from a pure-host run.  ``c`` holds one group's
+    non-state carry leaves as numpy; value-idempotent (a frozen lane
+    writes back its unchanged values), so the bucketed driver can call
+    it once at the end of the run and again at a demotion."""
     for i, lane in enumerate(lanes):
-        steps = int(y.active[:, i].sum())
-        if steps == 0:
+        if skip is not None and skip[i]:
             continue
         lane.hr_core = float(c.hr_core[i])
         lane.hr_accel = float(c.hr_accel[i])
@@ -1036,6 +1119,17 @@ def _write_back(lanes: List[Lane], carry: FusedCarry, ys: StepOut) -> None:
          lane.total_accel_acc) = (int(v) for v in c.totals[i])
         lane.total_llc = float(c.total_llc[i])
         lane.total_dram = float(c.total_dram[i])
+
+
+def _write_back_steps(lanes: List[Lane], y: StepOut) -> None:
+    """Append one super-step's committed epochs (``y`` = one group's
+    StepOut as numpy) into the host lanes' histories.  Committed steps
+    are a prefix of the scan — a freeze (stop boundary, completion or
+    overflow) is sticky within a super-step — so row t is epoch t."""
+    for i, lane in enumerate(lanes):
+        steps = int(y.active[:, i].sum())
+        if steps == 0:
+            continue
         h = lane.hist
         et = lane.et
         for t in range(steps):
@@ -1053,6 +1147,17 @@ def _write_back(lanes: List[Lane], carry: FusedCarry, ys: StepOut) -> None:
                 lane._win_ranges.append(
                     (int(y.pos_before[t, i]),
                      int(y.pos_before[t, i] + y.n_a[t, i])))
+
+
+def _write_back(lanes: List[Lane], carry: FusedCarry, ys: StepOut) -> None:
+    """Sync an accepted super-step's results into the host Lane objects
+    (per-group driver: carry scalars + history rows in one call)."""
+    c = jax.tree.map(np.asarray, carry._replace(st=None))
+    y = jax.tree.map(np.asarray, ys)
+    _write_back_carry(
+        lanes, c, skip=[int(y.active[:, i].sum()) == 0
+                        for i in range(len(lanes))])
+    _write_back_steps(lanes, y)
 
 
 def _host_stretch(lanes: List[Lane], states: llc_mod.LLCState,
@@ -1087,12 +1192,14 @@ def _host_stretch(lanes: List[Lane], states: llc_mod.LLCState,
 
 def _next_stop(lanes: List[Lane], max_epochs: int) -> int:
     """First epoch the fused scan must not cross: the nearest online-LERN
-    retrain boundary of any lane (the refit runs on the host)."""
-    e = max((lane.epoch for lane in lanes if lane.active), default=0)
+    retrain boundary of any lane (the refit runs on the host).  Computed
+    from each lane's own epoch — lanes run in lockstep here, but a group
+    resuming after a demotion replay may hold heterogeneous epochs."""
     stop = max_epochs
     for lane in lanes:
         r = lane._retrain_every
         if lane.active and r is not None:
+            e = lane.epoch
             stop = min(stop, e + r - e % r)
     return stop
 
@@ -1186,61 +1293,88 @@ def bucket_key(lanes: List[Lane]) -> Tuple:
             int(lane0.p.n_inputs), bool(lane0.p.record_occupancy))
 
 
-def _epoch_bucket_step(dims: FusedDims, sh_g, stop_g, lc_g, cy_g):
-    """One epoch of every group in the bucket.
-
-    The begin/finish halves vmap over the group axis (then lanes, as in
-    the per-group engine) — they are elementwise per lane, so the extra
-    batch axis cannot change their values.  The round loop runs ONCE
-    over the (G*L)-flattened lane axis: its while-loop trip count and
-    width-tier cond predicates stay scalars, exactly as in the per-group
-    engine (vmapping the loop over groups would batch the predicates and
-    execute every width branch for every round).  Flattening is safe for
-    the same reason the lane batch itself is: ``_run_rounds_batch`` is
-    already per-lane-independent, and padded trailing rounds only
-    advance the LRU tick, never per-way order (see its docstring)."""
-    n_l = dims.n_lanes
-
-    def begin_group(sh, stop, lc, cy):
-        return jax.vmap(functools.partial(_begin_lane, dims, sh, stop)
-                        )(lc, cy)
-
-    bg = jax.vmap(begin_group)(sh_g, stop_g, lc_g, cy_g)
-    n_g = bg.n_a.shape[0]
-
-    def flat(x):
-        return x.reshape((n_g * n_l,) + x.shape[2:])
-
-    def unflat(x):
-        return x.reshape((n_g, n_l) + x.shape[1:])
-
-    new_st, stats, percore = _run_rounds_batch(
-        dims, jax.tree.map(flat, lc_g.knobs), jax.tree.map(flat, cy_g.st),
-        jax.tree.map(flat, bg))
-    new_st = jax.tree.map(unflat, new_st)
-    stats, percore = unflat(stats), unflat(percore)
-
-    def finish_group(sh, lc, cy, bg_i, st_i, stats_i, pc_i):
-        return jax.vmap(functools.partial(_finish_lane, dims, sh)
-                        )(lc, cy, bg_i, st_i, stats_i, pc_i)
-
-    return jax.vmap(finish_group)(sh_g, lc_g, cy_g, bg, new_st, stats,
-                                  percore)
+# SharedConsts leaves that keep their leading group axis in the flat
+# bucket program (read via (group, element) gathers); every other leaf
+# is group-constant and broadcasts to the flat lane axis up front.
+_SH_GROUP_ARRAYS = frozenset({"line", "write", "layer", "streams"})
+_SH_FLAT_AXES = SharedConsts(**{
+    f: (None if f in _SH_GROUP_ARRAYS else 0) for f in SharedConsts._fields})
 
 
-@functools.partial(jax.jit, static_argnums=(0, 1))
-def _superstep_bucket(dims: FusedDims, n_shards: int, sh_g, lc_g, carry_g,
-                      stop_g):
-    """K epochs of every group in the bucket as one device program.
+def _bucket_run(dims: FusedDims, n_shards: int):
+    """Build the bucketed super-step program ``run(sh, lc, carry, stop)``.
+
+    The (group, lane) axes flatten to ONE (G*L) lane axis outside the
+    epoch scan, so a bucket of G groups runs the exact program one
+    G*L-lane group would — no group-axis vmap anywhere.  Group-constant
+    ``SharedConsts`` scalars and the stop epochs broadcast to the flat
+    axis via one lane-indexed gather up front; the big per-group trace
+    and stream arrays stay group-major and are read with (group,
+    element) gathers inside the round build (``gid``), which touch the
+    same elements as the per-group ``jnp.take``s and so cannot change
+    values.  The round while-loop already ran flat — its trip count and
+    width-tier predicates stay scalars.
 
     With ``n_shards > 1`` the group axis is ``shard_map``ped across
-    devices: groups are fully independent, so each shard runs its local
-    slice with no cross-device communication (the round loop's trip
-    count becomes a per-shard max, which only helps)."""
+    devices first: groups are fully independent, so each shard flattens
+    and runs its local slice with no cross-device communication (the
+    round loop's trip count becomes a per-shard max, which only helps).
+    """
+    n_l = dims.n_lanes
+
     def run(sh, lc, carry, stop):
-        def body(c, _):
-            return _epoch_bucket_step(dims, sh, stop, lc, c)
-        return jax.lax.scan(body, carry, None, length=dims.k_epochs)
+        n_g = stop.shape[0]
+        gid = jnp.repeat(jnp.arange(n_g, dtype=jnp.int32), n_l)
+
+        def flat(x):
+            return x.reshape((n_g * n_l,) + x.shape[2:])
+
+        sh_f = sh._replace(**{
+            f: getattr(sh, f)[gid] for f in SharedConsts._fields
+            if f not in _SH_GROUP_ARRAYS})
+        stop_f = stop[gid]
+        lc_f = jax.tree.map(flat, lc)
+        begin = jax.vmap(
+            lambda s, st, l, c, g: _begin_lane(dims, s, st, l, c, g),
+            in_axes=(_SH_FLAT_AXES, 0, 0, 0, 0))
+        finish = jax.vmap(
+            lambda s, l, c, b, nst, sta, pc:
+            _finish_lane(dims, s, l, c, b, nst, sta, pc),
+            in_axes=(_SH_FLAT_AXES, 0, 0, 0, 0, 0, 0))
+
+        def live_step(cy):
+            bg = begin(sh_f, stop_f, lc_f, cy, gid)
+            new_st, stats, percore = _run_rounds_batch(
+                dims, lc_f.knobs, cy.st, bg)
+            return finish(sh_f, lc_f, cy, bg, new_st, stats, percore)
+
+        def body(cy, _):
+            # epochs where every lane is frozen (done, at its stop, or
+            # overflowed) skip the whole build+rounds+finish program —
+            # a scalar cond, possible only because nothing vmaps over
+            # groups anymore.  This is what makes a speculative
+            # super-step past the end of the run (double-buffering) and
+            # the post-completion tail of a final super-step ~free.
+            # Frozen rows are identities: active=False rows are never
+            # read by the write-back, and alive/ovf carry the real flags.
+            y_sd = jax.eval_shape(live_step, cy)[1]
+
+            def frozen_step(cy):
+                y = jax.tree.map(
+                    lambda sd: jnp.zeros(sd.shape, sd.dtype), y_sd)
+                return cy, y._replace(alive=cy.active, ovf=cy.overflow)
+
+            run_any = jnp.any(cy.active & (cy.epoch < stop_f)
+                              & ~cy.overflow)
+            return jax.lax.cond(run_any, live_step, frozen_step, cy)
+
+        cy_end, ys = jax.lax.scan(
+            body, jax.tree.map(flat, carry), None, length=dims.k_epochs)
+        unflat = lambda x: x.reshape((n_g, n_l) + x.shape[1:])
+        return (jax.tree.map(unflat, cy_end),
+                jax.tree.map(
+                    lambda y: y.reshape((y.shape[0], n_g, n_l)
+                                        + y.shape[2:]), ys))
 
     if n_shards > 1:
         from jax.sharding import Mesh, PartitionSpec as P
@@ -1251,7 +1385,48 @@ def _superstep_bucket(dims: FusedDims, n_shards: int, sh_g, lc_g, carry_g,
                         in_specs=(P("g"), P("g"), P("g"), P("g")),
                         out_specs=(P("g"), P(None, "g")),
                         check_rep=False)
-    return run(sh_g, lc_g, carry_g, stop_g)
+    return run
+
+
+@functools.partial(jax.jit, static_argnums=(0, 1))
+def _superstep_bucket(dims: FusedDims, n_shards: int, sh_g, lc_g, carry_g,
+                      stop_g):
+    """K epochs of every group in the bucket as one device program."""
+    return _bucket_run(dims, n_shards)(sh_g, lc_g, carry_g, stop_g)
+
+
+# AOT-compiled donating executables, keyed on static dims + arg avals.
+_DONATED_EXECS: dict = {}
+
+
+def _superstep_bucket_donated(dims: FusedDims, n_shards: int, sh_g, lc_g,
+                              carry_g, stop_g):
+    """Donating twin of ``_superstep_bucket``: the carry buffers are
+    donated to the next super-step (the driver never reads a dispatched
+    carry again — StepOut carries everything the host needs).
+
+    Compiled ahead-of-time with the persistent compilation cache
+    bypassed: executing a *deserialized* executable with donated buffers
+    corrupts the heap on jax 0.4.x CPU — the same bug
+    ``Trainer._compile_step`` works around, see docs/tpu_runbook.md."""
+    args = (sh_g, lc_g, carry_g, stop_g)
+    key = (dims, n_shards) + tuple(
+        (leaf.shape, str(leaf.dtype)) for leaf in jax.tree.leaves(args))
+    exe = _DONATED_EXECS.get(key)
+    if exe is None:
+        from jax.experimental.compilation_cache import (
+            compilation_cache as cc)
+        prev = jax.config.jax_compilation_cache_dir
+        jax.config.update("jax_compilation_cache_dir", None)
+        cc.reset_cache()
+        try:
+            fn = jax.jit(_bucket_run(dims, n_shards), donate_argnums=(2,))
+            exe = fn.lower(*args).compile()
+        finally:
+            jax.config.update("jax_compilation_cache_dir", prev)
+            cc.reset_cache()
+        _DONATED_EXECS[key] = exe
+    return exe(*args)
 
 
 def _stack_trees(trees):
@@ -1261,41 +1436,61 @@ def _stack_trees(trees):
 def drive_lanes_bucketed(groups: List[List[Lane]], states=None,
                          k_epochs: int = DEFAULT_SUPERSTEP,
                          max_rounds: int = DEFAULT_MAX_ROUNDS,
-                         devices: Optional[int] = None) -> None:
+                         devices: Optional[int] = None,
+                         staged: Optional[List[_Staged]] = None,
+                         pipeline: Optional[bool] = None) -> None:
     """Drive several static-compatible lane groups (equal ``bucket_key``)
-    to completion as ONE vmapped fused program with a leading group axis.
+    to completion as ONE flat fused program with a leading group axis.
 
     Per-group results are bitwise-identical to ``drive_lanes_fused`` on
-    each group alone (tests/test_bucketed.py): the begin/finish halves
-    are elementwise under the extra batch axis and the shared round loop
-    runs on the flattened (group, lane) axis it already batches over.
+    each group alone (tests/test_bucketed.py): the flat (G*L) program
+    computes the same per-lane values (see ``_bucket_run``), and the
+    driver commits exactly the epochs the per-group driver would.
 
-    Overflow handling demotes surgically: the shared round capacity is
-    escalated first (one re-jit the whole bucket amortizes; the round
-    loop's trip count follows the data, so shallow groups don't pay for
-    the new depth), and once the capacity is exhausted only the
-    *offending* groups leave — each is replayed through
-    ``drive_lanes_fused`` (host fallback and all) from its rolled-back
-    state and its batch slot is frozen, so one pathological group never
-    knocks the whole bucket off the device.
+    The driver tracks progress from the fetched ``StepOut`` alone
+    (per-lane committed-epoch counts and alive flags ride the scan
+    outputs), so between super-steps only the K-epoch history rows cross
+    the device boundary — the carry stays on device until the run ends
+    (or a group demotes), when its scalars sync once.  With ``pipeline``
+    (default ``REPRO_BUCKET_PIPELINE``, on) the carry is donated to the
+    next super-step, and when no lane has an online-LERN retrain
+    boundary (stop epochs constant) super-step N+1 is dispatched before
+    N's write-back runs, double-buffering host work against device work.
+    ``pipeline=False`` is the undonated, one-dispatch-at-a-time
+    reference path the parity tests pin against.
+
+    Overflow handling demotes surgically and never rolls back: an
+    overflowing lane freezes on its pre-overflow carry (see
+    ``_finish_lane``), so committed epochs stand.  The shared round
+    capacity is escalated first (one re-jit the whole bucket amortizes;
+    the round loop's trip count follows the data, so shallow groups
+    don't pay for the new depth), and once the capacity is exhausted
+    only the *offending* groups leave — each syncs its carry scalars and
+    is replayed through ``drive_lanes_fused`` (host fallback and all)
+    from its frozen state while its batch slot freezes, so one
+    pathological group never knocks the whole bucket off the device.
 
     ``devices`` bounds the ``shard_map`` shard count for the group axis
     (None = all visible devices); sharding engages when more than one
-    device is present and the group count divides evenly.
+    device is present and the group count divides evenly.  ``staged``
+    reuses previously staged device constants (sweep's staging cache);
+    entries must have been built with this bucket's ``bucket_pads`` and
+    the same ``k_epochs``/``max_rounds``.
     """
     assert groups and len({bucket_key(g) for g in groups}) == 1
     for g in groups:
         assert all(lane_supported(lane) for lane in g)
     n_groups = len(groups)
     max_epochs = [int(g[0].p.max_epochs) for g in groups]
-    pads = (max(g[0].tr.num_accesses for g in groups),
-            max(max([s.shape[0] for s in g[0].streams] or [1])
-                for g in groups),
-            max(len(g[0].tr.layer_names) for g in groups))
-    with enable_x64():
-        staged = [_Staged(g, k_epochs, max_rounds, pads=pads)
+    if pipeline is None:
+        pipeline = PIPELINE_DEFAULT
+    if staged is None:
+        pads = bucket_pads(groups)
+        staged = [stage_group(g, k_epochs, max_rounds, pads=pads)
                   for g in groups]
-        dims = staged[0].dims
+    t0 = time.perf_counter()
+    dims = staged[0].dims
+    with enable_x64():
         # Groups in one bucket agree on every static field except the
         # incidental choice of lane0's LLCConfig for ``cfg`` — behaviour
         # knobs ride as LaneKnobs data, so only geometry_key must match
@@ -1313,74 +1508,156 @@ def drive_lanes_bucketed(groups: List[List[Lane]], states=None,
                       for _ in groups]
         carry = _stack_trees([_init_carry(g, st, dims.n_inputs)
                               for g, st in zip(groups, states)])
+    _PHASES["stage_s"] += time.perf_counter() - t0
     n_dev = devices if devices else len(jax.devices())
     n_shards = n_dev if (n_dev > 1 and n_groups % n_dev == 0) else 1
+    # donation needs the one-device path: under shard_map the stacked
+    # inputs are resharded on the way in, and donating a buffer that is
+    # about to be resharded is not aliasing-safe on every backend
+    donate = pipeline and n_shards == 1
+    # speculative double-buffering needs constant stop epochs: an
+    # online-LERN boundary requires a host refit (and table re-upload)
+    # before the next super-step may start
+    speculate = pipeline and not any(
+        lane._retrain_every is not None for g in groups for lane in g)
+
+    # driver-local progress tracking, fed by the fetched StepOut — the
+    # host Lane objects' scalars are stale until the final carry sync
+    epochs = [[lane.epoch for lane in g] for g in groups]
+    alive = [[lane.active for lane in g] for g in groups]
     live = [True] * n_groups       # False once demoted to its own driver
+    # lanes that committed up to a retrain boundary whose refit hasn't
+    # run yet (deferred while their group has an overflow to resolve —
+    # the frozen lane must re-attempt its epoch under the OLD tables,
+    # exactly as drive_lanes_fused's rollback replays it)
+    due = [set() for _ in range(n_groups)]
 
     def group_active(i: int) -> bool:
-        return live[i] and any(lane.active for lane in groups[i])
+        return live[i] and any(alive[i])
 
-    while any(group_active(i) for i in range(n_groups)):
-        stops = [_next_stop(groups[i], max_epochs[i]) if group_active(i)
-                 else 0 for i in range(n_groups)]
-        epochs_before = [[lane.epoch for lane in g] for g in groups]
+    def next_stop(i: int) -> int:
+        if not group_active(i):
+            return 0
+        stop = max_epochs[i]
+        for j, lane in enumerate(groups[i]):
+            r = lane._retrain_every
+            if alive[i][j] and r is not None:
+                e = epochs[i][j]
+                # a due lane holds AT its boundary until the refit runs
+                stop = min(stop, e if j in due[i] else e + r - e % r)
+        return stop
+
+    def dispatch():
+        nonlocal carry
+        stops = [next_stop(i) for i in range(n_groups)]
+        before = [list(e) for e in epochs]
+        t = time.perf_counter()
         with enable_x64():
-            new_carry, ys = _superstep_bucket(
-                dims, n_shards, sh_g, lc_g, carry,
-                jnp.asarray(stops, jnp.int64))
-            ovf = np.asarray(new_carry.overflow).any(axis=1)   # [G]
-        if ovf.any():
-            # roll the whole super-step back (the old carry is live)
+            step = _superstep_bucket_donated if donate else _superstep_bucket
+            carry, ys = step(dims, n_shards, sh_g, lc_g, carry,
+                             jnp.asarray(stops, jnp.int64))
+            for leaf in jax.tree.leaves(ys):
+                leaf.copy_to_host_async()
+        _PHASES["dispatch_s"] += time.perf_counter() - t
+        return ys, before
+
+    inflight: list = []
+    depth = 2 if speculate else 1
+    overflow_pending: set = set()
+    while True:
+        while (not overflow_pending and len(inflight) < depth
+               and any(group_active(i) for i in range(n_groups))):
+            inflight.append(dispatch())
+            if not speculate:
+                break
+        if not inflight:
+            if not overflow_pending:
+                break
+            # every in-flight super-step is accounted for: escalate the
+            # shared capacity first (committed epochs stand; the frozen
+            # lanes re-attempt the same epoch at the new capacity) ...
             if dims.max_rounds < MAX_ROUNDS_CAP:
                 dims = dataclasses.replace(
                     dims, max_rounds=min(dims.max_rounds * 2,
                                          MAX_ROUNDS_CAP))
+                with enable_x64():
+                    carry = carry._replace(
+                        overflow=jnp.zeros_like(carry.overflow))
+                overflow_pending.clear()
                 continue
-            for i in np.flatnonzero(ovf):
+            # ... and past the cap, demote only the offending groups:
+            # sync their carry scalars and hand them to the per-group
+            # driver (host fallback and all) from their frozen state
+            host_c = jax.tree.map(np.asarray, carry._replace(st=None))
+            for i in sorted(overflow_pending):
                 if not live[i]:
                     continue
                 live[i] = False
+                _write_back_carry(groups[i],
+                                  jax.tree.map(lambda x: x[i], host_c))
+                # a deferred refit only touches the due lane's own
+                # tables (it holds at its boundary), so fire it before
+                # the replay picks the group up
+                for j in sorted(due[i]):
+                    groups[i][j]._online_retrain()
+                due[i].clear()
                 with enable_x64():     # f64 leaves: slice under x64
                     st_i = jax.tree.map(lambda x: x[i], carry.st)
                 drive_lanes_fused(groups[i], states=st_i,
-                                  k_epochs=k_epochs,
+                                  k_epochs=dims.k_epochs,
                                   max_rounds=dims.max_rounds)
             with enable_x64():
                 dead = jnp.asarray(np.asarray([not a for a in live]))
                 carry = carry._replace(
                     active=jnp.where(dead[:, None], False, carry.active),
                     overflow=jnp.zeros_like(carry.overflow))
+            overflow_pending.clear()
             continue
-        # one bulk device->host transfer, then numpy views per group:
-        # slicing each group's leaves on device would cost O(G x leaves)
-        # eager dispatches per super-step and erase the batching win
-        host_carry = jax.tree.map(np.asarray, new_carry._replace(st=None))
+        ys, before = inflight.pop(0)
+        t = time.perf_counter()
         host_ys = jax.tree.map(np.asarray, ys)
+        _PHASES["device_s"] += time.perf_counter() - t
+        t = time.perf_counter()
         for i in range(n_groups):
             if not live[i]:
                 continue
-            _write_back(groups[i],
-                        jax.tree.map(lambda x: x[i], host_carry),
-                        jax.tree.map(lambda y: y[:, i], host_ys))
-        with enable_x64():
-            carry = new_carry._replace(
-                overflow=jnp.zeros_like(new_carry.overflow))
+            y_i = jax.tree.map(lambda y: y[:, i], host_ys)
+            _write_back_steps(groups[i], y_i)
+            for j in range(dims.n_lanes):
+                epochs[i][j] += int(y_i.active[:, j].sum())
+                alive[i][j] = bool(y_i.alive[-1, j])
+                r = groups[i][j]._retrain_every
+                if (r is not None and epochs[i][j] > before[i][j]
+                        and epochs[i][j] % r == 0):
+                    due[i].add(j)
+            if y_i.ovf[-1].any():
+                overflow_pending.add(i)
+        _PHASES["writeback_s"] += time.perf_counter() - t
         # online-LERN boundaries land at the super-step edge per group
-        # (_next_stop): run the host refit hooks and re-upload that
-        # group's tables into its slot of the stacked constants
+        # (next_stop): run the host refit hooks and re-upload that
+        # group's tables into its slot of the stacked constants.  A
+        # group with an unresolved overflow defers (its frozen lane
+        # re-attempts its epoch under the old tables first).
         for i in range(n_groups):
-            if not live[i]:
+            if not live[i] or i in overflow_pending or not due[i]:
                 continue
-            retrained = False
-            for j, lane in enumerate(groups[i]):
-                r = lane._retrain_every
-                if (r is not None and lane.epoch > epochs_before[i][j]
-                        and lane.epoch % r == 0):
-                    lane._online_retrain()
-                    retrained = True
-            if retrained:
-                with enable_x64():
-                    staged[i].refresh_clusters(groups[i])
-                    lc_g = jax.tree.map(
-                        lambda full, new: full.at[i].set(new),
-                        lc_g, staged[i].lc)
+            for j in sorted(due[i]):
+                groups[i][j]._online_retrain()
+            due[i].clear()
+            t = time.perf_counter()
+            with enable_x64():
+                staged[i].refresh_clusters(groups[i])
+                lc_g = jax.tree.map(
+                    lambda full, new: full.at[i].set(new),
+                    lc_g, staged[i].lc)
+            _PHASES["stage_s"] += time.perf_counter() - t
+    # one final scalar sync per lane — everything epoch-by-epoch already
+    # landed via _write_back_steps, and demoted groups were synced at
+    # demotion (then driven to completion by the per-group driver)
+    t = time.perf_counter()
+    host_c = jax.tree.map(np.asarray, carry._replace(st=None))
+    for i in range(n_groups):
+        if live[i]:
+            _write_back_carry(groups[i],
+                              jax.tree.map(lambda x: x[i], host_c))
+    _PHASES["writeback_s"] += time.perf_counter() - t

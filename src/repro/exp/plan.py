@@ -50,6 +50,10 @@ class ExecPlan:
     fit_engine: "auto" | "bucketed" | "segmented" k-means fit engine
                 (default: env ``REPRO_LERN_FIT``, else "auto")
     max_lanes:  lane cap per device batch (default ``sweep.MAX_LANES``)
+    pipeline:   bucketed engine only: donate the super-step carry and
+                double-buffer dispatch (default: env
+                ``REPRO_BUCKET_PIPELINE``, on; ``False`` is the
+                undonated one-dispatch-at-a-time reference path)
     """
     engine: Optional[str] = None
     jobs: Optional[int] = None
@@ -57,6 +61,7 @@ class ExecPlan:
     cache: Optional[bool] = None
     fit_engine: Optional[str] = None
     max_lanes: Optional[int] = None
+    pipeline: Optional[bool] = None
 
     def __post_init__(self):
         if self.engine is not None and self.engine not in _ENGINES:
@@ -83,6 +88,10 @@ class ExecPlan:
             raise ValueError(f"unknown fit_engine {fit!r} from "
                              f"REPRO_LERN_FIT (expected one of {_FIT_ENGINES})")
         from repro.core import sweep  # deferred: exp layers above core
+        # mirrors fused.PIPELINE_DEFAULT without importing the (heavy)
+        # fused module here — plan resolution must stay light
+        pipeline = (os.environ.get("REPRO_BUCKET_PIPELINE", "1") != "0"
+                    if self.pipeline is None else bool(self.pipeline))
         return dataclasses.replace(
             self, engine=engine,
             jobs=max(1, int(self.jobs if self.jobs is not None else 1)),
@@ -90,4 +99,5 @@ class ExecPlan:
             cache=True if self.cache is None else bool(self.cache),
             fit_engine=fit,
             max_lanes=(sweep.MAX_LANES if self.max_lanes is None
-                       else int(self.max_lanes)))
+                       else int(self.max_lanes)),
+            pipeline=pipeline)

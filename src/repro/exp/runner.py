@@ -8,12 +8,12 @@ default when ``jobs <= 1``) batches whole sweeps on device through
 Every engine is bitwise-identical on integer stats and f64 histories —
 pinned by tests/test_exp.py and tests/test_bucketed.py.
 
-The pre-ExecPlan kwargs (``jobs=``, ``cache=``, ``max_lanes=``) still
-work for one release with a ``DeprecationWarning``.
+Execution knobs live solely on ``ExecPlan`` — the pre-ExecPlan bare
+kwargs (``jobs=``, ``cache=``, ``max_lanes=``) completed their
+one-release deprecation grace and are gone.
 """
 from __future__ import annotations
 
-import warnings
 from typing import Dict, Iterable, List, Optional, Sequence, Tuple, Union
 
 from repro.core import lern as lern_mod
@@ -35,26 +35,6 @@ def _record(point: Point, axes: Dict, res: sim.SimResult) -> Dict:
     rec["point"] = point
     rec["result"] = res
     return rec
-
-
-def _coerce_plan(plan: Optional[ExecPlan], jobs, cache, max_lanes) -> ExecPlan:
-    """One ExecPlan out of either the new ``plan=`` or the legacy kwargs
-    (deprecated, one-release grace)."""
-    legacy = {k: v for k, v in
-              (("jobs", jobs), ("cache", cache), ("max_lanes", max_lanes))
-              if v is not None}
-    if plan is not None:
-        if legacy:
-            raise ValueError(
-                f"pass either plan= or legacy kwargs {sorted(legacy)}, "
-                "not both")
-        return plan
-    if legacy:
-        warnings.warn(
-            f"exp.run/run_points kwargs {sorted(legacy)} are deprecated; "
-            "use plan=exp.ExecPlan(...)", DeprecationWarning, stacklevel=3)
-        return ExecPlan(**legacy)
-    return ExecPlan()
 
 
 def _run_points_uncached(points: Sequence[Point], rp: ExecPlan
@@ -82,21 +62,21 @@ def _run_points_uncached(points: Sequence[Point], rp: ExecPlan
     return results
 
 
-def run_points(points: Sequence[Point], plan: Optional[ExecPlan] = None, *,
-               jobs: Optional[int] = None, cache: Optional[bool] = None,
-               max_lanes: Optional[int] = None) -> List[sim.SimResult]:
+def run_points(points: Sequence[Point], plan: Optional[ExecPlan] = None
+               ) -> List[sim.SimResult]:
     """Evaluate resolved points in order; the engine behind ``run``.
 
-    ``plan`` picks the engine (see :class:`ExecPlan`); the bare-kwarg
-    form is deprecated.  ``engine="bucketed"`` (and ``"auto"`` with
-    ``jobs <= 1``) batches geometry-compatible groups into single device
-    programs; other engines go through ``sweep.map_points``."""
-    rp = _coerce_plan(plan, jobs, cache, max_lanes).resolve()
+    ``plan`` picks the engine (see :class:`ExecPlan`).
+    ``engine="bucketed"`` (and ``"auto"`` with ``jobs <= 1``) batches
+    geometry-compatible groups into single device programs; other
+    engines go through ``sweep.map_points``."""
+    rp = (plan or ExecPlan()).resolve()
     sps = [p.sweep_point() for p in points]
     with lern_mod.fit_engine_override(rp.fit_engine):
         if rp.engine == "bucketed" or (rp.engine == "auto" and rp.jobs <= 1):
             return sweep.run_bucketed(sps, max_lanes=rp.max_lanes,
-                                      devices=rp.devices, cache=rp.cache)
+                                      devices=rp.devices, cache=rp.cache,
+                                      pipeline=rp.pipeline)
         if rp.cache:
             return sweep.map_points(sps, jobs=rp.jobs, max_lanes=rp.max_lanes,
                                     engine=rp.engine,
@@ -104,14 +84,11 @@ def run_points(points: Sequence[Point], plan: Optional[ExecPlan] = None, *,
         return _run_points_uncached(points, rp)
 
 
-def run(spec: SpecLike, plan: Optional[ExecPlan] = None, *,
-        jobs: Optional[int] = None, cache: Optional[bool] = None,
-        max_lanes: Optional[int] = None) -> ResultSet:
+def run(spec: SpecLike, plan: Optional[ExecPlan] = None) -> ResultSet:
     """Expand ``spec`` (one ExperimentSpec or several, concatenated) and
     evaluate every point under ``plan``; returns a columnar ResultSet
     whose key columns are the spec's axes and whose ``result`` column
     holds the full SimResults."""
-    plan = _coerce_plan(plan, jobs, cache, max_lanes)  # warn once, here
     specs = [spec] if isinstance(spec, ExperimentSpec) else list(spec)
     expanded: List[Tuple[Point, Dict]] = []
     keys: List[str] = []

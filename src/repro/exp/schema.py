@@ -77,17 +77,21 @@ def validate_sweep(doc: Dict) -> List[str]:
 
 
 _BENCH_PREFIX = "hydra-bench-"
-# bench-sim v2: entries are tagged by kind — "engine" rows carry the
+# bench-sim v3: entries are tagged by kind — "engine" rows carry the
 # host-vs-fused epochs/sec pair, "sweep" rows the map-vs-bucketed
 # points/sec pair (the whole-sweep device program the bucketed tentpole
-# is gated on); v1 writers (untagged, no sweep rows) are rejected so the
-# artifact gate stays honest
-_BENCH_SIM_SCHEMA = "hydra-bench-sim/v2"
+# is gated on) plus the bucketed leg's per-phase split (stage /
+# dispatch / device / write-back seconds), so a pps regression is
+# attributable to one phase; v2 writers (no phase split) are rejected,
+# as v2 rejected untagged v1
+_BENCH_SIM_SCHEMA = "hydra-bench-sim/v3"
 _BENCH_SIM_NUMERIC = ("lanes", "epochs", "host_s", "fused_s",
                       "host_eps", "fused_eps", "speedup")
 _BENCH_SIM_SWEEP_NUMERIC = ("lanes", "points", "groups", "epochs",
                             "map_s", "bucketed_s", "map_pps",
-                            "bucketed_pps", "pps_speedup")
+                            "bucketed_pps", "pps_speedup",
+                            "stage_s", "dispatch_s", "device_s",
+                            "writeback_s")
 # bench-lern v3: every entry carries the bucketed/segmented fit pair (the
 # engine comparison the segmented k-means tentpole is gated on); v2-only
 # writers (no pair) are rejected so the artifact gate stays honest
@@ -112,8 +116,8 @@ def validate_bench(doc: Dict) -> List[str]:
                     "entries lack the bucketed/segmented fit pair)")
     if schema.startswith("hydra-bench-sim") and schema != _BENCH_SIM_SCHEMA:
         errs.append(f"schema: bench-sim writers must emit "
-                    f"{_BENCH_SIM_SCHEMA!r} (got {schema!r}; v1 entries "
-                    "lack the sweep-level points/sec rows)")
+                    f"{_BENCH_SIM_SCHEMA!r} (got {schema!r}; v2 entries "
+                    "lack the per-phase timing split on sweep rows)")
     entries = doc.get("entries")
     if not isinstance(entries, list) or not entries:
         return errs + ["entries: expected a non-empty list"]
@@ -150,7 +154,7 @@ def validate_bench(doc: Dict) -> List[str]:
                 if not isinstance(e.get(k), numbers.Real):
                     errs.append(f"{where}.{k}: expected a number")
     if is_sim and not n_sweep:
-        errs.append("entries: bench-sim/v2 requires at least one "
+        errs.append("entries: bench-sim/v3 requires at least one "
                     "kind='sweep' points/sec entry")
     return errs
 

@@ -233,16 +233,15 @@ def test_execplan_env_defaults_and_validation(monkeypatch):
         exp.ExecPlan().engine = "host"
 
 
-def test_execplan_legacy_kwargs_deprecated(tmp_path, monkeypatch):
-    monkeypatch.setattr(sim, "CACHE_DIR", str(tmp_path))
+def test_execplan_legacy_kwargs_removed():
+    # the one-release deprecation grace for the pre-ExecPlan bare kwargs
+    # is over: execution knobs live solely on ExecPlan now
     spec = exp.ExperimentSpec.grid(config="config1", mix="moti1",
                                    policy=["fifo-nb"], params=TINY)
-    with pytest.warns(DeprecationWarning, match="ExecPlan"):
-        legacy = exp.run(spec, jobs=1).one()["result"]
-    planned = exp.run(spec, plan=exp.ExecPlan(jobs=1)).one()["result"]
-    assert legacy.summary() == planned.summary()
-    with pytest.raises(ValueError, match="not both"):
-        exp.run(spec, plan=exp.ExecPlan(), jobs=2)
+    with pytest.raises(TypeError):
+        exp.run(spec, jobs=1)
+    with pytest.raises(TypeError):
+        exp.run_points([], cache=False)
 
 
 # ---------------------------------------------------------------------------
