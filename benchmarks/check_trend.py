@@ -2,11 +2,12 @@
 artifacts against their committed baselines.
 
 CI's smoke-sweep job regenerates ``bench_sim.json`` / ``bench_lern.json``
-at smoke scale and runs::
+(and the fig17 DRAM-scheduler sweep artifact) at smoke scale and runs::
 
     python -m benchmarks.check_trend \
         bench_sim.json=bench_sim.smoke.json \
-        bench_lern.json=bench_lern.smoke.json
+        bench_lern.json=bench_lern.smoke.json \
+        sweep_fig17.json=sweep_fig17.smoke.json
 
 Each ``current=baseline`` pair is matched entry-by-entry on identifying
 keys (kind/config/mix/lanes/epochs for bench-sim; config/accesses for
@@ -37,20 +38,37 @@ import numpy as np
 # entries split by kind — "engine" rows carry ``speedup`` (fused vs
 # host), "sweep" rows carry ``pps_speedup`` (bucketed vs map_points);
 # a metric absent from an entry is simply skipped for it, so one
-# profile gates both kinds
+# profile gates both kinds.  hydra-sweep/v3 figure artifacts gate the
+# per-row derived metrics (rows are normalized into entries keyed by
+# the figure row name).
 _PROFILES = {
     "hydra-bench-sim": (("kind", "config", "mix", "lanes", "epochs"),
                         ("speedup", "pps_speedup")),
     "hydra-bench-lern": (("config", "accesses"),
                          ("speedup", "seg_speedup")),
+    "hydra-sweep": (("name",), ("speedup",)),
 }
 # absolute geomean floors, checked against the CURRENT run alone (no
 # baseline ratio): the flat/donated/staged bucketed engine must win
 # outright on one device — a trend ratio can't see a regression that
-# the baseline itself already carried
+# the baseline itself already carried.  The fig17 sched summary's
+# ``sched_dmr_delta`` floor asserts FR-FCFS and SQUASH produce a real
+# deadline-miss-rate separation on at least one (policy, mix) point — a
+# change that collapses the two schedulers into identical timing fails
+# here even if every trend ratio holds.
 _ABS_FLOORS = {
     "hydra-bench-sim": {"pps_speedup": 1.0},
+    "hydra-sweep": {"sched_dmr_delta": 1e-3},
 }
+
+
+def _entries(doc: Dict) -> List[Dict]:
+    """Comparable flat entries: bench docs carry them directly; sweep docs
+    are normalized from their figure rows (name + derived metrics)."""
+    if "entries" in doc:
+        return list(doc.get("entries") or [])
+    return [{"name": r.get("name"), **(r.get("derived") or {})}
+            for r in doc.get("rows", []) if isinstance(r, dict)]
 
 
 def _profile(doc: Dict) -> Tuple[Tuple[str, ...], Tuple[str, ...], Dict]:
@@ -66,10 +84,10 @@ def compare(current: Dict, baseline: Dict, tolerance: float
     """Human-readable failure list (empty == within tolerance)."""
     keys, metrics, abs_floors = _profile(current)
     base_by_key = {tuple(e.get(k) for k in keys): e
-                   for e in baseline.get("entries", [])}
+                   for e in _entries(baseline)}
     ratios: Dict[str, List[float]] = {m: [] for m in metrics}
     matched = 0
-    for e in current.get("entries", []):
+    for e in _entries(current):
         b = base_by_key.get(tuple(e.get(k) for k in keys))
         if b is None:
             continue
@@ -94,7 +112,7 @@ def compare(current: Dict, baseline: Dict, tolerance: float
             errs.append(f"{m} geomean ratio {geo:.3f} < {floor:.2f} "
                         f"({len(rs)} matched entries)")
     for m, abs_floor in abs_floors.items():
-        vals = [e[m] for e in current.get("entries", [])
+        vals = [e[m] for e in _entries(current)
                 if isinstance(e.get(m), (int, float))]
         if not vals:
             errs.append(f"{m}: absolute floor {abs_floor:.2f} set but no "

@@ -8,7 +8,7 @@ ResultSet queries.  There are no mutable module globals anymore: the old
 ``set_smoke()`` in-place ``BASE_PARAMS`` mutation became the registered
 ``smoke`` params preset (``exp.PARAMS``), and the ``SWEEP_ROWS``
 accumulator became the row lists the figure modules return (run.py
-assembles them into the sweep.json v2 artifact).
+assembles them into the sweep.json v3 artifact).
 """
 from __future__ import annotations
 
@@ -87,10 +87,10 @@ def drain_rows() -> List[Dict]:
 
 def emit(name: str, t0: float, derived: Dict[str, float],
          point=None) -> Dict:
-    """'name,us_per_call,derived' CSV row (harness contract) -> v2 row.
+    """'name,us_per_call,derived' CSV row (harness contract) -> v3 row.
 
     ``point`` embeds the producing cell's spec (a ``exp.Point``, a spec
-    dict, or None for analysis-only rows) so the sweep.json v2 artifact
+    dict, or None for analysis-only rows) so the sweep.json v3 artifact
     row stands on its own."""
     us = (time.time() - t0) * 1e6
     dv = ";".join(f"{k}={v:.4g}" for k, v in derived.items())

@@ -1,18 +1,77 @@
-"""Fig. 17 — DDR3 / DDR4 / LPDDR5 memory models (+ HyDRA-v1 tuning)."""
+"""Fig. 17 — DRAM backends (+ HyDRA-v1 tuning).
+
+Two sweeps over the same policy set:
+
+* the classic fluid bars — DDR3-1600 / DDR4-2400 / LPDDR5-5500
+  epoch-granularity queueing models;
+* the scheduled-backend comparison — one DDR4-2400 part under its fluid
+  envelope and under both bank/rank arbitrations (FR-FCFS vs SQUASH),
+  run at a tight deadline (``deadline_factor=1.0``) so scheduler-induced
+  deadline misses are visible even at smoke scale.  Per-(policy, mix)
+  FR-FCFS-vs-SQUASH deltas land in ``fig17/sched_delta/*`` rows and the
+  ``fig17/sched_summary`` row carries the max-|delta| pair
+  (``sched_dmr_delta`` / ``sched_ipc_delta``) that CI's trend gate
+  floors — a refactor that collapses the two schedulers into the same
+  timing fails the gate.
+"""
+import time
+
 from repro import exp
-from .common import Suite, policy_bar_rows
+from repro.core.dram import DDR4_2400, DDR4_2400_FRFCFS, DDR4_2400_SQUASH
+
+from .common import Suite, emit, policy_bar_rows
 
 POLICIES = ("fifo-nb", "arp-cs-as-d", "hydra", "hydra-v1")
+FLUID_DRAMS = ("DDR3_1600_8x8", "DDR4_2400_8x8", "LPDDR5_5500_1x16_BG_BL16")
+SCHED_COMPARE = (DDR4_2400.name, DDR4_2400_FRFCFS.name,
+                 DDR4_2400_SQUASH.name)
+SCHED_DEADLINE_FACTOR = 1.0
 
 
 def run(suite: Suite):
+    rows = []
+
     spec = exp.ExperimentSpec.grid(config="config1", mix=suite.mixes,
                                    policy=list(POLICIES),
                                    params=suite.params,
-                                   dram=exp.DRAM.names())
+                                   dram=list(FLUID_DRAMS))
     rs = exp.run(spec, plan=suite.plan)
-    rows = []
-    for dname in exp.DRAM.names():
+    for dname in FLUID_DRAMS:
         rows.extend(policy_bar_rows(rs, f"fig17/{dname}", POLICIES,
                                     config="config1", dram=dname))
+
+    sched = exp.ExperimentSpec.grid(config="config1", mix=suite.mixes,
+                                    policy=list(POLICIES),
+                                    params=suite.params,
+                                    dram=list(SCHED_COMPARE),
+                                    deadline_factor=SCHED_DEADLINE_FACTOR)
+    rs2 = exp.run(sched, plan=suite.plan)
+    for dname in SCHED_COMPARE:
+        rows.extend(policy_bar_rows(rs2, f"fig17/sched/{dname}", POLICIES,
+                                    config="config1", dram=dname))
+
+    # FR-FCFS vs SQUASH, same part, same deadline: per-(policy, mix)
+    # deltas plus the max-|delta| summary pair the CI trend gate floors.
+    dmr_deltas, ipc_deltas = [], []
+    for pol in POLICIES:
+        t0 = time.time()
+        per_mix_dmr, per_mix_ipc = [], []
+        for mix in suite.mixes:
+            fr = rs2.filter(policy=pol, mix=mix,
+                            dram=DDR4_2400_FRFCFS.name).one()
+            sq = rs2.filter(policy=pol, mix=mix,
+                            dram=DDR4_2400_SQUASH.name).one()
+            per_mix_dmr.append(sq["dmr"] - fr["dmr"])
+            per_mix_ipc.append(sq["ipc"] - fr["ipc"])
+        dmr_deltas.extend(per_mix_dmr)
+        ipc_deltas.extend(per_mix_ipc)
+        rows.append(emit(
+            f"fig17/sched_delta/{pol}", t0,
+            {"dmr_delta": sum(per_mix_dmr) / len(per_mix_dmr),
+             "ipc_delta": sum(per_mix_ipc) / len(per_mix_ipc)}))
+    t0 = time.time()
+    rows.append(emit(
+        "fig17/sched_summary", t0,
+        {"sched_dmr_delta": max(abs(d) for d in dmr_deltas),
+         "sched_ipc_delta": max(abs(d) for d in ipc_deltas)}))
     return rows

@@ -10,8 +10,9 @@ registered params preset + mix/config footprint into a frozen
 ``common.Suite`` that every figure module receives (no module-global
 mutation), each module expresses its sweep as an ``ExperimentSpec`` run
 under the suite's ``exp.ExecPlan`` (``suite.plan``), and the returned
-rows are assembled into the machine-readable **sweep.json v2** artifact
-(``hydra-sweep/v2``: every row embeds its point spec; validate with
+rows are assembled into the machine-readable **sweep.json v3** artifact
+(``hydra-sweep/v3``: every row embeds its point spec, including the
+``dram_kind`` fluid/scheduled tag; validate with
 ``python -m repro.exp.schema sweep.json``).  Results are disk-cached
 (.cache/sim); ``--jobs N`` fans uncached sweep points over N worker
 processes, ``--engine`` pins the sweep engine (auto routes single-job
@@ -21,7 +22,7 @@ sweeps through the bucketed whole-sweep device program).
 training (the ``lern_train/*`` rows) and writes ``bench_lern.json``
 (schema hydra-bench-lern/v3) — the perf-trajectory record for the
 device-resident training pipeline; ``bench_sim`` does the same for the
-main simulation path (``bench_sim.json``, schema hydra-bench-sim/v2:
+main simulation path (``bench_sim.json``, schema hydra-bench-sim/v3:
 host ``drive_lane`` vs the fused epoch engine, plus the sweep-level
 map-vs-bucketed points/sec entries).
 """

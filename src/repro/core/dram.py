@@ -1,14 +1,52 @@
 """Off-chip memory timing models (paper Table II + §VI-H3).
 
-Fluid (epoch-granularity) model: each model has an unloaded line latency and
-a peak line service rate (lines / system cycle @ 2 GHz); queueing delay under
-utilization rho follows an M/D/1-shaped law, capped for stability.  The
-LPDDR5 model reflects its 32B bursts (2 accesses / 64B line -> lower
+Two families share one registry (``MODELS``):
+
+Fluid (epoch-granularity) models: each model has an unloaded line latency
+and a peak line service rate (lines / system cycle @ 2 GHz); queueing delay
+under utilization rho follows an M/D/1-shaped law, capped for stability.
+The LPDDR5 model reflects its 32B bursts (2 accesses / 64B line -> lower
 effective line rate, higher effective latency) per §VI-H3.
+
+Scheduled models (:class:`SchedDramModel`) add a bank/rank timing backend
+(row-buffer hit/miss/conflict costs, per-bank queue backlog, rank bus
+contention, FR-FCFS vs SQUASH-style deadline-urgency arbitration) evaluated
+by ``core/dramsched.py`` — fixed-shape int64 state that advances inside the
+fused epoch scan.  The fluid fields double as the fallback rate/latency
+envelope (caps, LLC-side utilization) so a scheduled model drops into every
+fluid call site unchanged.
 """
 from __future__ import annotations
 
 import dataclasses
+import os
+
+# Fluid-model stability constants — the single source for both the host
+# implementation below and the fused engine's SharedConsts staging
+# (fused._queue_delay).  Two different floors appear on purpose:
+#
+# * QUEUE_TRAFFIC_FLOOR guards the *service capacity* denominator
+#   ``rate * window`` against a zero-length window (rho would be 0/0);
+#   any positive traffic over a zero window then saturates to the rho cap.
+# * QUEUE_STAB_FLOOR guards the *stability* denominator ``2 * (1 - rho)``.
+#   With rho capped at QUEUE_RHO_CAP the denominator is at least
+#   ``2 * (1 - 0.999) = 2e-3 > QUEUE_STAB_FLOOR`` — the floor is therefore
+#   non-binding and exists only as belt-and-braces against float error in
+#   ``1 - rho``; tests/test_dram.py pins this relation.
+QUEUE_RHO_CAP = 0.999
+QUEUE_STAB_FLOOR = 1e-3
+QUEUE_TRAFFIC_FLOOR = 1e-9
+QUEUE_DELAY_CAP_X = 25.0   # delay cap, in multiples of unloaded latency
+
+
+def queue_delay_consts(model: "DramModel", window_cycles: float):
+    """``(denominator, delay_cap)`` for the fluid queueing law over a fixed
+    window: the floored service capacity ``max(rate * window, floor)`` and
+    the absolute delay cap ``25 x latency``.  ``DramModel.queue_delay`` and
+    the fused engine's ``SharedConsts`` both derive from this helper so the
+    two implementations cannot drift."""
+    return (max(model.rate * window_cycles, QUEUE_TRAFFIC_FLOOR),
+            QUEUE_DELAY_CAP_X * model.latency_cycles)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -25,13 +63,50 @@ class DramModel:
     def queue_delay(self, traffic_lines: float, window_cycles: float) -> float:
         """Extra queueing latency per access given ``traffic_lines`` served
         in ``window_cycles`` (M/D/1 shape, capped at 25x unloaded)."""
-        cap = self.rate * window_cycles
-        rho = min(traffic_lines / max(cap, 1e-9), 0.999)
-        w = (rho / max(2.0 * (1.0 - rho), 1e-3)) / self.rate
-        return min(w, 25.0 * self.latency_cycles)
+        denom, delay_cap = queue_delay_consts(self, window_cycles)
+        rho = min(traffic_lines / denom, QUEUE_RHO_CAP)
+        w = (rho / max(2.0 * (1.0 - rho), QUEUE_STAB_FLOOR)) / self.rate
+        return min(w, delay_cap)
 
     def utilization(self, traffic_lines: float, window_cycles: float) -> float:
-        return min(traffic_lines / max(self.rate * window_cycles, 1e-9), 1.0)
+        return min(traffic_lines / max(self.rate * window_cycles,
+                                       QUEUE_TRAFFIC_FLOOR), 1.0)
+
+
+@dataclasses.dataclass(frozen=True)
+class SchedDramModel(DramModel):
+    """Bank/rank scheduled timing model (FR-FCFS or SQUASH-style).
+
+    Geometry (``banks``/``ranks``/``samples``/``col_bits``) is static —
+    baked into the fused program shape — while the cycle costs and the
+    ``scheduler`` kind ride as data so e.g. FR-FCFS and SQUASH variants of
+    one part share a compiled program.  Cycle costs are integers in system
+    cycles; see docs/dram_model.md for the full state layout and update
+    rule (core/dramsched.py holds the numpy/jnp twin implementation).
+    """
+    scheduler: str = "frfcfs"   # "frfcfs" | "squash"
+    banks: int = 16             # total banks (power of two)
+    ranks: int = 2              # banks are split evenly across ranks
+    samples: int = 32           # address samples per epoch (fixed shape)
+    col_bits: int = 2           # line-address bits below the bank field
+    t_cas: int = 12             # row-hit access (CAS) cost, cycles
+    t_rcd: int = 12             # activate (RAS-to-CAS) cost, cycles
+    t_rp: int = 12              # precharge cost on a row conflict, cycles
+    t_bus: int = 4              # per-line rank bus occupancy, cycles
+    reset_period: int = 8       # epochs between row-table resets
+    queue_cap: int = 4096       # per-bank backlog clamp, cycles
+
+    def __post_init__(self):
+        assert self.banks > 0 and self.banks & (self.banks - 1) == 0
+        assert self.ranks > 0 and self.banks % self.ranks == 0
+        assert self.scheduler in ("frfcfs", "squash"), self.scheduler
+
+
+def dram_kind(model: DramModel) -> str:
+    """Artifact tag for the model family: ``fluid`` or ``sched:<policy>``."""
+    if isinstance(model, SchedDramModel):
+        return f"sched:{model.scheduler}"
+    return "fluid"
 
 
 # 2 GHz system clock.  DDR3-1600 single channel 64-bit: 12.8 GB/s peak
@@ -44,4 +119,39 @@ DDR4_2400 = DramModel("DDR4_2400_8x8", latency_cycles=90.0,
 LPDDR5_5500 = DramModel("LPDDR5_5500_1x16_BG_BL16", latency_cycles=130.0,
                         peak_lines_per_cycle=0.086, efficiency=0.80)
 
-MODELS = {m.name: m for m in (DDR3_1600, DDR4_2400, LPDDR5_5500)}
+# Scheduled variants: same fluid envelope as the base part (so caps and
+# LLC-side utilization match), plus bank/rank timing.  DDR3 cycle costs in
+# 2 GHz system cycles are ~1.25x the DDR4 ones (slower device clock); its
+# 8-bank single-rank geometry exercises the wait-cap-saturated regime,
+# while the 32-bank dual-rank DDR4 parts keep per-bank waits under the
+# fluid cap so FR-FCFS and SQUASH arbitration actually separate (fig. 17).
+DDR3_1600_SQUASH = SchedDramModel(
+    "DDR3_1600_8b1r_squash", latency_cycles=100.0,
+    peak_lines_per_cycle=0.100, efficiency=0.70, scheduler="squash",
+    banks=8, ranks=1, t_cas=15, t_rcd=15, t_rp=15, t_bus=5)
+DDR4_2400_FRFCFS = SchedDramModel(
+    "DDR4_2400_32b2r_frfcfs", latency_cycles=90.0,
+    peak_lines_per_cycle=0.150, efficiency=0.70, scheduler="frfcfs",
+    banks=32, ranks=2)
+DDR4_2400_SQUASH = SchedDramModel(
+    "DDR4_2400_32b2r_squash", latency_cycles=90.0,
+    peak_lines_per_cycle=0.150, efficiency=0.70, scheduler="squash",
+    banks=32, ranks=2)
+
+MODELS = {m.name: m for m in (DDR3_1600, DDR4_2400, LPDDR5_5500,
+                              DDR3_1600_SQUASH, DDR4_2400_FRFCFS,
+                              DDR4_2400_SQUASH)}
+
+
+def default_model() -> DramModel:
+    """Default DRAM model for call sites that don't pin one.
+
+    ``REPRO_DRAM`` overrides it (CI engine-matrix leg): empty/``fluid`` ->
+    DDR3-1600 fluid (historical default), ``sched`` -> the DDR3-1600 SQUASH
+    backend, anything else is looked up in ``MODELS`` by name."""
+    name = os.environ.get("REPRO_DRAM", "").strip()
+    if name in ("", "fluid"):
+        return DDR3_1600
+    if name == "sched":
+        return DDR3_1600_SQUASH
+    return MODELS[name]

@@ -57,6 +57,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.experimental import enable_x64
 
+from . import dram as dram_mod
+from . import dramsched
 from . import llc as llc_mod
 from .sim import PF_WHEN_OFF, WHEN_BITS, Lane
 
@@ -115,6 +117,9 @@ class FusedDims:
     max_rounds: int
     sparse_cap: int                 # 0 = rounds always dense
     record_occ: bool                # emit per-epoch occupancy counters
+    # scheduled-DRAM geometry (None = fluid model; timing rides as data
+    # in SharedConsts so e.g. FR-FCFS and SQUASH share one program)
+    sched: Optional[dramsched.SchedDims] = None
 
 
 class SharedConsts(NamedTuple):
@@ -149,6 +154,16 @@ class SharedConsts(NamedTuple):
     w_cap_dram_prio: jnp.ndarray   # f64 [] (w_cap * dram_lat) * prio_cap
     w_dram25: jnp.ndarray    # f64 [] 25 * dram_lat
     mlp_et: jnp.ndarray      # f64 [] mlp_accel * et
+    # scheduled-DRAM data (i64 scalars; zeros when dims.sched is None —
+    # the sched branch is static, so they are never read then)
+    sd_tcas: jnp.ndarray     # i64 [] row-hit (CAS) cost
+    sd_trcd: jnp.ndarray     # i64 [] activate cost
+    sd_trp: jnp.ndarray      # i64 [] precharge cost
+    sd_tbus: jnp.ndarray     # i64 [] per-line rank bus occupancy
+    sd_reset: jnp.ndarray    # i64 [] row-table reset period (epochs)
+    sd_qcap: jnp.ndarray     # i64 [] per-bank backlog clamp (cycles)
+    sd_kind: jnp.ndarray     # i64 [] 0 = frfcfs, 1 = squash
+    sd_et: jnp.ndarray       # i64 [] epoch_cycles as an integer
     zero: jnp.ndarray        # f64 [] runtime 0.0 — the FMA fence (_mulb)
 
 
@@ -203,6 +218,11 @@ class FusedCarry(NamedTuple):
     total_llc: jnp.ndarray    # f64 [L]
     total_dram: jnp.ndarray   # f64 [L]
     overflow: jnp.ndarray     # bool [L] sticky round-capacity flag
+    # scheduled-DRAM bank state ([L, 0] / zeros when dims.sched is None,
+    # keeping the carry tree uniform for stacking and donation)
+    bank_row: jnp.ndarray     # i64 [L, NB] open row per bank, -1 = closed
+    bank_queue: jnp.ndarray   # i64 [L, NB] backlog cycles per bank
+    bank_rr: jnp.ndarray      # i64 [L] core-miss round-robin rotor
 
 
 class StepOut(NamedTuple):
@@ -279,9 +299,14 @@ def _mg1(rho, s_llc, zero):
 
 
 def _queue_delay(sh: SharedConsts, traffic):
+    # constants single-sourced from dram.py (dram.queue_delay_consts
+    # stages dram_denom / w_dram25; the floors are the named module
+    # constants) so host and fused fluid models cannot drift
     z = sh.zero
-    rho = jnp.minimum(_div(traffic, sh.dram_denom, z), 0.999)
-    w = _div(_div(rho, jnp.maximum(2.0 * (1.0 - rho), 1e-3), z),
+    rho = jnp.minimum(_div(traffic, sh.dram_denom, z),
+                      dram_mod.QUEUE_RHO_CAP)
+    w = _div(_div(rho, jnp.maximum(2.0 * (1.0 - rho),
+                                   dram_mod.QUEUE_STAB_FLOOR), z),
              sh.dram_rate, z)
     return jnp.minimum(w, sh.w_dram25)
 
@@ -566,6 +591,7 @@ class _Begin(NamedTuple):
     inv_perm: jnp.ndarray     # [S] set -> column
     n_rounds: jnp.ndarray
     ovf: jnp.ndarray
+    samp: jnp.ndarray         # i64 [NS] sched-DRAM window samples ([0]=off)
 
 
 # ---------------------------------------------------------------------------
@@ -681,12 +707,25 @@ def _begin_lane(dims: FusedDims, sh: SharedConsts, stop_epoch, lc, cy,
     # frozen lanes contribute no rounds to the batch loop
     n_rounds = jnp.where(step_active, n_rounds, jnp.int32(0))
     counts = jnp.where(step_active, counts, jnp.int32(0))
+
+    # ---- scheduled-DRAM window samples --------------------------------
+    # strided line addresses from this epoch's accel window, same integer
+    # indices as dramsched.sample_window on the host (n_a = 0 degenerates
+    # to ns copies of line[pos], which carries zero weight in the model)
+    if dims.sched is not None:
+        ns = dims.sched.n_samples
+        si = jnp.arange(ns, dtype=jnp.int64)
+        s_idx = cy.pos + (si * n_a) // jnp.int64(ns)
+        samp = (jnp.take(sh.line, s_idx) if gid is None
+                else sh.line[gid, s_idx]).astype(jnp.int64)
+    else:
+        samp = jnp.zeros(0, jnp.int64)
     return _Begin(step_active=step_active, arrived=arrived,
                   accel_prio=accel_prio, n_a=n_a, n_c=n_c, shed=shed,
                   ri_th=ri_th, rc_th=rc_th, special=special,
                   req_out=req_out, line_m=line_m, meta_m=meta_m,
                   counts=counts, perm=perm, inv_perm=inv_perm,
-                  n_rounds=n_rounds, ovf=ovf)
+                  n_rounds=n_rounds, ovf=ovf, samp=samp)
 
 
 def _finish_lane(dims: FusedDims, sh: SharedConsts, lc, cy, bg: _Begin,
@@ -713,24 +752,51 @@ def _finish_lane(dims: FusedDims, sh: SharedConsts, lc, cy, bg: _Begin,
     rho_llc = _div(llc_units, sh.llc_capacity, sh.zero)
     rho_a_llc = _div(ah + am, sh.llc_capacity, sh.zero)
     dram_traffic = cm + am + pf_fills
-    w_dram_fifo = jnp.minimum(_queue_delay(sh, dram_traffic), sh.w_cap_dram)
-    rho_a_dram = jnp.minimum(_div(am, sh.dram_denom, sh.zero), 1.0)
-    # priority-arbitration branch
+    # priority-arbitration branch (LLC-side waits stay fluid under the
+    # scheduled backend — only the DRAM waits come from the bank model)
     w_llc_a_p = jnp.minimum(_mg1(rho_a_llc, sh.s_llc, sh.zero), sh.w_cap_s)
     prio = jnp.minimum(_div(1.0, jnp.maximum(1.0 - rho_a_llc, 1e-3),
                             sh.zero), sh.prio_cap)
     w_llc_c_p = jnp.minimum(_mg1(rho_llc, sh.s_llc, sh.zero) * prio,
                             sh.w_cap_s_prio)
-    w_dram_a_p = jnp.minimum(_queue_delay(sh, am), sh.w_cap_dram)
-    prio_d = jnp.minimum(_div(1.0, jnp.maximum(1.0 - rho_a_dram, 1e-3),
-                              sh.zero), sh.prio_cap)
-    w_dram_c_p = jnp.minimum(w_dram_fifo * prio_d, sh.w_cap_dram_prio)
     # FIFO branch
     w_fifo = jnp.minimum(_mg1(rho_llc, sh.s_llc, sh.zero), sh.w_cap_s)
     w_llc_a = jnp.where(accel_prio, w_llc_a_p, w_fifo)
     w_llc_c = jnp.where(accel_prio, w_llc_c_p, w_fifo)
-    w_dram_a = jnp.where(accel_prio, w_dram_a_p, w_dram_fifo)
-    w_dram_c = jnp.where(accel_prio, w_dram_c_p, w_dram_fifo)
+    if dims.sched is None:
+        w_dram_fifo = jnp.minimum(_queue_delay(sh, dram_traffic),
+                                  sh.w_cap_dram)
+        rho_a_dram = jnp.minimum(_div(am, sh.dram_denom, sh.zero), 1.0)
+        w_dram_a_p = jnp.minimum(_queue_delay(sh, am), sh.w_cap_dram)
+        prio_d = jnp.minimum(_div(1.0, jnp.maximum(1.0 - rho_a_dram, 1e-3),
+                                  sh.zero), sh.prio_cap)
+        w_dram_c_p = jnp.minimum(w_dram_fifo * prio_d, sh.w_cap_dram_prio)
+        w_dram_a = jnp.where(accel_prio, w_dram_a_p, w_dram_fifo)
+        w_dram_c = jnp.where(accel_prio, w_dram_c_p, w_dram_fifo)
+        bank_row2, bank_queue2 = cy.bank_row, cy.bank_queue
+        bank_rr2 = cy.bank_rr
+    else:
+        # SQUASH urgency: explicit accel priority, or a hydra lane whose
+        # achievable rate falls short of this epoch's requirement — both
+        # operands are the exact values the host computes (pre-update
+        # amal, the requirement just appended to history)
+        ma_hat_d = _div(sh.mlp_et, jnp.maximum(cy.amal, 1.0), sh.zero)
+        urgent = accel_prio | (lc.hydra & (ma_hat_d < bg.req_out))
+        timing = (sh.sd_tcas, sh.sd_trcd, sh.sd_trp, sh.sd_tbus,
+                  sh.sd_reset, sh.sd_qcap, sh.sd_kind)
+        (num_a, den_a, num_c, den_c, bank_row2, bank_queue2,
+         bank_rr2) = dramsched.epoch_compute(
+            jnp, dims.sched, timing, cy.bank_row, cy.bank_queue,
+            cy.bank_rr, bg.samp, am, cm, pf_fills, urgent, cy.epoch,
+            sh.sd_et)
+        # num/den are exact in f64 (far below 2^53) so the division is
+        # bitwise-identical to the host's float(num)/float(den)
+        w_dram_a = jnp.minimum(
+            _div(num_a.astype(f64), den_a.astype(f64), sh.zero),
+            sh.w_cap_dram)
+        w_dram_c = jnp.minimum(
+            _div(num_c.astype(f64), den_c.astype(f64), sh.zero),
+            sh.w_cap_dram_prio)
     miss_lat_c = sh.hit_lat + w_llc_c + sh.dram_lat + w_dram_c
     miss_lat_a = sh.hit_lat + w_llc_a + sh.dram_lat + w_dram_a
     pc = percore[:dims.n_cores].astype(jnp.int64)
@@ -779,7 +845,8 @@ def _finish_lane(dims: FusedDims, sh: SharedConsts, lc, cy, bg: _Begin,
         pf_prev=pf_fills.astype(jnp.float64), epoch=epoch,
         completions=completions, totals=totals,
         total_llc=total_llc, total_dram=total_dram,
-        overflow=cy.overflow)
+        overflow=cy.overflow,
+        bank_row=bank_row2, bank_queue=bank_queue2, bank_rr=bank_rr2)
     # per-epoch occupancy readback, fused (llc.occupancy's counts on the
     # epoch-end state; the write-back only consumes active steps)
     if dims.record_occ:
@@ -877,6 +944,7 @@ class _Staged:
             max(int(cores_mod.epoch_accesses(pr, pr.ipc0, et)), 0)
             for pr in profiles)
         num_sets = lane0.llc_cfg.num_sets
+        sched = dram if isinstance(dram, dram_mod.SchedDramModel) else None
         self.dims = FusedDims(
             cfg=lane0.llc_cfg, n_lanes=len(lanes), n_cores=n_cores,
             accel_cap=int(p.accel_epoch_cap), core_caps=core_caps,
@@ -884,7 +952,9 @@ class _Staged:
             n_inputs=int(p.n_inputs), k_epochs=int(k_epochs),
             max_rounds=int(max_rounds),
             sparse_cap=SPARSE_CAP if num_sets > SPARSE_CAP else 0,
-            record_occ=bool(p.record_occupancy))
+            record_occ=bool(p.record_occupancy),
+            sched=(dramsched.sched_dims(sched)
+                   if sched is not None else None))
 
         tr = lane0.tr
         m = tr.num_accesses
@@ -901,6 +971,11 @@ class _Staged:
         write[:m] = np.asarray(tr.write, bool)
         layer = np.zeros(m_pad, np.int32)
         layer[:m] = np.asarray(tr.layer, np.int32)
+        # fluid queueing constants from the single-source helper; the
+        # sched timing tuple rides as data (zeros when fluid — never read)
+        dram_denom, w_dram25 = dram_mod.queue_delay_consts(dram, et)
+        sd = (dramsched.timing_tuple(sched) if sched is not None
+              else (0, 0, 0, 0, 1, 0, 0))
         self.sh = SharedConsts(
             line=jnp.asarray(line),
             write=jnp.asarray(write),
@@ -929,12 +1004,17 @@ class _Staged:
             dram_rate=jnp.float64(dram.rate),
             dram_cap=jnp.float64(lane0.dram_cap),
             dram_cap01=jnp.float64(0.1 * lane0.dram_cap),
-            dram_denom=jnp.float64(max(dram.rate * et, 1e-9)),
+            dram_denom=jnp.float64(dram_denom),
             w_cap_dram=jnp.float64(p.w_cap * dram.latency_cycles),
             w_cap_dram_prio=jnp.float64(
                 p.w_cap * dram.latency_cycles * p.prio_cap),
-            w_dram25=jnp.float64(25.0 * dram.latency_cycles),
+            w_dram25=jnp.float64(w_dram25),
             mlp_et=jnp.float64(p.mlp_accel * et),
+            sd_tcas=jnp.int64(sd[0]), sd_trcd=jnp.int64(sd[1]),
+            sd_trp=jnp.int64(sd[2]), sd_tbus=jnp.int64(sd[3]),
+            sd_reset=jnp.int64(sd[4]), sd_qcap=jnp.int64(sd[5]),
+            sd_kind=jnp.int64(sd[6]),
+            sd_et=jnp.int64(int(p.epoch_cycles)),
             zero=jnp.float64(0.0))
 
         self._wmax = wmax
@@ -1049,6 +1129,14 @@ def _init_carry(lanes: List[Lane], states: llc_mod.LLCState,
     for i, lane in enumerate(lanes):
         comp[i, :len(lane.completions)] = lane.completions[:n_inputs]
     col = np.array
+    if lanes[0].dsched is not None:
+        b_row = np.stack([lane.dsched.row for lane in lanes])
+        b_queue = np.stack([lane.dsched.queue for lane in lanes])
+        b_rr = col([lane.dsched.rr for lane in lanes], np.int64)
+    else:
+        b_row = np.zeros((n_l, 0), np.int64)
+        b_queue = np.zeros((n_l, 0), np.int64)
+        b_rr = np.zeros(n_l, np.int64)
     return FusedCarry(
         st=states,
         active=jnp.asarray(col([lane.active for lane in lanes])),
@@ -1078,7 +1166,9 @@ def _init_carry(lanes: List[Lane], states: llc_mod.LLCState,
             for lane in lanes])),
         total_llc=jnp.asarray(col([lane.total_llc for lane in lanes])),
         total_dram=jnp.asarray(col([lane.total_dram for lane in lanes])),
-        overflow=jnp.zeros(n_l, bool))
+        overflow=jnp.zeros(n_l, bool),
+        bank_row=jnp.asarray(b_row), bank_queue=jnp.asarray(b_queue),
+        bank_rr=jnp.asarray(b_rr))
 
 
 # ---------------------------------------------------------------------------
@@ -1119,6 +1209,11 @@ def _write_back_carry(lanes: List[Lane], c, skip=None) -> None:
          lane.total_accel_acc) = (int(v) for v in c.totals[i])
         lane.total_llc = float(c.total_llc[i])
         lane.total_dram = float(c.total_dram[i])
+        if lane.dsched is not None:
+            # np.array: the host twin mutates these on a later resume
+            lane.dsched.row = np.array(c.bank_row[i], np.int64)
+            lane.dsched.queue = np.array(c.bank_queue[i], np.int64)
+            lane.dsched.rr = int(c.bank_rr[i])
 
 
 def _write_back_steps(lanes: List[Lane], y: StepOut) -> None:
@@ -1287,10 +1382,12 @@ def bucket_key(lanes: List[Lane]) -> Tuple:
     core_caps = tuple(
         max(int(cores_mod.epoch_accesses(pr, pr.ipc0, lane0.et)), 0)
         for pr in lane0.profiles)
+    sched = (dramsched.sched_dims(lane0.dram)
+             if isinstance(lane0.dram, dram_mod.SchedDramModel) else None)
     return (llc_mod.geometry_key(lane0.llc_cfg), len(lanes),
             lane0.n_cores, core_caps, int(lane0.p.accel_epoch_cap),
             any(lane.policy.dpcp for lane in lanes),
-            int(lane0.p.n_inputs), bool(lane0.p.record_occupancy))
+            int(lane0.p.n_inputs), bool(lane0.p.record_occupancy), sched)
 
 
 # SharedConsts leaves that keep their leading group axis in the flat

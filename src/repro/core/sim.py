@@ -31,7 +31,8 @@ from . import cores as cores_mod
 from . import llc as llc_mod
 from . import lrpt as lrpt_mod
 from .apm import APMState, bypass_mask
-from .dram import DDR3_1600, DramModel
+from . import dramsched
+from .dram import DDR3_1600, DramModel, SchedDramModel
 from . import lern as lern_mod
 from .lern import LernModel, train_family_batched, train_model_batched
 from .llc import (A_HINT, A_NONE, A_RAND, A_SHIP, HW_SCALE, LLCConfig,
@@ -472,6 +473,11 @@ class Lane:
         self.llc_capacity = p.llc_rate * self.et
         self.s_llc = 1.0 / p.llc_rate
         self.dram_cap = dram.rate * self.et
+        # scheduled DRAM backend: per-lane bank state (host twin of the
+        # fused carry's bank-state block; core/dramsched.py)
+        self.dsched = (dramsched.host_init(dram)
+                       if isinstance(dram, SchedDramModel) else None)
+        self._et_i = int(p.epoch_cycles)
         self.cm_prev = 0.0
         self.pf_prev = 0.0
         # per-epoch scratch carried from begin_epoch to finish_epoch
@@ -655,8 +661,6 @@ class Lane:
         rho_a_llc = (ah + am) / self.llc_capacity
         dram_traffic = cm + am + st["prefetch_fills"]
         w_cap_dram = p.w_cap * dram.latency_cycles
-        w_dram_fifo = min(dram.queue_delay(dram_traffic, et), w_cap_dram)
-        rho_a_dram = dram.utilization(am, et)
         s_llc = self.s_llc
         if accel_prio:
             # accel requests (and their fills) are issued first by the LLC
@@ -665,13 +669,38 @@ class Lane:
             prio = min(1.0 / max(1.0 - rho_a_llc, 1e-3), p.prio_cap)
             w_llc_c = min(_mg1_delay(rho_llc, s_llc) * prio,
                           p.w_cap * s_llc * p.prio_cap)
-            w_dram_a = min(dram.queue_delay(am, et), w_cap_dram)
-            prio_d = min(1.0 / max(1.0 - rho_a_dram, 1e-3), p.prio_cap)
-            w_dram_c = min(w_dram_fifo * prio_d, w_cap_dram * p.prio_cap)
         else:
             w_llc_a = w_llc_c = min(_mg1_delay(rho_llc, s_llc),
                                     p.w_cap * s_llc)
-            w_dram_a = w_dram_c = w_dram_fifo
+        if self.dsched is None:
+            # fluid M/G/1 DRAM waits (LLC-side waits above are fluid in
+            # both backends)
+            w_dram_fifo = min(dram.queue_delay(dram_traffic, et),
+                              w_cap_dram)
+            if accel_prio:
+                rho_a_dram = dram.utilization(am, et)
+                w_dram_a = min(dram.queue_delay(am, et), w_cap_dram)
+                prio_d = min(1.0 / max(1.0 - rho_a_dram, 1e-3), p.prio_cap)
+                w_dram_c = min(w_dram_fifo * prio_d,
+                               w_cap_dram * p.prio_cap)
+            else:
+                w_dram_a = w_dram_c = w_dram_fifo
+        else:
+            # scheduled (bank/rank) DRAM backend — dramsched.py, the host
+            # twin of the fused engine's in-carry bank model.  SQUASH
+            # urgency mirrors fused._finish_lane: explicit accel priority,
+            # or a hydra lane predicting it will miss this epoch's
+            # requirement (amal is still pre-update here).
+            ma_hat = p.mlp_accel * et / max(self.amal, 1.0)
+            urgent = accel_prio or (self.policy.hydra
+                                    and ma_hat < self.hist["requirement"][-1])
+            samp = dramsched.sample_window(self.tr.line, self.pos, n_a,
+                                           dram.samples)
+            w_a, w_c = dramsched.host_epoch(
+                self.dsched, dram, samp, am, cm, st["prefetch_fills"],
+                urgent, self.epoch, self._et_i)
+            w_dram_a = min(w_a, w_cap_dram)
+            w_dram_c = min(w_c, w_cap_dram * p.prio_cap)
         miss_lat_c = p.llc_hit_lat + w_llc_c + dram.latency_cycles + w_dram_c
         miss_lat_a = p.llc_hit_lat + w_llc_a + dram.latency_cycles + w_dram_a
         self.cm_prev, self.pf_prev = float(cm), float(st["prefetch_fills"])

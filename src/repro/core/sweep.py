@@ -57,7 +57,7 @@ import numpy as np
 
 from . import llc
 from . import sim
-from .dram import DDR3_1600, DramModel
+from .dram import DramModel, default_model
 from .policies import Policy
 
 # Default lane width: keeps vmap working-set small and gives the process
@@ -84,7 +84,8 @@ class SweepPoint:
     mix: str
     policy: Policy
     params: Optional[sim.SimParams] = None
-    dram: DramModel = DDR3_1600
+    # default honors REPRO_DRAM (CI sched leg) — see dram.default_model
+    dram: DramModel = dataclasses.field(default_factory=default_model)
 
     def resolved_params(self) -> sim.SimParams:
         return self.params or sim.SimParams()
@@ -99,7 +100,7 @@ class SweepPoint:
 # ---------------------------------------------------------------------------
 def simulate_group(config: str, mix: str, pols: Sequence[Policy],
                    params: Optional[sim.SimParams] = None,
-                   dram: DramModel = DDR3_1600,
+                   dram: Optional[DramModel] = None,
                    deadline_cycles: Optional[float] = None,
                    core_traffic: bool = True,
                    engine: str = "auto") -> List[sim.SimResult]:
@@ -118,6 +119,8 @@ def simulate_group(config: str, mix: str, pols: Sequence[Policy],
     path globally.
     """
     p = params or sim.SimParams()
+    if dram is None:
+        dram = default_model()
     if deadline_cycles is None:
         deadline_cycles = sim.calibrated_deadline(config, p, dram)
     art = sim.load_artifacts(config, mix, p, core_traffic)

@@ -15,7 +15,7 @@ a frozen :class:`ExecPlan` execution plan (engine / jobs / devices /
 cache / fit_engine — env vars are its defaults), four uniform registries
 (policies, workload configs, DRAM models, SimParams presets), and
 :func:`run` -> columnar :class:`ResultSet` (filter / group_by /
-mean_over, hydra-sweep/v2 serialization).  The engines underneath live
+mean_over, hydra-sweep/v3 serialization).  The engines underneath live
 in ``repro.core.sweep``.
 """
 from .plan import ExecPlan
@@ -25,7 +25,7 @@ from .runner import run, run_points
 from .spec import (ExperimentSpec, Point, lrpt, online, resolve_policy,
                    way_partition, with_apm)
 
-# (the hydra-sweep/v2 validator lives in repro.exp.schema, deliberately not
+# (the hydra-sweep/v3 validator lives in repro.exp.schema, deliberately not
 # imported here so `python -m repro.exp.schema` runs without a runpy warning)
 
 __all__ = [

@@ -1,4 +1,4 @@
-"""Columnar, queryable result container + the sweep.json v2 schema.
+"""Columnar, queryable result container + the sweep.json v3 schema.
 
 A :class:`ResultSet` holds one row per evaluated (or derived) cell as
 parallel columns.  ``keys`` names the coordinate columns (the spec's
@@ -7,11 +7,15 @@ axes); everything numeric outside the keys is a metric.  Query helpers
 figure module is a handful of declarative reads over one batched run
 instead of a bespoke accumulation loop.
 
-Serialization is the versioned **hydra-sweep/v2** artifact: every row
+Serialization is the versioned **hydra-sweep/v3** artifact: every row
 embeds its full point spec (policy/params dataclass dumps, config and
 dram names), so a row is interpretable — and re-runnable — without the
-module context that produced it.  v1 rows carried only
-``name/us_per_call/derived``.
+module context that produced it.  v3 point specs additionally carry
+``dram_kind`` ("fluid" or "sched:<policy>"), distinguishing results
+produced by the scheduled bank/rank DRAM backend from the fluid
+queueing models — two runs with the same model *name* are not
+comparable across that boundary.  v2 rows (no ``dram_kind``) and v1
+rows (only ``name/us_per_call/derived``) are rejected on read.
 """
 from __future__ import annotations
 
@@ -19,7 +23,7 @@ import json
 import numbers
 from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
 
-SWEEP_SCHEMA = "hydra-sweep/v2"
+SWEEP_SCHEMA = "hydra-sweep/v3"
 
 # columns with artifact-level meaning (everything else is keys or metrics)
 _SPECIAL = ("name", "us_per_call", "derived", "point", "result")
@@ -126,9 +130,9 @@ class ResultSet:
             out.append(row)
         return ResultSet.from_records(out, keys=rest)
 
-    # -- serialization (hydra-sweep/v2) --------------------------------------
+    # -- serialization (hydra-sweep/v3) --------------------------------------
     def to_sweep_doc(self, **header) -> Dict:
-        """The versioned sweep.json v2 document: header + one embedded-spec
+        """The versioned sweep.json v3 document: header + one embedded-spec
         row per result."""
         rows = []
         for r in self.to_rows():
@@ -157,6 +161,12 @@ class ResultSet:
 
     @classmethod
     def from_sweep_doc(cls, doc: Dict) -> "ResultSet":
+        if doc.get("schema") == "hydra-sweep/v2":
+            raise ValueError(
+                "hydra-sweep/v2 artifact: v2 rows predate the scheduled "
+                "DRAM backends (no point.dram_kind), so fluid and "
+                "scheduled results are indistinguishable; re-run the "
+                f"sweep to regenerate a {SWEEP_SCHEMA} artifact")
         if doc.get("schema") != SWEEP_SCHEMA:
             raise ValueError(f"expected schema {SWEEP_SCHEMA!r}, "
                              f"got {doc.get('schema')!r}")

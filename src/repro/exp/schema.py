@@ -1,15 +1,16 @@
-"""Artifact validation: hydra-sweep/v2 and the hydra-bench-* family.
+"""Artifact validation: hydra-sweep/v3 and the hydra-bench-* family.
 
 Dependency-free structural validator (the container has no jsonschema)
 used by CI to gate the uploaded artifacts::
 
     python -m repro.exp.schema sweep.json bench_sim.json [...]
 
-Dispatches on each document's ``schema`` tag — ``hydra-sweep/v2`` rows
-are validated in full; ``hydra-bench-*`` perf-trajectory artifacts
-(bench_lern.json, bench_sim.json) get entry-level checks, with the
-bench-sim entry shape pinned exactly.  Exits non-zero with a per-file
-error list on any violation.
+Dispatches on each document's ``schema`` tag — ``hydra-sweep/v3`` rows
+are validated in full (including the point's ``dram_kind`` tag that
+distinguishes fluid from scheduled DRAM results); ``hydra-bench-*``
+perf-trajectory artifacts (bench_lern.json, bench_sim.json) get
+entry-level checks, with the bench-sim entry shape pinned exactly.
+Exits non-zero with a per-file error list on any violation.
 """
 from __future__ import annotations
 
@@ -21,15 +22,21 @@ from typing import Dict, List
 from .resultset import SWEEP_SCHEMA
 
 _ROW_REQUIRED = ("name", "axes", "point", "metrics")
-_POINT_REQUIRED = ("config", "mix", "policy", "params", "dram")
+_POINT_REQUIRED = ("config", "mix", "policy", "params", "dram",
+                   "dram_kind")
 
 
 def validate_sweep(doc: Dict) -> List[str]:
-    """All schema violations in ``doc`` (empty == valid hydra-sweep/v2)."""
+    """All schema violations in ``doc`` (empty == valid hydra-sweep/v3)."""
     errs: List[str] = []
     if not isinstance(doc, dict):
         return ["document is not an object"]
-    if doc.get("schema") != SWEEP_SCHEMA:
+    if doc.get("schema") == "hydra-sweep/v2":
+        errs.append("schema: hydra-sweep/v2 is rejected — v2 rows predate "
+                    "the scheduled DRAM backends (no point.dram_kind); "
+                    "re-run the sweep to regenerate a "
+                    f"{SWEEP_SCHEMA} artifact")
+    elif doc.get("schema") != SWEEP_SCHEMA:
         errs.append(f"schema: expected {SWEEP_SCHEMA!r}, "
                     f"got {doc.get('schema')!r}")
     keys = doc.get("keys")
@@ -65,6 +72,13 @@ def validate_sweep(doc: Dict) -> List[str]:
                 for k in _POINT_REQUIRED:
                     if k not in point:
                         errs.append(f"{where}.point: missing {k!r}")
+                kind = point.get("dram_kind")
+                if kind is not None and not (
+                        kind == "fluid"
+                        or (isinstance(kind, str)
+                            and kind.startswith("sched:"))):
+                    errs.append(f"{where}.point.dram_kind: expected "
+                                f"'fluid' or 'sched:<policy>', got {kind!r}")
         metrics = row.get("metrics")
         if not isinstance(metrics, dict) or not all(
                 isinstance(v, numbers.Real) or v is None

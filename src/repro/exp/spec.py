@@ -30,7 +30,7 @@ from typing import Dict, List, Sequence, Tuple, Union
 
 from repro.core import policies as policies_mod
 from repro.core import sweep as sweep_mod
-from repro.core.dram import DramModel
+from repro.core.dram import DramModel, default_model, dram_kind
 from repro.core.policies import Policy
 from repro.core.sim import SimParams, result_cache_path
 from repro.core.workloads import AccelConfig
@@ -148,12 +148,15 @@ class Point:
                                  self.params, self.dram)
 
     def spec_dict(self) -> Dict:
-        """JSON-able embedded point spec (sweep.json v2 rows carry this so
-        a row is interpretable without the producing module's context)."""
+        """JSON-able embedded point spec (sweep.json v3 rows carry this so
+        a row is interpretable without the producing module's context —
+        ``dram_kind`` distinguishes the fluid queueing models from the
+        scheduled bank/rank backends, which a plain model name cannot)."""
         return {"config": self.config, "mix": self.mix,
                 "policy": dataclasses.asdict(self.policy),
                 "params": dataclasses.asdict(self.params),
-                "dram": self.dram.name}
+                "dram": self.dram.name,
+                "dram_kind": dram_kind(self.dram)}
 
 
 # ---------------------------------------------------------------------------
@@ -172,12 +175,16 @@ class ExperimentSpec:
 
     @classmethod
     def grid(cls, *, config="config1", mix="moti1", policy="fifo-nb",
-             params="default", dram="DDR3_1600_8x8",
+             params="default", dram=None,
              **extra) -> "ExperimentSpec":
         """Build a spec from scalar-or-list axis values.
 
-        Extra keyword axes must name ``SimParams`` fields; they become
-        per-point overrides of the resolved params."""
+        ``dram=None`` (default) resolves through ``dram.default_model``
+        (honors the ``REPRO_DRAM`` env override).  Extra keyword axes
+        must name ``SimParams`` fields; they become per-point overrides
+        of the resolved params."""
+        if dram is None:
+            dram = default_model().name
         axes = [("config", _tup(config)), ("mix", _tup(mix)),
                 ("policy", _tup(policy)), ("params", _tup(params)),
                 ("dram", _tup(dram))]

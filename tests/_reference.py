@@ -8,15 +8,18 @@ engine against it; production code goes through ``exp.run`` instead.
 from typing import Optional
 
 from repro.core import sim
+from repro.core.dram import default_model
 from repro.core.policies import Policy
 
 
 def run_reference(config: str, mix: str, policy: Policy,
                   params: Optional[sim.SimParams] = None,
-                  dram: sim.DramModel = sim.DDR3_1600,
+                  dram: Optional[sim.DramModel] = None,
                   deadline_cycles: Optional[float] = None,
                   core_traffic: bool = True) -> sim.SimResult:
     p = params or sim.SimParams()
+    if dram is None:
+        dram = default_model()
     if deadline_cycles is None:
         deadline_cycles = sim.calibrated_deadline(config, p, dram)
     art = sim.load_artifacts(config, mix, p, core_traffic)

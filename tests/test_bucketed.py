@@ -25,14 +25,16 @@ DEADLINE = 2.0e6  # explicit: skips the calibration run, keeps tests fast
 POLS = [policies.get(n) for n in ("fifo-nb", "arp-cs-as")]
 
 
-def _mk_group(config, mix, pols, p):
+def _mk_group(config, mix, pols, p, dram=sim.DDR3_1600):
     art = sim.load_artifacts(config, mix, p, True)
-    return [sim.Lane(config, mix, pol, p, sim.DDR3_1600, DEADLINE, art,
+    return [sim.Lane(config, mix, pol, p, dram, DEADLINE, art,
                      True) for pol in pols]
 
 
-def _oracle(config, mix, pols, p):
-    return sweep.simulate_group(config, mix, pols, p,
+def _oracle(config, mix, pols, p, dram=sim.DDR3_1600):
+    # dram pinned to match _mk_group's default — an env REPRO_DRAM override
+    # must not split the oracle and the bucketed engine onto different models
+    return sweep.simulate_group(config, mix, pols, p, dram,
                                 deadline_cycles=DEADLINE)
 
 
@@ -95,6 +97,30 @@ def test_bucket_single_group_degenerate():
         assert_bitwise(lane.result(), want, pol.name)
 
 
+def test_bucket_sched_dram_mixed_policy_parity():
+    """Scheduled-dram groups: the bank/rank geometry rides in bucket_key
+    (the arbitration kind is SharedConsts data), so SQUASH and FR-FCFS
+    variants of one part share a bucket — across mixed policy rosters —
+    while fluid groups land elsewhere.  Bank state lives in the vmapped
+    carry; every lane must stay bitwise the per-group oracle."""
+    from repro.core.dram import DDR4_2400_FRFCFS, DDR4_2400_SQUASH
+    rosters = [[policies.get(n) for n in ("fifo-nb", "arp-cs-as")],
+               [policies.get(n) for n in ("arp-cs-as-d", "hydra")]]
+    gspecs = [("config1", "moti1", rosters[0], TINY, DDR4_2400_SQUASH),
+              ("config1", "moti1", rosters[1], TINY, DDR4_2400_SQUASH),
+              ("config1", "moti1", rosters[0], TINY, DDR4_2400_FRFCFS)]
+    groups = [_mk_group(*gs) for gs in gspecs]
+    fluid = _mk_group("config1", "moti1", rosters[0], TINY)
+    keys = [fused.bucket_key(g) for g in groups]
+    assert len(set(keys)) == 1                       # one sched bucket
+    assert fused.bucket_key(fluid) != keys[0]        # fluid stays apart
+    fused.drive_lanes_bucketed(groups)
+    for (config, mix, pols, p, dram), g in zip(gspecs, groups):
+        for pol, lane, want in zip(pols, g,
+                                   _oracle(config, mix, pols, p, dram)):
+            assert_bitwise(lane.result(), want, (dram.name, pol.name))
+
+
 # ---------------------------------------------------------------------------
 # overflow: only the offending group leaves the bucket
 # ---------------------------------------------------------------------------
@@ -102,10 +128,10 @@ HP = dataclasses.replace(sim.SimParams(), n_inputs=1, max_epochs=12,
                          accel_epoch_cap=400, subsample_target=50_000)
 
 
-def _synthetic_group(seed, n_lines, length=2000):
+def _synthetic_group(seed, n_lines, length=2000, dram=sim.DDR3_1600):
     from test_fused import _synthetic_artifacts
     art = _synthetic_artifacts(seed, n_lines, length)
-    return art, [sim.Lane("synthetic", "moti2", pol, HP, sim.DDR3_1600,
+    return art, [sim.Lane("synthetic", "moti2", pol, HP, dram,
                           DEADLINE, art, True) for pol in POLS]
 
 
@@ -136,6 +162,36 @@ def test_bucket_overflow_demotes_offending_group_only(monkeypatch):
         for pol, lane in zip(POLS, group):
             want = sim.drive_lane(
                 sim.Lane("synthetic", "moti2", pol, HP, sim.DDR3_1600,
+                         DEADLINE, art, True))
+            assert_bitwise(lane.result(), want, (name, pol.name))
+
+
+def test_bucket_overflow_demotion_with_sched_bank_state(monkeypatch):
+    """Overflow demotion with the scheduled DRAM backend: the demoted
+    group's in-flight bank state (open rows / backlog / rotor, mid-run in
+    the vmapped carry) must survive the replay hand-off — both groups
+    still match the sequential host oracle bitwise."""
+    from repro.core.dram import DDR4_2400_SQUASH
+    demoted = []
+    orig = fused.drive_lanes_fused
+
+    def spy(lanes, *a, **kw):
+        demoted.append(tuple(lanes))
+        return orig(lanes, *a, **kw)
+
+    monkeypatch.setattr(fused, "drive_lanes_fused", spy)
+    monkeypatch.setattr(fused, "MAX_ROUNDS_CAP", 64)
+    hot_art, hot = _synthetic_group(3, n_lines=8, dram=DDR4_2400_SQUASH)
+    tame_art, tame = _synthetic_group(4, n_lines=6000,
+                                      dram=DDR4_2400_SQUASH)
+    assert fused.bucket_key(hot) == fused.bucket_key(tame)
+    fused.drive_lanes_bucketed([hot, tame], k_epochs=4, max_rounds=32)
+    assert demoted == [tuple(hot)], "exactly the hot group must demote"
+    for name, art, group in (("hot", hot_art, hot),
+                             ("tame", tame_art, tame)):
+        for pol, lane in zip(POLS, group):
+            want = sim.drive_lane(
+                sim.Lane("synthetic", "moti2", pol, HP, DDR4_2400_SQUASH,
                          DEADLINE, art, True))
             assert_bitwise(lane.result(), want, (name, pol.name))
 

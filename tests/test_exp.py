@@ -1,5 +1,5 @@
 """Declarative experiment API: registry protocol conformance, spec
-expansion + transforms, columnar ResultSet + hydra-sweep/v2 round-trip,
+expansion + transforms, columnar ResultSet + hydra-sweep/v3 round-trip,
 bitwise parity of exp.run against the pre-redesign sequential path,
 phase-drift workloads, and the serve-side online retrain hook."""
 import dataclasses
@@ -107,7 +107,7 @@ def test_policy_transforms_match_legacy_derivers():
 
 
 # ---------------------------------------------------------------------------
-# ResultSet: queries + hydra-sweep/v2 round-trip
+# ResultSet: queries + hydra-sweep/v3 round-trip
 # ---------------------------------------------------------------------------
 def _toy_rs():
     rows = [{"config": "c1", "mix": m, "policy": p, "ipc": v,

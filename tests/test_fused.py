@@ -106,7 +106,7 @@ def test_fused_overflow_falls_back_to_host(monkeypatch):
     fused.drive_lanes_fused([lane], k_epochs=4, max_rounds=8)
     got = lane.result()
     assert calls["n"] > 0, "overflow fallback never fired"
-    want = run_reference("config1", "moti1", pol, TINY,
+    want = run_reference("config1", "moti1", pol, TINY, sim.DDR3_1600,
                          deadline_cycles=DEADLINE)
     assert_bitwise(got, want, "overflow-fallback")
 

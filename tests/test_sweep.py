@@ -41,9 +41,11 @@ def test_group_diverging_lane_lengths():
     without perturbing anyone's results."""
     p = dataclasses.replace(TINY, max_epochs=200)
     pols = [policies.get(n) for n in ("arp-nb", "fifo-nb")]
-    grp = sweep.simulate_group("config1", "moti1", pols, p,
+    # dram pinned: the divergence premise below holds under the fluid
+    # model's timing, not necessarily under a REPRO_DRAM override
+    grp = sweep.simulate_group("config1", "moti1", pols, p, sim.DDR3_1600,
                                deadline_cycles=DEADLINE)
-    seq = [run_reference("config1", "moti1", pol, p,
+    seq = [run_reference("config1", "moti1", pol, p, sim.DDR3_1600,
                          deadline_cycles=DEADLINE) for pol in pols]
     assert grp[0].epochs != grp[1].epochs  # the premise: lanes diverge
     for pol, got, want in zip(pols, grp, seq):
