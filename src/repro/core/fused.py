@@ -1662,6 +1662,19 @@ def drive_lanes_bucketed(groups: List[List[Lane]], states=None,
     depth = 2 if speculate else 1
     overflow_pending: set = set()
     while True:
+        # fault-injection site "bucket_overflow" (repro.exp.faults):
+        # force the surgical freeze/demote machinery as if every active
+        # group had exhausted the round capacity at the cap.  Checked
+        # before dispatch so it bites even on tiny workloads that finish
+        # inside the first super-step.  Bitwise-safe by the same argument
+        # as real overflow demotion — each group leaves from its
+        # committed carry and finishes under the per-group driver.
+        if any(group_active(i) for i in range(n_groups)):
+            from repro.exp import faults as _flt
+            if _flt.fire("bucket_overflow", key=f"g{n_groups}") is not None:
+                dims = dataclasses.replace(dims, max_rounds=MAX_ROUNDS_CAP)
+                overflow_pending.update(
+                    i for i in range(n_groups) if group_active(i))
         while (not overflow_pending and len(inflight) < depth
                and any(group_active(i) for i in range(n_groups))):
             inflight.append(dispatch())

@@ -21,7 +21,9 @@ import hashlib
 import json
 import os
 import pickle
+import struct
 import uuid
+import zlib
 from typing import Dict, List, Optional
 
 import jax.numpy as jnp
@@ -109,13 +111,135 @@ class SimResult:
 # ---------------------------------------------------------------------------
 # artifact caching (traces + LERN models are deterministic & reusable)
 # ---------------------------------------------------------------------------
+# Every entry on disk is a checksummed, versioned envelope:
+#     HYC1 | crc32(payload) as <I | payload (pickle)
+# cache_load() verifies magic + crc before unpickling; anything that
+# fails (torn write survivor, bit rot, a pre-envelope legacy pickle, a
+# foreign file) is moved to CACHE_DIR/quarantine/ and reported as a
+# miss, so the caller recomputes instead of crashing the sweep.
+_CACHE_MAGIC = b"HYC1"
+
+#: cache_load sentinel: "no valid entry" (None is a legitimate payload).
+MISS = object()
+
+
+def _faults():
+    # lazy: repro.exp.faults is stdlib-only, but core must stay importable
+    # without the exp package fully initialized (circular-import safety).
+    from repro.exp import faults
+    return faults
+
+
+def _seal(obj) -> bytes:
+    payload = pickle.dumps(obj)
+    return (_CACHE_MAGIC + struct.pack("<I", zlib.crc32(payload) & 0xFFFFFFFF)
+            + payload)
+
+
+def _quarantine(path: str, reason: str) -> None:
+    qdir = os.path.join(CACHE_DIR, "quarantine")
+    os.makedirs(qdir, exist_ok=True)
+    dst = os.path.join(
+        qdir, os.path.basename(path) + "." + uuid.uuid4().hex[:8])
+    try:
+        os.replace(path, dst)
+    except OSError:
+        try:
+            os.remove(path)
+        except OSError:
+            pass
+        dst = None
+    _faults().log_event("quarantine", path=path, reason=reason,
+                        quarantined_to=dst)
+
+
+def _mangle(path: str, spec) -> None:
+    """Apply an injected cache_read fault to the entry on disk, so the
+    recovery under test is the real quarantine/recompute machinery."""
+    try:
+        size = os.path.getsize(path)
+        if spec.kind == "truncate":
+            with open(path, "r+b") as f:
+                f.truncate(max(1, size // 2))
+        elif spec.kind == "corrupt":
+            with open(path, "r+b") as f:
+                f.seek(max(0, size - 1))
+                b = f.read(1)
+                f.seek(max(0, size - 1))
+                f.write(bytes([(b[0] if b else 0) ^ 0xFF]))
+    except OSError:
+        pass
+
+
+def cache_load(path: str):
+    """Read one envelope cache entry.  Returns :data:`MISS` when the
+    file is absent or invalid; invalid entries are quarantined first."""
+    spec = _faults().fire("cache_read", key=os.path.basename(path))
+    if spec is not None and os.path.exists(path):
+        _mangle(path, spec)
+    if not os.path.exists(path):
+        return MISS
+    try:
+        with open(path, "rb") as f:
+            blob = f.read()
+    except OSError:
+        return MISS
+    if len(blob) < 8 or blob[:4] != _CACHE_MAGIC:
+        _quarantine(path, "bad_magic")
+        return MISS
+    (crc,) = struct.unpack("<I", blob[4:8])
+    payload = blob[8:]
+    if (zlib.crc32(payload) & 0xFFFFFFFF) != crc:
+        _quarantine(path, "crc_mismatch")
+        return MISS
+    try:
+        return pickle.loads(payload)
+    except Exception:
+        _quarantine(path, "unpickle_error")
+        return MISS
+
+
 def _atomic_dump(obj, path: str) -> None:
+    """Durably commit one envelope cache entry: write to a unique temp
+    file, fsync it, rename over ``path``, then fsync the directory — a
+    kill at any instant leaves either the old entry or the new one,
+    never a torn 'committed' file."""
+    blob = _seal(obj)
+    spec = _faults().fire("cache_dump", key=os.path.basename(path))
     # pid alone is not unique across threads of one process — tag with a
     # uuid so same-process threaded callers can't collide on the tmp file.
     tmp = path + f".{os.getpid()}.{uuid.uuid4().hex}.tmp"
+    if spec is not None:
+        if spec.kind == "corrupt":
+            bad = (struct.unpack("<I", blob[4:8])[0]
+                   ^ 0x5EED0000 ^ _faults().plan_seed()) & 0xFFFFFFFF
+            if struct.pack("<I", bad) == blob[4:8]:
+                bad ^= 1
+            blob = blob[:4] + struct.pack("<I", bad) + blob[8:]
+        elif spec.kind == "truncate":
+            blob = blob[:max(9, len(blob) // 2)]
+        elif spec.kind == "torn":
+            # a kill mid-write: half the bytes reach the *temp* file and
+            # the rename never happens — the committed entry is untouched
+            with open(tmp, "wb") as f:
+                f.write(blob[:max(1, len(blob) // 2)])
+                f.flush()
+                os.fsync(f.fileno())
+            raise _faults().InjectedFault(
+                f"injected torn write at {os.path.basename(path)}")
     with open(tmp, "wb") as f:
-        pickle.dump(obj, f)
+        f.write(blob)
+        f.flush()
+        os.fsync(f.fileno())
     os.replace(tmp, path)
+    try:
+        dfd = os.open(os.path.dirname(path) or ".", os.O_RDONLY)
+        try:
+            os.fsync(dfd)
+        finally:
+            os.close(dfd)
+    except OSError:
+        pass  # directory fsync is best-effort (not supported everywhere)
 
 
 def _cache_path(kind: str, key: str) -> str:
@@ -131,9 +255,9 @@ def _family_k(config: str, subsample_target: int) -> int:
     model = CONFIGS[config].model
     key = f"famk-{model}-{subsample_target}"
     path = _cache_path("trace", key)
-    if os.path.exists(path):
-        with open(path, "rb") as f:
-            return pickle.load(f)
+    v = cache_load(path)
+    if v is not MISS:
+        return v
     worst = 0
     # drift variants are excluded: they would inflate the family worst-case
     # (period x the base accesses) and silently re-key every cached trace.
@@ -156,9 +280,9 @@ def load_trace(config: str, subsample_target: int) -> Trace:
     cfg = CONFIGS[config]
     key = f"{config}-fam{subsample_target}"
     path = _cache_path("trace", key)
-    if os.path.exists(path):
-        with open(path, "rb") as f:
-            return pickle.load(f)
+    v = cache_load(path)
+    if v is not MISS:
+        return v
     tr = generate_trace(cfg)
     k = _family_k(config, subsample_target)
     if k > 1:
@@ -191,9 +315,9 @@ def load_lern(config: str, lrpt_variant: str, subsample_target: int,
     """Train (or load) the LERN model through the device-batched trainer."""
     key = f"{config}-{lrpt_variant}-ss{subsample_target}-s{seed}-{_lern_tag()}"
     path = _cache_path("lern", key)
-    if os.path.exists(path):
-        with open(path, "rb") as f:
-            return pickle.load(f)
+    v = cache_load(path)
+    if v is not MISS:
+        return v
     tr = load_trace(config, subsample_target)
     model = train_model_batched(tr, hash_fn=lrpt_train_hash(lrpt_variant),
                                 seed=seed)
@@ -246,9 +370,9 @@ def load_lern_family(configs, lrpt_variant: str, subsample_target: int,
         key = (f"{config}-{lrpt_variant}-ss{subsample_target}-s{seed}-"
                f"{_lern_tag()}")
         path = _cache_path("lern", key)
-        if os.path.exists(path):
-            with open(path, "rb") as f:
-                out[config] = pickle.load(f)
+        v = cache_load(path)
+        if v is not MISS:
+            out[config] = v
         else:
             missing.append((config, path))
     if missing:
@@ -296,9 +420,9 @@ def trace_clusters(config: str, lrpt_variant: str, subsample_target: int
     key = (f"{config}-{lrpt_variant}-ss{subsample_target}-clusters-"
            f"{_lern_tag()}")
     path = _cache_path("lern", key)
-    if os.path.exists(path):
-        with open(path, "rb") as f:
-            return pickle.load(f)
+    v = cache_load(path)
+    if v is not MISS:
+        return v
     tr = load_trace(config, subsample_target)
     model = load_lern(config, lrpt_variant, subsample_target)
     out = clusters_from_model(model, tr, lrpt_variant)
@@ -827,9 +951,9 @@ def calibrated_deadline(config: str, p: SimParams, dram: DramModel) -> float:
            f"-{dram.name}-mlp{p.mlp_accel}-cap{p.accel_epoch_cap}"
            f"-r{p.llc_rate}-s{p.llc_size_bytes}")
     path = _cache_path("deadline", hashlib.md5(key.encode()).hexdigest())
-    if os.path.exists(path):
-        with open(path, "rb") as f:
-            return pickle.load(f) * p.deadline_factor
+    v = cache_load(path)
+    if v is not MISS:
+        return v * p.deadline_factor
     from .policies import get
     pq = dataclasses.replace(p, n_inputs=1, deadline_factor=1.0)
     art = load_artifacts(config, "mix1", pq, False)

@@ -48,7 +48,7 @@ import dataclasses
 import functools
 import json
 import os
-import pickle
+import time
 from collections import OrderedDict
 from concurrent.futures import ProcessPoolExecutor
 from typing import Dict, List, Optional, Sequence, Tuple
@@ -59,6 +59,13 @@ from . import llc
 from . import sim
 from .dram import DramModel, default_model
 from .policies import Policy
+
+
+def _faults():
+    # lazy: fault injection + run reporting live in repro.exp.faults
+    # (stdlib-only); core modules import it on demand to stay cycle-safe
+    from repro.exp import faults
+    return faults
 
 # Default lane width: keeps vmap working-set small and gives the process
 # pool enough independent tasks to fill its workers even for single-mix
@@ -75,6 +82,23 @@ BUCKET_GROUPS = int(os.environ.get("REPRO_BUCKET_GROUPS", "16"))
 # online-LERN retrain swapped in place are stale and re-stage.
 STAGE_CACHE_CAP = int(os.environ.get("REPRO_STAGE_CACHE", "32"))
 _STAGE_CACHE: "OrderedDict[Tuple, object]" = OrderedDict()
+
+# Resilient-execution knobs (docs/resilience.md).  A failing pool task is
+# retried TASK_RETRIES times with exponential backoff (base RETRY_BACKOFF
+# seconds, doubled per attempt, capped at 5s) before the parent runs it
+# inline on the host engine as a last resort.  TASK_TIMEOUT > 0 arms a
+# per-task wall-clock watchdog: overrunning workers are killed, the pool
+# respawned, and in-flight survivors re-dispatched.
+TASK_RETRIES = int(os.environ.get("REPRO_TASK_RETRIES", "2"))
+TASK_TIMEOUT = float(os.environ.get("REPRO_TASK_TIMEOUT", "0"))
+RETRY_BACKOFF = float(os.environ.get("REPRO_RETRY_BACKOFF", "0.25"))
+
+
+def point_key(path: str) -> str:
+    """Manifest key of one sweep point: the md5 basename of its sim
+    result cache path (stable across hosts and cache roots)."""
+    base = os.path.basename(path)
+    return base[:-4] if base.endswith(".pkl") else base
 
 
 @dataclasses.dataclass(frozen=True)
@@ -235,6 +259,10 @@ def _staged_for(batch_list: List[List[sim.Lane]]):
     roster, params/dram, deadline).  A cached entry whose tables an
     online-LERN retrain swapped (``_Staged.stale``) re-stages."""
     from . import fused
+    if _faults().fire("stage_evict", key=f"{len(batch_list)}g") is not None:
+        # injected staging-buffer eviction: drop the LRU wholesale — a
+        # pure perf event (everything re-stages from host copies)
+        _STAGE_CACHE.clear()
     pads = fused.bucket_pads(batch_list)
     staged = []
     for batch in batch_list:
@@ -254,8 +282,52 @@ def _staged_for(batch_list: List[List[sim.Lane]]):
     return staged
 
 
+def _make_task_lanes(task) -> List[sim.Lane]:
+    """Fresh lanes (one per policy) for one group task, built from cached
+    artifacts — cheap to rebuild, which is what makes mid-run engine
+    demotion safe: a failed bucket never patches partially-advanced
+    state, it recomputes the group from scratch."""
+    config, mix, pols, params, dram, _paths = task
+    p = params or sim.SimParams()
+    deadline = sim.calibrated_deadline(config, p, dram)
+    art = sim.load_artifacts(config, mix, p, True)
+    return [sim.Lane(config, mix, pol, p, dram, float(deadline), art, True)
+            for pol in pols]
+
+
+def _demote_batch(task, poss: List[int], devices: Optional[int] = None
+                  ) -> Tuple[List[sim.Lane], str]:
+    """Degradation ladder, rungs two and three: re-run the ``poss``
+    policy lanes of ``task`` on the per-group fused engine, and if that
+    also fails degradably, on the host loop.  Always starts from fresh
+    lanes — recomputation is deterministic, so the bitwise contract
+    holds no matter which rung finishes the group."""
+    flt = _faults()
+    from . import fused
+    config, mix, pols = task[0], task[1], task[2]
+
+    def fresh():
+        lanes = _make_task_lanes(task)
+        return [lanes[j] for j in poss]
+
+    try:
+        sel = fresh()
+        flt.fire("fused", key=f"{config}|{mix}")
+        fused.drive_lanes_fused(sel)
+        return sel, "fused"
+    except Exception as e:
+        if not flt.degradable(e):
+            raise
+        flt.log_event("degrade", ladder="fused->host",
+                      task=f"{config}|{mix}", error=str(e)[:200])
+        sel = fresh()
+        _drive_lanes(sel)
+        return sel, "host"
+
+
 def simulate_bucket(tasks: Sequence[Tuple], devices: Optional[int] = None,
-                    pipeline: Optional[bool] = None
+                    pipeline: Optional[bool] = None,
+                    task_keys: Optional[List[List[str]]] = None
                     ) -> List[List[sim.SimResult]]:
     """Simulate many ``(config, mix, pols, params, dram, paths)`` group
     tasks at once: groups are bucketed by fused-engine static shape
@@ -266,45 +338,76 @@ def simulate_bucket(tasks: Sequence[Tuple], devices: Optional[int] = None,
     Bitwise-equal to per-task ``simulate_group`` — the oracle it is
     pinned against (tests/test_bucketed.py).  Geometry batches the fused
     engine can't take fall back to the host loop, exactly like
-    ``engine="auto"``.  Each finished point is dumped to its ``paths``
-    entry (pass empty paths to skip the cache).  Staged device constants
-    ride the module staging LRU (``_staged_for``), so repeated sweeps
-    over the same points skip the upload.  ``pipeline`` forwards to
-    ``fused.drive_lanes_bucketed`` (None = ``REPRO_BUCKET_PIPELINE``).
-    Returns per-task result lists in task order."""
+    ``engine="auto"``; beyond that, a slab that fails **degradably**
+    (XLA compile error, ``RESOURCE_EXHAUSTED``, injected fault) walks
+    the ladder bucketed → per-group fused → host, recomputing the
+    affected groups from fresh lanes so results stay bitwise-identical
+    (docs/resilience.md).  Each finished point is dumped to its
+    ``paths`` entry (pass empty paths to skip the cache).  Staged device
+    constants ride the module staging LRU (``_staged_for``), so repeated
+    sweeps over the same points skip the upload.  ``pipeline`` forwards
+    to ``fused.drive_lanes_bucketed`` (None = ``REPRO_BUCKET_PIPELINE``).
+    ``task_keys`` (parallel to ``tasks``) reports each finished point to
+    the active run report.  Returns per-task result lists in task
+    order."""
+    flt = _faults()
     from . import fused
     task_lanes: List[List[sim.Lane]] = []
-    buckets: Dict[Tuple, List[List[sim.Lane]]] = {}
+    task_engines: List[set] = []
+    # bucket members carry (batch, task_idx, lane positions) so a demoted
+    # batch can be rebuilt and re-installed into its task's lane roster
+    buckets: Dict[Tuple, List[Tuple[List[sim.Lane], int, List[int]]]] = {}
     host_batches: List[List[sim.Lane]] = []
-    for config, mix, pols, params, dram, _paths in tasks:
-        p = params or sim.SimParams()
-        deadline = sim.calibrated_deadline(config, p, dram)
-        art = sim.load_artifacts(config, mix, p, True)
-        lanes = [sim.Lane(config, mix, pol, p, dram, float(deadline), art,
-                          True) for pol in pols]
+    for ti, task in enumerate(tasks):
+        lanes = _make_task_lanes(task)
         task_lanes.append(lanes)
-        batches: Dict[Tuple, List[sim.Lane]] = {}
-        for lane in lanes:
+        task_engines.append(set())
+        batches: Dict[Tuple, List[int]] = {}
+        for j, lane in enumerate(lanes):
             batches.setdefault(llc.geometry_key(lane.llc_cfg),
-                               []).append(lane)
-        for batch in batches.values():
+                               []).append(j)
+        for poss in batches.values():
+            batch = [lanes[j] for j in poss]
             if all(fused.lane_supported(lane) for lane in batch):
-                buckets.setdefault(fused.bucket_key(batch), []).append(batch)
+                buckets.setdefault(fused.bucket_key(batch),
+                                   []).append((batch, ti, poss))
+                task_engines[ti].add("bucketed")
             else:
                 host_batches.append(batch)
+                task_engines[ti].add("host")
     for batch_list in buckets.values():
         for lo in range(0, len(batch_list), BUCKET_GROUPS):
             slab = batch_list[lo:lo + BUCKET_GROUPS]
-            fused.drive_lanes_bucketed(slab, devices=devices,
-                                       staged=_staged_for(slab),
-                                       pipeline=pipeline)
+            groups = [b for b, _ti, _poss in slab]
+            try:
+                flt.fire("bucket", key=f"{len(groups)}g")
+                fused.drive_lanes_bucketed(groups, devices=devices,
+                                           staged=_staged_for(groups),
+                                           pipeline=pipeline)
+            except Exception as e:
+                if not flt.degradable(e):
+                    raise
+                flt.log_event("degrade", ladder="bucketed->fused",
+                              groups=len(groups), error=str(e)[:200])
+                for _batch, ti, poss in slab:
+                    sel, rung = _demote_batch(tasks[ti], poss,
+                                              devices=devices)
+                    for j, lane in zip(poss, sel):
+                        task_lanes[ti][j] = lane
+                    task_engines[ti].add(rung)
     for batch in host_batches:
         _drive_lanes(batch)
     out: List[List[sim.SimResult]] = []
-    for task, lanes in zip(tasks, task_lanes):
+    for ti, (task, lanes) in enumerate(zip(tasks, task_lanes)):
         results = [lane.result() for lane in lanes]
         for res, path in zip(results, task[5]):
             sim._atomic_dump(res, path)
+        engs = task_engines[ti]
+        eng = ("host" if "host" in engs else
+               "fused" if "fused" in engs else "bucketed")
+        if task_keys is not None:
+            for key in task_keys[ti]:
+                flt.point_done(key, source="computed", engine=eng)
         out.append(results)
     return out
 
@@ -376,6 +479,9 @@ def _prepare_lern(tasks) -> None:
 def _group_task(task, engine: str = "auto") -> List[sim.SimResult]:
     """Pool task: simulate one policy group and persist each point."""
     config, mix, pols, params, dram, paths = task
+    # named injection site: crash/hang/raise faults land here, in the
+    # worker (or inline caller), to exercise the retry/respawn machinery
+    _faults().fire("task", key=f"{config}|{mix}")
     results = simulate_group(config, mix, list(pols), params, dram,
                              engine=engine)
     for res, path in zip(results, paths):
@@ -389,10 +495,14 @@ def _plan_tasks(points: Sequence[SweepPoint], max_lanes: int,
     reads (when ``cache``), duplicate-point dedup, grouping by (config,
     mix, params, dram) and chunking into <= ``max_lanes`` policy lanes.
 
-    Returns ``(results, tasks, task_idxs, calib, seen_paths)`` —
-    ``results`` pre-filled with cache hits, ``tasks`` as
+    Returns ``(results, tasks, task_idxs, task_keys, calib, seen_paths)``
+    — ``results`` pre-filled with cache hits, ``tasks`` as
     ``(config, mix, pols, params, dram, paths)`` tuples (empty paths
-    when ``cache`` is off, so executors skip the dump)."""
+    when ``cache`` is off, so executors skip the dump), ``task_keys``
+    the per-task manifest point keys.  Cache reads go through the
+    checksummed envelope (``sim.cache_load``): corrupt or legacy entries
+    are quarantined and the point recomputed."""
+    flt = _faults()
     results: List[Optional[sim.SimResult]] = [None] * len(points)
     seen_paths: Dict[str, List[int]] = {}
     groups: Dict[str, List[Tuple[int, SweepPoint, str]]] = {}
@@ -402,15 +512,18 @@ def _plan_tasks(points: Sequence[SweepPoint], max_lanes: int,
             seen_paths[path].append(idx)
             continue
         seen_paths[path] = [idx]
-        if cache and os.path.exists(path):
-            with open(path, "rb") as f:
-                results[idx] = pickle.load(f)
-            continue
+        if cache:
+            v = sim.cache_load(path)
+            if v is not sim.MISS:
+                results[idx] = v
+                flt.point_done(point_key(path), source="cache")
+                continue
         key = f"{pt.config}|{pt.mix}|{_params_key(pt.resolved_params(), pt.dram)}"
         groups.setdefault(key, []).append((idx, pt, path))
 
     tasks = []
     task_idxs: List[List[int]] = []
+    task_keys: List[List[str]] = []
     calib: Dict[str, Tuple] = {}
     for members in groups.values():
         first = members[0][1]
@@ -425,7 +538,8 @@ def _plan_tasks(points: Sequence[SweepPoint], max_lanes: int,
                           tuple(path for _, _, path in chunk) if cache
                           else ()))
             task_idxs.append([idx for idx, _, _ in chunk])
-    return results, tasks, task_idxs, calib, seen_paths
+            task_keys.append([point_key(path) for _, _, path in chunk])
+    return results, tasks, task_idxs, task_keys, calib, seen_paths
 
 
 def _fill_twins(results, seen_paths) -> None:
@@ -434,9 +548,182 @@ def _fill_twins(results, seen_paths) -> None:
             results[idx] = results[idxs[0]]
 
 
+def _run_task_inline(task, engine: str, retries: int) -> Tuple:
+    """Inline (jobs<=1) resilient execution of one group task: retry
+    with exponential backoff on the requested engine, then a final
+    attempt on the host engine.  Returns (results, attempts, engine)."""
+    flt = _faults()
+    attempts = 0
+    while True:
+        attempts += 1
+        eng = engine if attempts <= retries else "host"
+        try:
+            return _group_task(task, engine=eng), attempts, eng
+        except Exception as e:
+            if attempts > retries:
+                raise
+            flt.log_event("task_retry", task=f"{task[0]}|{task[1]}",
+                          attempt=attempts, error=str(e)[:200])
+            time.sleep(min(RETRY_BACKOFF * 2 ** (attempts - 1), 5.0))
+
+
+def _run_pool(tasks, calib, engine: str, fit_engine: Optional[str],
+              jobs: int, timeout: float, retries: int) -> List[Tuple]:
+    """Spawn-pool execution of the group tasks with the full recovery
+    stack: per-task retry with backoff, ``BrokenProcessPool`` detection
+    with pool respawn + survivor re-dispatch, a wall-clock watchdog that
+    kills overrunning workers (``timeout`` > 0), and an inline-host
+    fallback in the parent once a task exhausts its retry budget.
+    Returns per-task ``(results, attempts, engine)`` in task order."""
+    import multiprocessing as mp
+    from concurrent.futures import FIRST_COMPLETED, wait
+    from concurrent.futures.process import BrokenProcessPool
+
+    from .workloads import CONFIGS
+
+    flt = _faults()
+    ctx = mp.get_context("spawn")
+    workers = min(jobs, len(tasks))
+    # ship each task's config: runtime registrations (drift variants,
+    # ad-hoc AccelConfigs) don't survive the spawn re-import;
+    # setdefault makes statically-known ones a no-op
+    extra = {t[0]: CONFIGS[t[0]] for t in tasks}
+
+    results: List[Optional[Tuple]] = [None] * len(tasks)
+    attempts = [0] * len(tasks)
+    pending: List[int] = list(range(len(tasks)))
+    running: Dict = {}          # future -> task index
+    deadlines: Dict = {}        # future -> monotonic watchdog deadline
+    ex: Optional[ProcessPoolExecutor] = None
+
+    def discard_pool(kill: bool = False) -> None:
+        nonlocal ex
+        if ex is None:
+            return
+        if kill:
+            # hung or wedged workers never drain the shutdown sentinel —
+            # kill them outright so shutdown (and interpreter exit's
+            # executor join) can't block behind a sleeping worker
+            for proc in list(getattr(ex, "_processes", {}).values()):
+                try:
+                    proc.kill()
+                except Exception:
+                    pass
+        ex.shutdown(wait=False, cancel_futures=True)
+        ex = None
+
+    def new_pool() -> None:
+        nonlocal ex
+        ex = ProcessPoolExecutor(max_workers=workers, mp_context=ctx,
+                                 initializer=_worker_init,
+                                 initargs=(sim.CACHE_DIR, extra, fit_engine))
+        # phase 1: deadline calibration, one task per unique (config,
+        # params, dram) — otherwise every group of a config would
+        # redundantly simulate the standalone run.  Results land in the
+        # disk cache, so the re-run after a pool respawn is free.
+        try:
+            list(ex.map(_calibrate_task, calib.values()))
+        except Exception as e:
+            flt.log_event("calibration_fallback", error=str(e)[:200])
+            discard_pool(kill=True)
+            for t in calib.values():
+                _calibrate_task(t)
+            ex = ProcessPoolExecutor(max_workers=workers, mp_context=ctx,
+                                     initializer=_worker_init,
+                                     initargs=(sim.CACHE_DIR, extra,
+                                               fit_engine))
+
+    def handle_failure(i: int, kind: str, err: str) -> None:
+        if attempts[i] > retries:
+            # retry budget exhausted: last resort is the parent itself,
+            # on the always-available host engine
+            flt.log_event("inline_fallback", task=f"{tasks[i][0]}|{tasks[i][1]}",
+                          attempts=attempts[i], cause=kind)
+            attempts[i] += 1
+            results[i] = (_group_task(tasks[i], engine="host"),
+                          attempts[i], "host")
+        else:
+            flt.log_event("task_retry", task=f"{tasks[i][0]}|{tasks[i][1]}",
+                          attempt=attempts[i], cause=kind, error=err[:200])
+            time.sleep(min(RETRY_BACKOFF * 2 ** (attempts[i] - 1), 5.0))
+            pending.append(i)
+
+    try:
+        while pending or running:
+            if ex is None and pending:
+                new_pool()
+            # one in-flight task per worker: with no executor-side
+            # queueing, a submitted future is actually executing, so the
+            # watchdog clock measures work, not queue wait
+            while pending and len(running) < workers:
+                i = pending.pop(0)
+                attempts[i] += 1
+                fut = ex.submit(functools.partial(_group_task,
+                                                  engine=engine), tasks[i])
+                running[fut] = i
+                if timeout > 0:
+                    deadlines[fut] = time.monotonic() + timeout
+            done, _ = wait(set(running), return_when=FIRST_COMPLETED,
+                           timeout=0.25 if timeout > 0 else None)
+            pool_broken = False
+            for fut in done:
+                i = running.pop(fut)
+                deadlines.pop(fut, None)
+                try:
+                    results[i] = (fut.result(), attempts[i], engine)
+                    continue
+                except BrokenProcessPool as e:
+                    pool_broken = True
+                    kind, err = "worker_crash", str(e)
+                except Exception as e:
+                    kind, err = "task_error", str(e)
+                handle_failure(i, kind, err)
+            if pool_broken:
+                # a worker died mid-task: every in-flight future is
+                # poisoned — respawn the pool and re-dispatch survivors
+                # without charging their retry budgets
+                flt.log_event("worker_crash", respawn=True,
+                              inflight=len(running))
+                for fut, i in list(running.items()):
+                    attempts[i] -= 1
+                    pending.append(i)
+                running.clear()
+                deadlines.clear()
+                discard_pool(kill=True)
+                continue
+            now = time.monotonic()
+            overdue = [fut for fut, dl in deadlines.items()
+                       if dl < now and not fut.done()]
+            if overdue:
+                # watchdog: the pool API can't kill one worker, so kill
+                # them all, fail the overdue tasks, and re-dispatch the
+                # innocent in-flight survivors budget-free
+                over_idx = {running[fut] for fut in overdue}
+                flt.log_event(
+                    "watchdog_kill", timeout=timeout,
+                    tasks=[f"{tasks[i][0]}|{tasks[i][1]}"
+                           for i in sorted(over_idx)])
+                discard_pool(kill=True)
+                survivors = [i for fut, i in running.items()
+                             if i not in over_idx]
+                running.clear()
+                deadlines.clear()
+                for i in survivors:
+                    attempts[i] -= 1
+                    pending.append(i)
+                for i in sorted(over_idx):
+                    handle_failure(i, "watchdog", "task exceeded "
+                                   f"{timeout}s wall clock")
+    finally:
+        discard_pool()
+    return results  # every slot is a (results, attempts, engine) triple
+
+
 def map_points(points: Sequence[SweepPoint], jobs: int = 1,
                max_lanes: int = MAX_LANES, engine: str = "auto",
-               fit_engine: Optional[str] = None) -> List[sim.SimResult]:
+               fit_engine: Optional[str] = None,
+               report=None, task_timeout: Optional[float] = None,
+               retries: Optional[int] = None) -> List[sim.SimResult]:
     """Evaluate a list of sweep points, batched and (optionally) parallel
     — the host/process fallback behind ``exp.ExecPlan`` (the bucketed
     device path is ``run_bucketed``).
@@ -449,64 +736,75 @@ def map_points(points: Sequence[SweepPoint], jobs: int = 1,
     pins the LERN fit engine inside pool workers.  Every finished point
     is written to the sim disk cache, so concurrent sweeps (and later
     cached runs) are free.  Returns results in ``points`` order.
+
+    Execution is resilient (docs/resilience.md): failing tasks retry
+    with exponential backoff (``retries``, default ``REPRO_TASK_RETRIES``)
+    and finish inline on the host engine as a last resort; a dead worker
+    (``BrokenProcessPool``) respawns the pool and re-dispatches the
+    in-flight survivors; ``task_timeout`` (default ``REPRO_TASK_TIMEOUT``,
+    0 = off) arms a per-task wall-clock watchdog.  Recovery recomputes
+    from cached artifacts, so results stay bitwise-identical to a
+    fault-free run.  ``report`` (a ``faults.RunReport``) receives
+    per-point completion records and every fault/recovery event; any
+    active fault plan (``REPRO_FAULTS`` / ``ExecPlan(faults=)``) is
+    honored.
     """
-    results, tasks, task_idxs, calib, seen_paths = _plan_tasks(
-        points, max_lanes, cache=True)
+    flt = _faults()
+    retries = TASK_RETRIES if retries is None else retries
+    timeout = TASK_TIMEOUT if task_timeout is None else task_timeout
+    with flt.activate(), flt.reporting(report):
+        results, tasks, task_idxs, task_keys, calib, seen_paths = \
+            _plan_tasks(points, max_lanes, cache=True)
 
-    if tasks:
-        _prepare_lern(tasks)
-        if jobs <= 1 or len(tasks) == 1:
-            task_results = [_group_task(t, engine) for t in tasks]
-        else:
-            import multiprocessing as mp
-            from .workloads import CONFIGS
-            ctx = mp.get_context("spawn")
-            workers = min(jobs, len(tasks))
-            # ship each task's config: runtime registrations (drift
-            # variants, ad-hoc AccelConfigs) don't survive the spawn
-            # re-import; setdefault makes statically-known ones a no-op
-            extra = {t[0]: CONFIGS[t[0]] for t in tasks}
-            with ProcessPoolExecutor(max_workers=workers, mp_context=ctx,
-                                     initializer=_worker_init,
-                                     initargs=(sim.CACHE_DIR, extra,
-                                               fit_engine)) as ex:
-                # phase 1: deadline calibration, one task per unique
-                # (config, params, dram) — otherwise every group of a
-                # config would redundantly simulate the standalone run
-                list(ex.map(_calibrate_task, calib.values()))
-                # phase 2: the groups themselves
-                task_results = list(ex.map(
-                    functools.partial(_group_task, engine=engine), tasks))
-        for idxs, rs in zip(task_idxs, task_results):
-            for idx, res in zip(idxs, rs):
-                results[idx] = res
+        if tasks:
+            _prepare_lern(tasks)
+            if jobs <= 1 or len(tasks) == 1:
+                task_results = [_run_task_inline(t, engine, retries)
+                                for t in tasks]
+            else:
+                task_results = _run_pool(tasks, calib, engine, fit_engine,
+                                         jobs, timeout, retries)
+            for idxs, keys, (rs, n_att, eng) in zip(task_idxs, task_keys,
+                                                    task_results):
+                for idx, res in zip(idxs, rs):
+                    results[idx] = res
+                for key in keys:
+                    flt.point_done(key, source="computed", engine=eng,
+                                   attempts=n_att)
 
-    _fill_twins(results, seen_paths)
+        _fill_twins(results, seen_paths)
     return results  # type: ignore[return-value]
 
 
 def run_bucketed(points: Sequence[SweepPoint], max_lanes: int = MAX_LANES,
                  devices: Optional[int] = None, cache: bool = True,
-                 pipeline: Optional[bool] = None) -> List[sim.SimResult]:
+                 pipeline: Optional[bool] = None,
+                 report=None) -> List[sim.SimResult]:
     """Bucketed twin of ``map_points``: the same cache/dedup/grouping
     front half, but every uncached group executes together through
     ``simulate_bucket`` — whole-sweep-on-device instead of a process
     farm.  ``pipeline`` forwards to the bucketed driver (None =
-    ``REPRO_BUCKET_PIPELINE``).  Returns results in ``points`` order,
-    bitwise-equal to ``map_points`` on the same points."""
-    results, tasks, task_idxs, calib, seen_paths = _plan_tasks(
-        points, max_lanes, cache=cache)
-    if tasks:
-        _prepare_lern(tasks)
-        # resolve every unique (config, params, dram) deadline once up
-        # front — same precompute phase as map_points — so per-task
-        # lane construction (and any host-batch fallback) only reads
-        # the calibration cache
-        for t in calib.values():
-            _calibrate_task(t)
-        for idxs, rs in zip(task_idxs,
-                            simulate_bucket(tasks, devices, pipeline)):
-            for idx, res in zip(idxs, rs):
-                results[idx] = res
-    _fill_twins(results, seen_paths)
+    ``REPRO_BUCKET_PIPELINE``); degradable bucket failures walk the
+    bucketed → fused → host ladder inside ``simulate_bucket``.
+    ``report`` receives per-point records + fault events.  Returns
+    results in ``points`` order, bitwise-equal to ``map_points`` on the
+    same points."""
+    flt = _faults()
+    with flt.activate(), flt.reporting(report):
+        results, tasks, task_idxs, task_keys, calib, seen_paths = \
+            _plan_tasks(points, max_lanes, cache=cache)
+        if tasks:
+            _prepare_lern(tasks)
+            # resolve every unique (config, params, dram) deadline once
+            # up front — same precompute phase as map_points — so
+            # per-task lane construction (and any host-batch fallback)
+            # only reads the calibration cache
+            for t in calib.values():
+                _calibrate_task(t)
+            bucket_rs = simulate_bucket(tasks, devices, pipeline,
+                                        task_keys=task_keys)
+            for idxs, rs in zip(task_idxs, bucket_rs):
+                for idx, res in zip(idxs, rs):
+                    results[idx] = res
+        _fill_twins(results, seen_paths)
     return results  # type: ignore[return-value]

@@ -18,6 +18,7 @@ cache / fit_engine — env vars are its defaults), four uniform registries
 mean_over, hydra-sweep/v3 serialization).  The engines underneath live
 in ``repro.core.sweep``.
 """
+from .faults import FaultPlan, FaultSpec, InjectedFault, RunReport
 from .plan import ExecPlan
 from .registry import DRAM, PARAMS, POLICIES, REGISTRIES, WORKLOADS, Registry
 from .resultset import SWEEP_SCHEMA, ResultSet
@@ -34,4 +35,5 @@ __all__ = [
     "POLICIES", "WORKLOADS", "DRAM", "PARAMS", "REGISTRIES",
     "online", "way_partition", "lrpt", "with_apm", "resolve_policy",
     "SWEEP_SCHEMA",
+    "FaultPlan", "FaultSpec", "InjectedFault", "RunReport",
 ]

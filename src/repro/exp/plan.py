@@ -29,7 +29,9 @@ from __future__ import annotations
 
 import dataclasses
 import os
-from typing import Optional
+from typing import Optional, Union
+
+from .faults import FaultPlan
 
 _ENGINES = ("auto", "host", "fused", "bucketed")
 _FIT_ENGINES = ("auto", "bucketed", "segmented")
@@ -54,6 +56,10 @@ class ExecPlan:
                 double-buffer dispatch (default: env
                 ``REPRO_BUCKET_PIPELINE``, on; ``False`` is the
                 undonated one-dispatch-at-a-time reference path)
+    faults:     deterministic fault-injection plan — a
+                :class:`repro.exp.faults.FaultPlan` or its JSON string
+                (default: env ``REPRO_FAULTS``; None = no injection).
+                Recovery is bitwise-transparent; docs/resilience.md.
     """
     engine: Optional[str] = None
     jobs: Optional[int] = None
@@ -62,6 +68,7 @@ class ExecPlan:
     fit_engine: Optional[str] = None
     max_lanes: Optional[int] = None
     pipeline: Optional[bool] = None
+    faults: Optional[Union[str, FaultPlan]] = None
 
     def __post_init__(self):
         if self.engine is not None and self.engine not in _ENGINES:
@@ -70,6 +77,10 @@ class ExecPlan:
         if self.fit_engine is not None and self.fit_engine not in _FIT_ENGINES:
             raise ValueError(f"unknown fit_engine {self.fit_engine!r} "
                              f"(expected one of {_FIT_ENGINES})")
+        if self.faults is not None and not isinstance(self.faults,
+                                                      (str, FaultPlan)):
+            raise ValueError("faults must be a FaultPlan or its JSON "
+                             f"string, got {type(self.faults).__name__}")
 
     def resolve(self) -> "ExecPlan":
         """Fill every ``None`` field from the environment defaults,
@@ -100,4 +111,6 @@ class ExecPlan:
             fit_engine=fit,
             max_lanes=(sweep.MAX_LANES if self.max_lanes is None
                        else int(self.max_lanes)),
-            pipeline=pipeline)
+            pipeline=pipeline,
+            faults=(self.faults if self.faults is not None
+                    else os.environ.get("REPRO_FAULTS")))

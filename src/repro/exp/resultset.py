@@ -43,6 +43,9 @@ class ResultSet:
             raise ValueError(f"ragged columns: { {k: len(v) for k, v in columns.items()} }")
         self._cols: Dict[str, list] = {k: list(v) for k, v in columns.items()}
         self.keys: Tuple[str, ...] = tuple(k for k in keys if k in self._cols)
+        # structured execution record (repro.exp.faults.RunReport) —
+        # attached by exp.run; summarized into the sweep doc header
+        self.run_report = None
 
     # -- construction --------------------------------------------------------
     @classmethod
@@ -150,8 +153,12 @@ class ResultSet:
                 "derived": r.get("derived"),
             }
             rows.append(row)
-        return {"schema": SWEEP_SCHEMA, "keys": list(self.keys),
-                **header, "rows": rows}
+        doc = {"schema": SWEEP_SCHEMA, "keys": list(self.keys)}
+        if self.run_report is not None:
+            doc["run_report"] = self.run_report.summary()
+        doc.update(header)
+        doc["rows"] = rows
+        return doc
 
     def to_sweep_json(self, path: str, **header) -> Dict:
         doc = self.to_sweep_doc(**header)

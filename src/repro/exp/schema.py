@@ -173,11 +173,57 @@ def validate_bench(doc: Dict) -> List[str]:
     return errs
 
 
+_MANIFEST_SCHEMA = "hydra-manifest/v1"
+_POINT_SOURCES = ("computed", "cache", "resume")
+
+
+def validate_manifest(doc: Dict) -> List[str]:
+    """Violations in a ``hydra-manifest/v1`` incremental sweep manifest
+    (repro.exp.faults.RunReport.to_doc)."""
+    errs: List[str] = []
+    if not isinstance(doc, dict):
+        return ["document is not an object"]
+    if doc.get("schema") != _MANIFEST_SCHEMA:
+        errs.append(f"schema: expected {_MANIFEST_SCHEMA!r}, "
+                    f"got {doc.get('schema')!r}")
+    n = doc.get("n_points")
+    if n is not None and not isinstance(n, numbers.Integral):
+        errs.append("n_points: expected integer or null")
+    completed = doc.get("completed")
+    if not isinstance(completed, dict):
+        errs.append("completed: expected an object")
+    else:
+        for key, rec in completed.items():
+            where = f"completed[{key!r}]"
+            if not isinstance(rec, dict):
+                errs.append(f"{where}: not an object")
+                continue
+            src = rec.get("source")
+            if src not in _POINT_SOURCES:
+                errs.append(f"{where}.source: expected one of "
+                            f"{_POINT_SOURCES}, got {src!r}")
+            eng = rec.get("engine")
+            if eng is not None and not isinstance(eng, str):
+                errs.append(f"{where}.engine: expected string or null")
+    events = doc.get("events")
+    if not isinstance(events, list):
+        errs.append("events: expected a list")
+    else:
+        for i, ev in enumerate(events):
+            if not isinstance(ev, dict) or not isinstance(ev.get("kind"),
+                                                          str):
+                errs.append(f"events[{i}]: expected an object with a "
+                            "string 'kind'")
+    return errs
+
+
 def validate(doc: Dict) -> List[str]:
     """Dispatch on the document's schema tag."""
     schema = doc.get("schema") if isinstance(doc, dict) else None
     if isinstance(schema, str) and schema.startswith(_BENCH_PREFIX):
         return validate_bench(doc)
+    if schema == _MANIFEST_SCHEMA:
+        return validate_manifest(doc)
     return validate_sweep(doc)
 
 

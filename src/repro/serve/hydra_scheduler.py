@@ -104,6 +104,7 @@ class HydraKVScheduler:
         self.keeps = 0
         self.epochs = 0
         self.refits = 0
+        self.refit_failures = 0
         self._window_turns: List[float] = []
         self._window_gaps: List[float] = []
 
@@ -127,13 +128,30 @@ class HydraKVScheduler:
 
     def _online_refit(self) -> None:
         """Refit the session-reuse clusters on the observed window and
-        swap the profile in place (the serve-side ``Lane._online_retrain``)."""
+        swap the profile in place (the serve-side ``Lane._online_retrain``).
+
+        Degrades gracefully: a refit that raises (degenerate window,
+        too-few distinct observations, injected fault) keeps serving on
+        the stale profile and bumps ``refit_failures`` — admission never
+        goes down because retraining hiccuped.  The window is kept so
+        the next boundary retries with more observations."""
         if len(self._window_turns) < self.min_refit_sessions:
             return
-        self.profile = SessionProfile.fit(
-            np.asarray(self._window_turns, np.float64),
-            np.asarray(self._window_gaps, np.float64),
-            seed=self.seed + self.refits)
+        try:
+            from repro.exp import faults
+            faults.fire("refit", key=f"e{self.epochs}")
+            profile = SessionProfile.fit(
+                np.asarray(self._window_turns, np.float64),
+                np.asarray(self._window_gaps, np.float64),
+                seed=self.seed + self.refits)
+        except Exception as e:
+            self.refit_failures += 1
+            from repro.exp import faults
+            faults.log_event("refit_failure", epochs=self.epochs,
+                             window=len(self._window_turns),
+                             error=str(e)[:200])
+            return
+        self.profile = profile
         self._window_turns, self._window_gaps = [], []
         self.refits += 1
 
@@ -161,4 +179,5 @@ class HydraKVScheduler:
         return {"evictions": self.evictions, "keeps": self.keeps,
                 "evict_rate": self.evictions / max(tot, 1),
                 "ri_th": self.ri_th, "rc_th": self.rc_th,
-                "refits": self.refits}
+                "refits": self.refits,
+                "refit_failures": self.refit_failures}

@@ -182,8 +182,8 @@ def test_exp_run_bitwise_parity_with_legacy_path(tmp_path, monkeypatch):
         assert got.epochs == want.epochs
         assert got.history == want.history
         # the row landed in the shared disk cache under the same key
-        with open(pt.cache_path(), "rb") as f:
-            cached = pickle.load(f)
+        cached = sim.cache_load(pt.cache_path())
+        assert cached is not sim.MISS
         assert cached.summary() == got.summary()
 
 

@@ -105,11 +105,12 @@ def test_map_points_order_cache_and_dedup(tmp_path, monkeypatch):
     rs = sweep.map_points(pts, jobs=1)
     assert [r.policy for r in rs] == ["fifo-nb", "arp-nb", "fifo-nb"]
     assert rs[0].summary() == rs[2].summary()
-    # results landed in the sim disk cache as complete, re-readable rows
+    # results landed in the sim disk cache as complete, re-readable
+    # envelope entries (sim.cache_load verifies magic + crc)
     for pt, r in zip(pts, rs):
         assert os.path.exists(pt.cache_path())
-        with open(pt.cache_path(), "rb") as f:
-            c = pickle.load(f)
+        c = sim.cache_load(pt.cache_path())
+        assert c is not sim.MISS
         assert c.summary() == r.summary()
 
 
@@ -161,8 +162,8 @@ def test_atomic_dump_concurrent_writers(tmp_path):
         try:
             for i in range(100):
                 sim._atomic_dump({"w": w, "i": i}, path)
-                with open(path, "rb") as f:
-                    obj = pickle.load(f)   # must always be a complete object
+                obj = sim.cache_load(path)  # always a complete envelope
+                assert obj is not sim.MISS
                 assert set(obj) == {"w", "i"}
         except Exception as e:  # noqa: BLE001 — collected for the assert
             errors.append(e)
