@@ -1,0 +1,153 @@
+"""``bench-serve`` — multi-tenant trace-replay serving throughput.
+
+The perf-trajectory artifact for the serving harness (schema
+hydra-bench-serve/v1): per (offered load, residency knobs) cell one
+entry with the sustained serving numbers — ``sessions_per_kstep``
+(finished sessions per thousand replay steps, the trend-gated
+throughput metric), ``p99_wait_steps`` (admission-queue p99 from the
+integer wait histogram), ``dmr`` (deadline-miss rate over completed
+turns) and ``peak_concurrent`` (sessions simultaneously in flight).
+Every cell is one frozen :class:`repro.serve.ServeSpec` driven through
+``serve.run`` on the batched ``lax.scan`` replay engine; the full
+hydra-serve/v1 row artifact (``serve_replay.json``) rides along so each
+bench entry is re-runnable from its embedded spec.
+
+The load axis crosses Poisson offered load (sessions/step) with the two
+ends of the residency spectrum: ``kv-online`` (paper residency rule +
+online profile refits — the entries assert ``refits >= 1`` so the
+retrain path is genuinely exercised) against the ``evict-all``
+baseline.  Each kv-online entry carries ``resid_dmr_delta`` — evict-all
+DMR minus hydra DMR at the same load — gated by check_trend against an
+absolute > 0 floor: the residency rule must buy real deadline headroom,
+not merely track a baseline.
+
+Unlike bench_sim/bench_lern this artifact's gated metrics are integer-
+derived replay counters, not wall-clock — bitwise-deterministic per
+(spec, seed), which the module asserts by replaying the highest-load
+cell twice and comparing every counter and both histograms exactly
+(``wall_s`` is recorded for human eyes only).
+"""
+import json
+import time
+
+import numpy as np
+
+from repro import serve
+from repro.exp import ExecPlan, ResultSet
+
+from .common import BENCH_SERVE_PATH, SERVE_REPLAY_PATH, Suite, emit
+
+RATES = (2.0, 8.0)              # offered load, mean session arrivals/step
+KNOBS = ("kv-online", "evict-all")
+SESSIONS = {"smoke": 2400, "quick": 2400, "full": 6000}
+SLOTS = 128
+MAX_STEPS = 4096
+# CI acceptance: the replay must genuinely be serving at scale — the
+# high-load cells hold >= this many sessions in flight at once
+MIN_PEAK_CONCURRENT = 1000
+
+
+def _base_trace(suite: Suite) -> serve.TraceSpec:
+    return serve.TraceSpec(sessions=SESSIONS[suite.preset],
+                           arrival="poisson",
+                           drift=serve.MixDrift(period=4, strength=0.5),
+                           seed=0)
+
+
+def _specs(suite: Suite):
+    """rate-outer x knobs-inner cross product (serve.grid row-major)."""
+    return serve.grid(trace=_base_trace(suite), rate=list(RATES),
+                      knobs=list(KNOBS), slots=SLOTS, max_steps=MAX_STEPS)
+
+
+def _bitwise_equal(a, b) -> bool:
+    return (a.counters == b.counters
+            and np.array_equal(a.wait_hist, b.wait_hist)
+            and np.array_equal(a.lat_hist, b.lat_hist))
+
+
+def run(suite: Suite):
+    rows = []
+    entries = []
+    plan = ExecPlan(engine=suite.engine, cache=False)
+    specs = _specs(suite)
+    by_cell = {}
+    all_rows = []
+    keys = None
+    for spec in specs:
+        t0 = time.time()
+        rs = serve.run(spec, plan=plan)
+        wall = time.time() - t0
+        row = rs.one()
+        keys = keys or rs.keys
+        all_rows.extend(rs.to_rows())
+        rate, kn = spec.trace.rate, row["knobs"]
+        by_cell[(rate, kn)] = (spec, row)
+        cfg = f"{spec.trace.arrival}-r{rate:g}"
+        rows.append(emit(
+            f"bench_serve/{cfg}-{kn}", t0,
+            {"sessions_per_kstep": row["sessions_per_kstep"],
+             "p99_wait_steps": row["p99_wait_steps"], "dmr": row["dmr"],
+             "peak_concurrent": row["peak_concurrent"],
+             "refits": row["refits"]}))
+        entries.append({
+            "config": cfg, "knobs": kn,
+            "sessions": spec.trace.sessions, "slots": spec.slots,
+            "rate": rate, "engine": row["engine"],
+            "steps": row["steps"],
+            "peak_concurrent": row["peak_concurrent"],
+            "sessions_per_kstep": round(row["sessions_per_kstep"], 4),
+            "p99_wait_steps": row["p99_wait_steps"],
+            "p99_latency_steps": row["p99_latency_steps"],
+            "dmr": round(row["dmr"], 6),
+            "throughput_tok_per_step": round(
+                row["throughput_tok_per_step"], 4),
+            "reprefills": row["reprefills"],
+            "refits": row["refits"],
+            "wall_s": round(wall, 4)})
+
+    # residency headroom: evict-all DMR minus hydra DMR per load point,
+    # attached to the kv-online entry (check_trend's absolute floor)
+    for e in entries:
+        if e["knobs"] == "kv-online":
+            evict = by_cell[(e["rate"], "evict-all")][1]
+            e["resid_dmr_delta"] = round(evict["dmr"] - e["dmr"], 6)
+
+    # -- acceptance: serving at scale, retrain live, replay deterministic
+    peak = max(e["peak_concurrent"] for e in entries)
+    assert peak >= MIN_PEAK_CONCURRENT, \
+        f"peak concurrency {peak} < {MIN_PEAK_CONCURRENT} sessions"
+    for e in entries:
+        if e["knobs"] == "kv-online":
+            assert e["refits"] >= 1, \
+                f"{e['config']}: kv-online replay fired no online refits"
+    hot_spec, hot_row = by_cell[(max(RATES), "kv-online")]
+    rerun = serve.run(hot_spec, plan=plan).one()
+    assert _bitwise_equal(hot_row["result"], rerun["result"]), \
+        "serve replay is not deterministic: two runs of the same spec " \
+        "disagree on counters/histograms"
+    assert hot_row["engine"] == rerun["engine"]
+
+    # the hydra-serve/v1 row artifact: every bench entry's full spec +
+    # metrics, re-runnable via serve.ServeSpec.from_dict
+    combined = ResultSet.from_records(all_rows, keys=keys)
+    doc = serve.to_serve_doc(combined, preset=suite.preset,
+                             source="bench_serve")
+    with open(SERVE_REPLAY_PATH, "w") as f:
+        json.dump(doc, f, indent=1)
+
+    geo_sps = float(np.exp(np.mean(np.log(
+        [e["sessions_per_kstep"] for e in entries]))))
+    deltas = [e["resid_dmr_delta"] for e in entries
+              if "resid_dmr_delta" in e]
+    with open(BENCH_SERVE_PATH, "w") as f:
+        json.dump({"schema": "hydra-bench-serve/v1",
+                   "geomean_sessions_per_kstep": round(geo_sps, 4),
+                   "min_resid_dmr_delta": min(deltas),
+                   "peak_concurrent": peak,
+                   "entries": entries}, f, indent=1)
+    print(f"# wrote {len(entries)} entries to {BENCH_SERVE_PATH} "
+          f"(geomean {geo_sps:.1f} sessions/kstep, peak {peak} "
+          f"concurrent, min resid_dmr_delta {min(deltas):.4g})",
+          flush=True)
+    return rows

@@ -46,6 +46,12 @@ _PROFILES = {
                         ("speedup", "pps_speedup")),
     "hydra-bench-lern": (("config", "accesses"),
                          ("speedup", "seg_speedup")),
+    # bench-serve entries are keyed per (load point, knobs, footprint);
+    # the gated sessions_per_kstep is integer-derived from the replay
+    # counters, so its trend ratio is noise-free (tolerance covers only
+    # deliberate footprint drift, not runner jitter)
+    "hydra-bench-serve": (("config", "knobs", "sessions", "slots"),
+                          ("sessions_per_kstep",)),
     "hydra-sweep": (("name",), ("speedup",)),
 }
 # absolute geomean floors, checked against the CURRENT run alone (no
@@ -58,6 +64,11 @@ _PROFILES = {
 # here even if every trend ratio holds.
 _ABS_FLOORS = {
     "hydra-bench-sim": {"pps_speedup": 1.0},
+    # kv-online bench-serve entries carry resid_dmr_delta (evict-all DMR
+    # minus hydra DMR at the same offered load): the residency rule must
+    # produce a real deadline-miss separation from the evict-everything
+    # baseline, not merely track it
+    "hydra-bench-serve": {"resid_dmr_delta": 1e-3},
     "hydra-sweep": {"sched_dmr_delta": 1e-3},
 }
 

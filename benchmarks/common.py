@@ -29,10 +29,14 @@ SMOKE_CONFIGS = ("config1",)
 # metric subset reported as a paper bar (SimResult.summary() keys)
 SUMMARY_METRICS = ("ipc", "dmr", "core_br", "accel_br")
 
-# perf-trajectory artifacts: lern-train (fig05_clustering) and the main
-# simulation path host-vs-fused (bench_sim)
+# perf-trajectory artifacts: lern-train (fig05_clustering), the main
+# simulation path host-vs-fused (bench_sim) and the trace-replay serving
+# harness (bench_serve, which also writes the hydra-serve/v1 row
+# artifact serve_replay.json)
 BENCH_LERN_PATH = "bench_lern.json"
 BENCH_SIM_PATH = "bench_sim.json"
+BENCH_SERVE_PATH = "bench_serve.json"
+SERVE_REPLAY_PATH = "serve_replay.json"
 
 _FOOTPRINT = {"smoke": (SMOKE_MIXES, SMOKE_CONFIGS),
               "quick": (QUICK_MIXES, QUICK_CONFIGS),

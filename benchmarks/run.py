@@ -4,6 +4,7 @@
                                             [--only fig12,...] [--jobs N]
                                             [--engine auto|host|fused|bucketed]
                                             [--out sweep.json]
+                                            [--resume] [--manifest M.json]
 
 A thin CLI over the declarative experiment API: ``--preset`` resolves a
 registered params preset + mix/config footprint into a frozen
@@ -24,10 +25,20 @@ training (the ``lern_train/*`` rows) and writes ``bench_lern.json``
 device-resident training pipeline; ``bench_sim`` does the same for the
 main simulation path (``bench_sim.json``, schema hydra-bench-sim/v3:
 host ``drive_lane`` vs the fused epoch engine, plus the sweep-level
-map-vs-bucketed points/sec entries).
+map-vs-bucketed points/sec entries).  ``bench_serve`` runs the
+multi-tenant trace-replay serving harness (``bench_serve.json``, schema
+hydra-bench-serve/v1) and also writes the ``serve_replay.json``
+hydra-serve/v1 row artifact.
+
+``--resume`` re-opens the incremental ``hydra-manifest/v1`` ledger a
+prior (killed) invocation left next to ``--out`` and re-executes only
+the unfinished sweep points — completed ones load from the result cache
+and are recorded with ``source="resume"`` (exp.run's PR-9 resume path,
+wired through the ``REPRO_MANIFEST``/``REPRO_RESUME`` environment).
 """
 import argparse
 import importlib
+import os
 import sys
 import time
 
@@ -36,7 +47,7 @@ MODULES = [
     "tab_lern_accuracy", "fig10_policies", "fig11_access_rate",
     "fig12_configs", "fig14_occupancy", "fig15_afr_asth", "fig16_llc_sweep",
     "fig17_ddr", "fig18_waypart", "fig19_lrpt", "fig20_ship", "tab_params",
-    "roofline", "bench_sim",
+    "roofline", "bench_sim", "bench_serve",
 ]
 
 
@@ -62,9 +73,29 @@ def main() -> None:
                          "process pool otherwise")
     ap.add_argument("--out", default="sweep.json",
                     help="machine-readable results artifact path")
+    ap.add_argument("--manifest", default=None,
+                    help="incremental hydra-manifest/v1 ledger path "
+                         "(default: <out>.manifest.json when --resume "
+                         "is given)")
+    ap.add_argument("--resume", action="store_true",
+                    help="re-open the manifest from a prior (killed) "
+                         "invocation: every sweep skips its finished "
+                         "points, loading them from the result cache")
     args = ap.parse_args()
     preset = ("full" if args.full else
               "smoke" if args.smoke else args.preset)
+
+    # the manifest/resume channel to every figure module's exp.run /
+    # serve.run is the environment (the modules never thread manifest
+    # arguments) — the runner reads REPRO_MANIFEST + REPRO_RESUME
+    manifest = args.manifest or (args.out + ".manifest.json"
+                                 if args.resume else None)
+    if args.resume and not os.path.exists(manifest):
+        ap.error(f"--resume: no prior manifest at {manifest!r} "
+                 "(run once without --resume first, or pass --manifest)")
+    if manifest:
+        os.environ["REPRO_MANIFEST"] = manifest
+        os.environ["REPRO_RESUME"] = "1" if args.resume else "0"
 
     from repro.exp import ResultSet
     from . import common

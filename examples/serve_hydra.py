@@ -18,8 +18,9 @@ import numpy as np
 
 from repro.configs import ARCHS
 from repro.models import lm
-from repro.serve import HydraKVScheduler, Request, ServeEngine
-from repro.serve.hydra_scheduler import SessionProfile
+from repro.serve import (HydraKVScheduler, SchedulerKnobs,
+                        SessionProfile, online, resolve_knobs)
+from repro.serve.engine import Request, ServeEngine
 
 
 def make_requests(n=12):
@@ -43,14 +44,15 @@ def main():
         gaps=np.array([2, 4, 8, 16, 64, 256, 400, 800] * 8))
 
     for name, sched in (
-            ("hydra-kv", HydraKVScheduler(token_budget=2048,
-                                          deadline_tokens=128,
-                                          profile=profile)),
-            ("hydra-kv-ol", HydraKVScheduler(token_budget=2048,
-                                             deadline_tokens=128,
-                                             profile=profile,
-                                             retrain_period=2,
-                                             min_refit_sessions=4)),
+            ("hydra-kv", HydraKVScheduler(
+                SchedulerKnobs(token_budget=2048, deadline_tokens=128),
+                profile=profile)),
+            # ("kv-default", online(2)) == refit every 2 scheduler epochs
+            ("hydra-kv-ol", HydraKVScheduler(
+                resolve_knobs((SchedulerKnobs(token_budget=2048,
+                                              deadline_tokens=128),
+                               online(2, min_sessions=4))),
+                profile=profile)),
             ("keep-all", None)):
         eng = ServeEngine(cfg, params, slots=3, s_max=96, scheduler=sched)
         out = eng.run(make_requests(), max_steps=800)

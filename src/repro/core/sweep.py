@@ -489,6 +489,35 @@ def _group_task(task, engine: str = "auto") -> List[sim.SimResult]:
     return results
 
 
+class TaskError(RuntimeError):
+    """Picklable worker-task failure carrying the worker's buffered
+    fault events (quarantines, injections, retries) back to the parent,
+    so a failed task still contributes its fault log to the RunReport."""
+
+    def __init__(self, cause: str, msg: str, events: List[Dict]):
+        super().__init__(f"{cause}: {msg}")
+        self.cause = cause
+        self.events = events
+
+    def __reduce__(self):
+        return (TaskError, (self.cause,
+                            str(self).split(": ", 1)[-1], self.events))
+
+
+def _pool_task(task, engine: str = "auto"):
+    """Spawn-pool wrapper around :func:`_group_task`: workers have no
+    active RunReport, so their fault events buffer locally — drain the
+    buffer and ship it with the result (or inside :class:`TaskError`),
+    letting the parent fold worker-side events into its report."""
+    flt = _faults()
+    try:
+        results = _group_task(task, engine=engine)
+    except Exception as e:
+        raise TaskError(type(e).__name__, str(e)[:500],
+                        flt.drain_events()) from None
+    return results, flt.drain_events()
+
+
 def _plan_tasks(points: Sequence[SweepPoint], max_lanes: int,
                 cache: bool = True):
     """The shared front half of ``map_points``/``run_bucketed``: cache
@@ -658,7 +687,7 @@ def _run_pool(tasks, calib, engine: str, fit_engine: Optional[str],
             while pending and len(running) < workers:
                 i = pending.pop(0)
                 attempts[i] += 1
-                fut = ex.submit(functools.partial(_group_task,
+                fut = ex.submit(functools.partial(_pool_task,
                                                   engine=engine), tasks[i])
                 running[fut] = i
                 if timeout > 0:
@@ -670,11 +699,16 @@ def _run_pool(tasks, calib, engine: str, fit_engine: Optional[str],
                 i = running.pop(fut)
                 deadlines.pop(fut, None)
                 try:
-                    results[i] = (fut.result(), attempts[i], engine)
+                    rs, wevents = fut.result()
+                    flt.merge_events(wevents)
+                    results[i] = (rs, attempts[i], engine)
                     continue
                 except BrokenProcessPool as e:
                     pool_broken = True
                     kind, err = "worker_crash", str(e)
+                except TaskError as e:
+                    flt.merge_events(e.events)
+                    kind, err = "task_error", str(e)
                 except Exception as e:
                     kind, err = "task_error", str(e)
                 handle_failure(i, kind, err)

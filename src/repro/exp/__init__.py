@@ -20,11 +20,16 @@ in ``repro.core.sweep``.
 """
 from .faults import FaultPlan, FaultSpec, InjectedFault, RunReport
 from .plan import ExecPlan
-from .registry import DRAM, PARAMS, POLICIES, REGISTRIES, WORKLOADS, Registry
+from .registry import (DRAM, PARAMS, POLICIES, REGISTRIES, SERVE, WORKLOADS,
+                       Registry)
 from .resultset import SWEEP_SCHEMA, ResultSet
 from .runner import run, run_points
 from .spec import (ExperimentSpec, Point, lrpt, online, resolve_policy,
                    way_partition, with_apm)
+
+# populate the serve registry (repro.serve.knobs registers its presets on
+# import; kept last so every submodule above is fully bound first)
+from repro.serve import knobs as _serve_knobs  # noqa: E402,F401
 
 # (the hydra-sweep/v3 validator lives in repro.exp.schema, deliberately not
 # imported here so `python -m repro.exp.schema` runs without a runpy warning)
@@ -32,7 +37,7 @@ from .spec import (ExperimentSpec, Point, lrpt, online, resolve_policy,
 __all__ = [
     "ExecPlan", "ExperimentSpec", "Point", "ResultSet", "Registry",
     "run", "run_points",
-    "POLICIES", "WORKLOADS", "DRAM", "PARAMS", "REGISTRIES",
+    "POLICIES", "WORKLOADS", "DRAM", "PARAMS", "SERVE", "REGISTRIES",
     "online", "way_partition", "lrpt", "with_apm", "resolve_policy",
     "SWEEP_SCHEMA",
     "FaultPlan", "FaultSpec", "InjectedFault", "RunReport",

@@ -28,6 +28,10 @@ Sites instrumented today (see docs/resilience.md for the full model):
 ``fused``           per-group fused replay (second ladder rung)
 ``bucket_overflow`` forces the bucketed driver's freeze/demote machinery
 ``refit``           ``HydraKVScheduler._online_refit``
+``serve_step``      once per scheduler epoch in every serve engine
+                    (batched + host replay, the oracle ServeEngine)
+``serve_admission`` serve admission — per admitting step on the host
+                    paths, per super-step dispatch on the batched lanes
 ==================  =====================================================
 
 Kinds: ``raise`` / ``resource`` (exceptions — ``resource`` mimics an
@@ -42,9 +46,12 @@ the active :class:`RunReport` — the object ``exp.run`` attaches to its
 ResultSet and persists incrementally as the sweep manifest
 (``hydra-manifest/v1``), which ``exp.run(resume=True)`` reads to skip
 finished points.  Events fired inside pool *workers* land in that
-process's local buffer and are not propagated; the parent records the
-observable outcome instead (``worker_crash``, ``task_error``,
-``watchdog_kill``).
+process's local buffer and ride back to the parent with the task result
+(or inside ``sweep.TaskError`` on failure), where :func:`merge_events`
+folds them into the parent report tagged ``origin="worker"``; only a
+worker that dies outright (``crash`` kind, watchdog kill) loses its
+buffer, and the parent records the observable outcome instead
+(``worker_crash``, ``task_error``, ``watchdog_kill``).
 """
 from __future__ import annotations
 
@@ -432,7 +439,19 @@ def point_done(key: str, source: str, **kw) -> None:
 
 
 def drain_events() -> List[Dict]:
-    """Pop and return the unattached event buffer (test helper)."""
+    """Pop and return the unattached event buffer — how pool workers
+    (which have no active report) hand their fault log back to the
+    parent, and a test helper."""
     out = list(_BUFFER)
     _BUFFER.clear()
     return out
+
+
+def merge_events(events: List[Dict], origin: str = "worker") -> None:
+    """Fold another process's drained event buffer into the active
+    report (or this process's buffer), tagging each with its origin."""
+    for ev in events:
+        ev = dict(ev)
+        kind = ev.pop("kind", "event")
+        ev.setdefault("origin", origin)
+        log_event(kind, **ev)

@@ -106,6 +106,16 @@ def _check_params(name: str, p) -> SimParams:
     return p
 
 
+def _check_knobs(name: str, k):
+    # lazy: repro.serve.knobs imports this module to register its presets,
+    # so the class can only be named here at validation time
+    from repro.serve.knobs import SchedulerKnobs
+    if not isinstance(k, SchedulerKnobs):
+        raise TypeError(f"serve {name!r}: expected SchedulerKnobs, "
+                        f"got {type(k)}")
+    return k
+
+
 POLICIES: Registry = Registry("policy", backing=policies_mod.POLICIES,
                               validate=_check_policy)
 WORKLOADS: Registry = Registry("workload", backing=workloads_mod.CONFIGS,
@@ -113,6 +123,11 @@ WORKLOADS: Registry = Registry("workload", backing=workloads_mod.CONFIGS,
 DRAM: Registry = Registry("dram", backing=dram_mod.MODELS,
                           validate=_check_dram)
 PARAMS: Registry = Registry("params", validate=_check_params)
+# serve-side residency policies (SchedulerKnobs presets).  The entries
+# are registered by ``repro.serve.knobs`` on import — ``repro.exp``
+# imports it last thing, so the registry is populated either way the
+# packages are first reached.
+SERVE: Registry = Registry("serve", validate=_check_knobs)
 
 # SimParams presets.  ``quick``/``full`` share the benchmark suite's
 # historical BASE_PARAMS values (the quick/full difference is the mix and
@@ -128,5 +143,5 @@ PARAMS.register("smoke", dataclasses.replace(
 
 REGISTRIES: Dict[str, Registry] = {
     "policy": POLICIES, "workload": WORKLOADS,
-    "dram": DRAM, "params": PARAMS,
+    "dram": DRAM, "params": PARAMS, "serve": SERVE,
 }

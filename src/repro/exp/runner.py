@@ -95,7 +95,8 @@ def run_points(points: Sequence[Point], plan: Optional[ExecPlan] = None,
 
 
 def run(spec: SpecLike, plan: Optional[ExecPlan] = None, *,
-        manifest: Optional[str] = None, resume: bool = False) -> ResultSet:
+        manifest: Optional[str] = None,
+        resume: Optional[bool] = None) -> ResultSet:
     """Expand ``spec`` (one ExperimentSpec or several, concatenated) and
     evaluate every point under ``plan``; returns a columnar ResultSet
     whose key columns are the spec's axes and whose ``result`` column
@@ -103,7 +104,10 @@ def run(spec: SpecLike, plan: Optional[ExecPlan] = None, *,
 
     ``manifest`` (default: env ``REPRO_MANIFEST``) names an incremental
     sweep manifest (``hydra-manifest/v1``) updated after every finished
-    point and fault event.  ``resume=True`` re-opens a prior manifest
+    point and fault event.  ``resume`` defaults from env
+    ``REPRO_RESUME`` (``benchmarks.run --resume`` sets both env vars so
+    every figure module's ``exp.run`` picks the prior manifest up
+    without threading arguments).  ``resume=True`` re-opens a prior manifest
     and re-executes only the unfinished points — the completed ones load
     from the result cache (a missing or corrupt cache entry simply
     recomputes) and are recorded with ``source="resume"``.  Requires
@@ -112,6 +116,9 @@ def run(spec: SpecLike, plan: Optional[ExecPlan] = None, *,
     ResultSet as ``rs.run_report`` and summarized in its sweep doc."""
     if manifest is None:
         manifest = os.environ.get("REPRO_MANIFEST") or None
+    if resume is None:
+        resume = os.environ.get("REPRO_RESUME", "").lower() \
+            not in ("", "0", "false")
     if resume:
         if not manifest:
             raise ValueError("resume=True requires a manifest path "

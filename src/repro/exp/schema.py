@@ -1,4 +1,5 @@
-"""Artifact validation: hydra-sweep/v3 and the hydra-bench-* family.
+"""Artifact validation: hydra-sweep/v3, hydra-serve/v1 and the
+hydra-bench-* family.
 
 Dependency-free structural validator (the container has no jsonschema)
 used by CI to gate the uploaded artifacts::
@@ -7,10 +8,13 @@ used by CI to gate the uploaded artifacts::
 
 Dispatches on each document's ``schema`` tag — ``hydra-sweep/v3`` rows
 are validated in full (including the point's ``dram_kind`` tag that
-distinguishes fluid from scheduled DRAM results); ``hydra-bench-*``
-perf-trajectory artifacts (bench_lern.json, bench_sim.json) get
-entry-level checks, with the bench-sim entry shape pinned exactly.
-Exits non-zero with a per-file error list on any violation.
+distinguishes fluid from scheduled DRAM results); ``hydra-serve/v1``
+trace-replay serving rows are validated in full (every row embeds its
+``ServeSpec`` dump, so ``serve.ServeSpec.from_dict`` can re-run it);
+``hydra-bench-*`` perf-trajectory artifacts (bench_lern.json,
+bench_sim.json, bench_serve.json) get entry-level checks, with the
+bench-sim and bench-serve entry shapes pinned exactly.  Exits non-zero
+with a per-file error list on any violation.
 """
 from __future__ import annotations
 
@@ -90,6 +94,59 @@ def validate_sweep(doc: Dict) -> List[str]:
     return errs
 
 
+# serve replay artifact (repro.serve.to_serve_doc) — rows carry the
+# coordinate axes, the per-row replay metrics and the full frozen
+# ServeSpec dump (trace + resolved knobs), so any row is re-runnable via
+# serve.ServeSpec.from_dict without the producing module
+_SERVE_SCHEMA = "hydra-serve/v1"
+_SERVE_POINT_REQUIRED = ("trace", "knobs", "slots", "max_steps",
+                         "admission", "profile_sessions")
+
+
+def validate_serve(doc: Dict) -> List[str]:
+    """All schema violations in ``doc`` (empty == valid hydra-serve/v1)."""
+    errs: List[str] = []
+    if not isinstance(doc, dict):
+        return ["document is not an object"]
+    if doc.get("schema") != _SERVE_SCHEMA:
+        errs.append(f"schema: expected {_SERVE_SCHEMA!r}, "
+                    f"got {doc.get('schema')!r}")
+    keys = doc.get("keys")
+    if not isinstance(keys, list) or not all(isinstance(k, str)
+                                             for k in keys):
+        errs.append("keys: expected a list of strings")
+    rows = doc.get("rows")
+    if not isinstance(rows, list):
+        return errs + ["rows: expected a list"]
+    for i, row in enumerate(rows):
+        where = f"rows[{i}]"
+        if not isinstance(row, dict):
+            errs.append(f"{where}: not an object")
+            continue
+        if not isinstance(row.get("axes"), dict):
+            errs.append(f"{where}.axes: expected an object")
+        eng = row.get("engine")
+        if eng is not None and not isinstance(eng, str):
+            errs.append(f"{where}.engine: expected string or null")
+        point = row.get("point")
+        if not isinstance(point, dict):
+            errs.append(f"{where}.point: expected an object (the row's "
+                        "ServeSpec dump)")
+        else:
+            for k in _SERVE_POINT_REQUIRED:
+                if k not in point:
+                    errs.append(f"{where}.point: missing {k!r}")
+            for k in ("trace", "knobs"):
+                if k in point and not isinstance(point[k], dict):
+                    errs.append(f"{where}.point.{k}: expected an object")
+        metrics = row.get("metrics")
+        if not isinstance(metrics, dict) or not all(
+                isinstance(v, numbers.Real) or v is None
+                for v in metrics.values()):
+            errs.append(f"{where}.metrics: expected an object of numbers")
+    return errs
+
+
 _BENCH_PREFIX = "hydra-bench-"
 # bench-sim v3: entries are tagged by kind — "engine" rows carry the
 # host-vs-fused epochs/sec pair, "sweep" rows the map-vs-bucketed
@@ -113,6 +170,17 @@ _BENCH_LERN_SCHEMA = "hydra-bench-lern/v3"
 _BENCH_LERN_NUMERIC = ("host_s", "device_s", "bucketed_fit_s",
                        "segmented_fit_s", "speedup", "seg_speedup",
                        "accesses", "layers")
+# bench-serve v1: sustained serving trajectory per (load point, knobs) —
+# every entry carries the deterministic replay counters (the trend gate
+# ratios ``sessions_per_kstep``, integer-derived and thus noise-free),
+# plus wall_s for human eyes; hydra entries additionally carry
+# ``resid_dmr_delta`` (evict-all DMR minus hydra DMR at the same load),
+# the absolute floor asserting the residency rule buys real deadline
+# headroom
+_BENCH_SERVE_SCHEMA = "hydra-bench-serve/v1"
+_BENCH_SERVE_NUMERIC = ("sessions", "slots", "rate", "steps",
+                        "peak_concurrent", "sessions_per_kstep",
+                        "p99_wait_steps", "dmr", "reprefills", "wall_s")
 
 
 def validate_bench(doc: Dict) -> List[str]:
@@ -132,11 +200,16 @@ def validate_bench(doc: Dict) -> List[str]:
         errs.append(f"schema: bench-sim writers must emit "
                     f"{_BENCH_SIM_SCHEMA!r} (got {schema!r}; v2 entries "
                     "lack the per-phase timing split on sweep rows)")
+    if schema.startswith("hydra-bench-serve") \
+            and schema != _BENCH_SERVE_SCHEMA:
+        errs.append(f"schema: bench-serve writers must emit "
+                    f"{_BENCH_SERVE_SCHEMA!r} (got {schema!r})")
     entries = doc.get("entries")
     if not isinstance(entries, list) or not entries:
         return errs + ["entries: expected a non-empty list"]
     is_sim = schema == _BENCH_SIM_SCHEMA
     is_lern = schema == _BENCH_LERN_SCHEMA
+    is_serve = schema == _BENCH_SERVE_SCHEMA
     n_sweep = 0
     for i, e in enumerate(entries):
         where = f"entries[{i}]"
@@ -167,6 +240,12 @@ def validate_bench(doc: Dict) -> List[str]:
             for k in _BENCH_LERN_NUMERIC:
                 if not isinstance(e.get(k), numbers.Real):
                     errs.append(f"{where}.{k}: expected a number")
+        if is_serve:
+            for k in _BENCH_SERVE_NUMERIC:
+                if not isinstance(e.get(k), numbers.Real):
+                    errs.append(f"{where}.{k}: expected a number")
+            if not isinstance(e.get("knobs"), str):
+                errs.append(f"{where}.knobs: expected string")
     if is_sim and not n_sweep:
         errs.append("entries: bench-sim/v3 requires at least one "
                     "kind='sweep' points/sec entry")
@@ -174,7 +253,9 @@ def validate_bench(doc: Dict) -> List[str]:
 
 
 _MANIFEST_SCHEMA = "hydra-manifest/v1"
-_POINT_SOURCES = ("computed", "cache", "resume")
+# "dedup" marks a serve.run cell served from the in-process memo (an
+# identical spec earlier in the same run)
+_POINT_SOURCES = ("computed", "cache", "resume", "dedup")
 
 
 def validate_manifest(doc: Dict) -> List[str]:
@@ -224,6 +305,8 @@ def validate(doc: Dict) -> List[str]:
         return validate_bench(doc)
     if schema == _MANIFEST_SCHEMA:
         return validate_manifest(doc)
+    if schema == _SERVE_SCHEMA:
+        return validate_serve(doc)
     return validate_sweep(doc)
 
 

@@ -10,7 +10,8 @@ import numpy as np
 
 from repro.configs import get_arch
 from repro.models import lm
-from repro.serve import HydraKVScheduler, Request, ServeEngine
+from repro.serve import HydraKVScheduler, SchedulerKnobs
+from repro.serve.engine import Request, ServeEngine
 
 
 def main() -> None:
@@ -24,7 +25,8 @@ def main() -> None:
     cfg = get_arch(args.arch).reduced()
     params = lm.init_params(jax.random.PRNGKey(0), cfg)
     sched = None if args.no_hydra else HydraKVScheduler(
-        token_budget=4096, deadline_tokens=args.max_new * 8)
+        SchedulerKnobs(token_budget=4096,
+                       deadline_tokens=args.max_new * 8))
     eng = ServeEngine(cfg, params, slots=args.slots, s_max=128,
                       scheduler=sched)
     rng = np.random.default_rng(0)

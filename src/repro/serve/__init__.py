@@ -1,2 +1,38 @@
-from .engine import Request, ServeEngine  # noqa: F401
-from .hydra_scheduler import HydraKVScheduler  # noqa: F401
+"""Multi-tenant trace-replay serving harness (DESIGN.md §2c at scale).
+
+Public surface (PR-10 serve API redesign) — mirrors ``repro.exp``:
+
+* :class:`TraceSpec` / :func:`generate` — seeded session-trace workloads
+  (Poisson/bursty arrivals, heavy-tailed turns/gaps, :class:`MixDrift`).
+* :class:`SchedulerKnobs` / :func:`resolve_knobs` / :class:`online` —
+  the frozen configuration of :class:`HydraKVScheduler`; named presets
+  live in the ``repro.exp.SERVE`` registry.
+* :class:`ServeSpec` / :func:`grid` / :func:`run` — declarative cells
+  evaluated under an ``exp.ExecPlan``, returning a columnar ResultSet
+  with **hydra-serve/v1** (de)serialization.
+* :func:`replay` / :class:`ReplayResult` — the engine pair underneath
+  (batched ``lax.scan`` lanes vs. the sequential host oracle,
+  bitwise-identical).
+
+The token-by-token model-executing :class:`~repro.serve.engine.\
+ServeEngine` is deliberately *not* re-exported: it is the internal
+oracle behind this layer (import it from ``repro.serve.engine`` when
+validating against real decode steps).
+"""
+from .api import (SERVE_SCHEMA, ServeSpec, from_serve_doc, grid, run,
+                  to_serve_doc)
+from .hydra_scheduler import HydraKVScheduler, SessionProfile
+from .knobs import (SchedulerKnobs, knobs_name, online, resolve_knobs)
+from .replay import ReplayResult, classify_sessions, replay
+from .trace import (MixDrift, SessionTrace, TraceSpec, generate,
+                    profile_features)
+
+__all__ = [
+    "SERVE_SCHEMA", "ServeSpec", "grid", "run",
+    "to_serve_doc", "from_serve_doc",
+    "SchedulerKnobs", "online", "resolve_knobs", "knobs_name",
+    "HydraKVScheduler", "SessionProfile",
+    "TraceSpec", "MixDrift", "SessionTrace", "generate",
+    "profile_features",
+    "ReplayResult", "replay", "classify_sessions",
+]

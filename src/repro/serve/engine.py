@@ -7,6 +7,15 @@ KV stays resident (instant next turn) or is evicted (next turn pays a
 re-prefill).  Deadlines are per-request token-latency budgets; the engine
 reports throughput + deadline miss rate — the serving analogue of the
 paper's (IPC, DMR) pair.
+
+This engine is an **internal oracle** (PR-10 serve API redesign): it
+runs a real JAX model token by token, so it is the ground truth the
+trace-replay layer is checked against, but it is not the public
+configuration surface.  Experiments go through ``serve.ServeSpec`` +
+``serve.run`` (``repro.serve.api``), which replay seeded session traces
+through the same :class:`HydraKVScheduler` at thousands-of-sessions
+scale.  It shares the ``serve_admission`` / ``serve_step`` fault sites
+with the replay engines (``repro.exp.faults``).
 """
 from __future__ import annotations
 
@@ -61,6 +70,9 @@ class ServeEngine:
 
     # -- admission -------------------------------------------------------------
     def _admit(self, queue: List[Request]) -> None:
+        if queue and any(s.req is None for s in self.slots):
+            from repro.exp import faults
+            faults.fire("serve_admission", key=f"t{self.clock}")
         for i, slot in enumerate(self.slots):
             if slot.req is not None or not queue:
                 continue
@@ -118,6 +130,8 @@ class ServeEngine:
 
             # epoch update for the scheduler
             if self.sched is not None and self.clock % 16 == 0:
+                from repro.exp import faults
+                faults.fire("serve_step", key=f"e{self.clock // 16}")
                 need = sum(1 for s in self.slots if s.req) or 1
                 self.sched.epoch_update(
                     decoded_rate=active / max(need, 1),

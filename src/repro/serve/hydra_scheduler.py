@@ -23,8 +23,9 @@ from typing import Dict, List, Tuple
 
 import numpy as np
 
-from repro.core.apm import APMParams, APMState
+from repro.core.apm import APMState
 from repro.core.kmeans import kmeans_fit_batched
+from .knobs import SchedulerKnobs
 import jax
 import jax.numpy as jnp
 
@@ -73,8 +74,15 @@ class SessionProfile:
 class HydraKVScheduler:
     """Per-epoch residency decisions for finished-turn KV blocks.
 
+    Configured exclusively by a frozen :class:`~repro.serve.knobs.\
+SchedulerKnobs` (PR-10 serve API redesign) — named presets live in the
+    ``repro.exp.SERVE`` registry and transform tuples
+    (``("kv-default", serve.online(8))``) resolve through
+    ``serve.resolve_knobs``.  The pre-redesign kwarg constructor raises
+    a ``TypeError`` pointing there.
+
     Online-LERN analogue (ROADMAP serve item): session reuse drifts
-    within a day, so with a finite ``retrain_period`` the scheduler
+    within a day, so with a finite ``knobs.retrain_period`` the scheduler
     refits its :class:`SessionProfile` clusters every ``retrain_period``
     scheduler epochs from the (turns, gap) features observed since the
     last refit — the same batched-k-means path ``SessionProfile.fit``
@@ -83,21 +91,29 @@ class HydraKVScheduler:
     (tests/test_exp.py::test_kv_scheduler_infinite_period_is_offline).
     """
 
-    def __init__(self, *, token_budget: int, deadline_tokens: float,
-                 epoch_tokens: int = 64, params: APMParams = APMParams(),
-                 profile: SessionProfile = None,
-                 retrain_period: float = math.inf,
-                 min_refit_sessions: int = 8, seed: int = 0):
+    def __init__(self, knobs: SchedulerKnobs = None, *,
+                 profile: SessionProfile = None, **legacy):
+        if legacy or not isinstance(knobs, SchedulerKnobs):
+            bad = ", ".join(sorted(legacy)) or repr(knobs)
+            raise TypeError(
+                "HydraKVScheduler is configured by a frozen "
+                "serve.SchedulerKnobs: use HydraKVScheduler("
+                "SchedulerKnobs(token_budget=..., deadline_tokens=...), "
+                "profile=...) or a registered preset via "
+                "serve.resolve_knobs('kv-default') — the old keyword "
+                f"constructor was removed (got: {bad})")
         # APM over "tokens decoded" instead of "memory accesses completed"
-        self.apm = APMState(m_total=int(deadline_tokens),
-                            deadline=float(deadline_tokens),
-                            epoch_len=float(epoch_tokens), params=params)
-        self.token_budget = token_budget
+        self.knobs = knobs
+        self.apm = APMState(m_total=int(knobs.deadline_tokens),
+                            deadline=float(knobs.deadline_tokens),
+                            epoch_len=float(knobs.epoch_tokens),
+                            params=knobs.apm)
+        self.token_budget = knobs.token_budget
         self.profile = profile
-        self.retrain_period = float(retrain_period)
+        self.retrain_period = float(knobs.retrain_period)
         # a sparse observed window must not wipe the profile's knowledge
-        self.min_refit_sessions = int(min_refit_sessions)
-        self.seed = seed
+        self.min_refit_sessions = int(knobs.min_refit_sessions)
+        self.seed = knobs.seed
         self.ri_th, self.rc_th = 3, -1   # conservative start (keep all)
         self.resident_tokens = 0
         self.evictions = 0
@@ -158,16 +174,23 @@ class HydraKVScheduler:
     def keep_resident(self, session_turns: float, inter_turn_gap: float
                       ) -> bool:
         """Paper's bypass rule: evict iff RI_cluster > RI_Th or
-        RC_cluster < RC_Th."""
+        RC_cluster < RC_Th.  ``knobs.residency`` short-circuits it to the
+        keep-all / evict-all baselines (still counted, so the stats stay
+        comparable)."""
         if math.isfinite(self.retrain_period):
             self._window_turns.append(float(session_turns))
             self._window_gaps.append(float(inter_turn_gap))
-        if self.profile is None:
+        if self.knobs.residency == "keep-all":
+            evict = False
+        elif self.knobs.residency == "evict-all":
+            evict = True
+        elif self.profile is None:
             rc_cl, ri_cl = 2, 1
+            evict = (ri_cl > self.ri_th) or (rc_cl < self.rc_th)
         else:
             rc_cl, ri_cl = self.profile.classify(session_turns,
                                                  inter_turn_gap)
-        evict = (ri_cl > self.ri_th) or (rc_cl < self.rc_th)
+            evict = (ri_cl > self.ri_th) or (rc_cl < self.rc_th)
         if evict:
             self.evictions += 1
         else:

@@ -4,7 +4,6 @@ bitwise parity of exp.run against the pre-redesign sequential path,
 phase-drift workloads, and the serve-side online retrain hook."""
 import dataclasses
 import math
-import pickle
 
 import numpy as np
 import pytest
@@ -14,6 +13,7 @@ from repro import exp
 from repro.core import sim, tracegen, workloads
 from repro.exp.schema import validate_sweep
 from repro.serve.hydra_scheduler import HydraKVScheduler, SessionProfile
+from repro.serve.knobs import SchedulerKnobs
 
 TINY = dataclasses.replace(sim.SimParams(), n_inputs=1, max_epochs=40,
                            subsample_target=50_000)
@@ -341,10 +341,12 @@ def test_kv_scheduler_infinite_period_is_offline_bitwise():
     """retrain_period=inf (the default) must be bitwise the offline-only
     scheduler: same decision sequence, same thresholds, zero refits."""
     profile = _profile()
-    base = HydraKVScheduler(token_budget=2048, deadline_tokens=128,
-                            profile=profile)
-    inf = HydraKVScheduler(token_budget=2048, deadline_tokens=128,
-                           profile=profile, retrain_period=math.inf)
+    base = HydraKVScheduler(
+        SchedulerKnobs(token_budget=2048, deadline_tokens=128),
+        profile=profile)
+    inf = HydraKVScheduler(
+        SchedulerKnobs(token_budget=2048, deadline_tokens=128,
+                       retrain_period=math.inf), profile=profile)
     assert _drive(base) == _drive(inf)
     assert base.stats() == inf.stats()
     assert inf.refits == 0 and inf.profile is profile
@@ -352,15 +354,17 @@ def test_kv_scheduler_infinite_period_is_offline_bitwise():
 
 def test_kv_scheduler_finite_period_refits_from_observed_window():
     profile = _profile()
-    sched = HydraKVScheduler(token_budget=2048, deadline_tokens=128,
-                             profile=profile, retrain_period=4)
+    sched = HydraKVScheduler(
+        SchedulerKnobs(token_budget=2048, deadline_tokens=128,
+                       retrain_period=4), profile=profile)
     _drive(sched, n=64)
     assert sched.refits >= 1
     assert sched.profile is not profile          # swapped in place
     assert sched.profile.rc_centers.shape == (4,)
     # deterministic: same stream of sessions -> same refit trajectory
-    s2 = HydraKVScheduler(token_budget=2048, deadline_tokens=128,
-                          profile=_profile(), retrain_period=4)
+    s2 = HydraKVScheduler(
+        SchedulerKnobs(token_budget=2048, deadline_tokens=128,
+                       retrain_period=4), profile=_profile())
     _drive(s2, n=64)
     assert np.allclose(sched.profile.rc_centers, s2.profile.rc_centers)
     assert np.allclose(sched.profile.ri_centers, s2.profile.ri_centers)

@@ -28,6 +28,7 @@ from repro import exp
 from repro.core import fused, policies, sim, sweep
 from repro.exp import faults
 from repro.serve.hydra_scheduler import HydraKVScheduler, SessionProfile
+from repro.serve.knobs import SchedulerKnobs
 
 TINY = dataclasses.replace(sim.SimParams(), n_inputs=1, max_epochs=40,
                            subsample_target=50_000)
@@ -179,6 +180,43 @@ def test_worker_crash_respawns_and_stays_bitwise(tmp_path, monkeypatch,
     assert "worker_crash" in kinds
     assert report.summary()["points"] == 4
     assert all(r["source"] == "computed" for r in report.points.values())
+
+
+def test_worker_fault_events_propagate_to_parent(tmp_path, monkeypatch,
+                                                 clean_baseline):
+    """Events fired inside pool workers ride back to the parent — with
+    the result tuple on success (a ``cache_dump`` corruption while the
+    worker commits one point), inside ``sweep.TaskError`` on failure
+    (``task`` raise) — and land in the parent report tagged
+    ``origin="worker"``."""
+    monkeypatch.setattr(sim, "CACHE_DIR", str(tmp_path))
+    monkeypatch.setattr(sweep, "RETRY_BACKOFF", 0.01)
+    pts = _points()
+    plan = _plan({"site": "task", "kind": "raise"},
+                 {"site": "cache_dump", "kind": "corrupt",
+                  "match": os.path.basename(pts[0].cache_path())})
+    report = faults.RunReport()
+    with faults.activate(plan):
+        rs = sweep.map_points(pts, jobs=2, report=report)
+    for got, want in zip(rs, clean_baseline):
+        assert_bitwise(got, want, got.policy)
+    wfaults = {e["site"] for e in report.events
+               if e["kind"] == "fault" and e.get("origin") == "worker"}
+    assert {"task", "cache_dump"} <= wfaults, report.events
+    # the failed task's error surfaced as a retried TaskError
+    assert any(e["kind"] == "task_retry" and e["cause"] == "task_error"
+               for e in report.events)
+    assert not any(e.get("origin") == "worker" for e in report.events
+                   if e["kind"] == "task_retry")
+
+
+def test_task_error_pickles_with_events():
+    e = sweep.TaskError("ValueError", "boom", [{"kind": "fault",
+                                                "site": "task"}])
+    back = pickle.loads(pickle.dumps(e))
+    assert isinstance(back, sweep.TaskError)
+    assert back.cause == "ValueError" and "boom" in str(back)
+    assert back.events == e.events
 
 
 def test_task_timeout_watchdog_kills_and_retries(tmp_path, monkeypatch,
@@ -354,8 +392,9 @@ def _drive(sched, n=64, seed=0):
 
 def test_refit_failure_keeps_stale_profile(monkeypatch):
     profile = _profile()
-    sched = HydraKVScheduler(token_budget=2048, deadline_tokens=128,
-                             profile=profile, retrain_period=4)
+    sched = HydraKVScheduler(
+        SchedulerKnobs(token_budget=2048, deadline_tokens=128,
+                       retrain_period=4), profile=profile)
 
     def broken_fit(*a, **kw):
         raise ValueError("degenerate window")
@@ -370,8 +409,9 @@ def test_refit_failure_keeps_stale_profile(monkeypatch):
 
 def test_refit_injected_fault_counts_as_failure():
     profile = _profile()
-    sched = HydraKVScheduler(token_budget=2048, deadline_tokens=128,
-                             profile=profile, retrain_period=4)
+    sched = HydraKVScheduler(
+        SchedulerKnobs(token_budget=2048, deadline_tokens=128,
+                       retrain_period=4), profile=profile)
     with faults.activate(_plan({"site": "refit", "kind": "raise"})):
         _drive(sched, n=64)
     assert sched.refit_failures == 1

@@ -12,7 +12,8 @@ from repro.ckpt import CheckpointManager
 from repro.configs import ARCHS
 from repro.data import DataPipeline
 from repro.models import lm
-from repro.serve import HydraKVScheduler, Request, ServeEngine
+from repro.serve import HydraKVScheduler, SchedulerKnobs
+from repro.serve.engine import Request, ServeEngine
 from repro.train.trainer import Trainer, TrainerConfig
 
 TINY = dataclasses.replace(ARCHS["qwen3-1.7b"].reduced(), n_layers=2)
@@ -97,7 +98,8 @@ def test_elastic_reshard_restore(tmp_path):
 def test_serve_engine_with_hydra_scheduler():
     cfg = TINY
     params = lm.init_params(jax.random.PRNGKey(0), cfg)
-    sched = HydraKVScheduler(token_budget=1024, deadline_tokens=64)
+    sched = HydraKVScheduler(SchedulerKnobs(token_budget=1024,
+                                            deadline_tokens=64))
     eng = ServeEngine(cfg, params, slots=2, s_max=64, scheduler=sched)
     reqs = [Request(session_id=i, prompt=[1, 2, 3], max_new=8,
                     deadline_steps=200, arrival=i * 2,
@@ -112,10 +114,12 @@ def test_serve_engine_with_hydra_scheduler():
 
 def test_hydra_scheduler_deadline_pressure_tradeoff():
     """Behind deadline -> conservative (keep); far ahead -> aggressive."""
-    s = HydraKVScheduler(token_budget=1024, deadline_tokens=1000)
+    s = HydraKVScheduler(SchedulerKnobs(token_budget=1024,
+                                        deadline_tokens=1000))
     s.epoch_update(decoded_rate=5.0, required_rate=1.0, hbm_pressure=0.1)
     aggressive = (s.ri_th, s.rc_th)
-    s2 = HydraKVScheduler(token_budget=1024, deadline_tokens=1000)
+    s2 = HydraKVScheduler(SchedulerKnobs(token_budget=1024,
+                                         deadline_tokens=1000))
     s2.epoch_update(decoded_rate=0.2, required_rate=1.0, hbm_pressure=0.1)
     conservative = (s2.ri_th, s2.rc_th)
     assert aggressive == (-1, 4)       # bypass-all row

@@ -1,0 +1,390 @@
+"""Serving-harness suite: the seeded trace generator, the batched
+lax.scan replay engine vs the host oracle (bitwise), micro-trace
+latency/miss accounting, and the frozen ServeSpec/SchedulerKnobs API
+with its hydra-serve/v1 artifact.
+
+The parity tests are the serve-side analogue of tests/test_fused.py:
+``replay(engine="batched")`` (one super-step per scheduler epoch, one
+host sync per super-step) must equal ``replay(engine="host")`` (the
+sequential oracle, scheduler inline) on every counter, both integer
+histograms and the scheduler's own stats — across residency modes,
+admission orders and live online refits.
+"""
+import dataclasses
+import json
+
+import numpy as np
+import pytest
+
+from repro import exp, serve
+from repro.exp import faults
+from repro.exp import schema as schema_mod
+from repro.core import sim
+from repro.serve.api import _build_scheduler
+from repro.serve.hydra_scheduler import HydraKVScheduler
+from repro.serve.knobs import SchedulerKnobs
+from repro.serve.replay import ReplayResult, replay
+from repro.serve.trace import SessionTrace
+
+TRACE = serve.TraceSpec(sessions=160, rate=1.5, turns_mean=2.0,
+                        turns_sigma=0.6, gap_mean=12.0, gap_sigma=0.6,
+                        prompt_tokens=8, decode_mean=6.0, decode_sigma=0.3,
+                        deadline_factor=1.5,
+                        drift=serve.MixDrift(period=3, strength=0.6, seed=1),
+                        seed=3)
+# hydra residency with a binding budget and live online refits — the
+# hardest parity case (thresholds + cluster ids change mid-replay)
+ONLINE = SchedulerKnobs(token_budget=768, deadline_tokens=48.0,
+                        epoch_tokens=32, retrain_period=4.0,
+                        min_refit_sessions=4)
+
+
+def _tiny_spec(**kw):
+    kw.setdefault("trace", TRACE)
+    kw.setdefault("knobs", ONLINE)
+    kw.setdefault("slots", 12)
+    kw.setdefault("max_steps", 512)
+    kw.setdefault("profile_sessions", 64)
+    return serve.ServeSpec(**kw)
+
+
+def _replay_equal(a: ReplayResult, b: ReplayResult) -> bool:
+    return (a.counters == b.counters
+            and np.array_equal(a.wait_hist, b.wait_hist)
+            and np.array_equal(a.lat_hist, b.lat_hist))
+
+
+# ---------------------------------------------------------------------------
+# trace generator: determinism, drift, round-trip
+# ---------------------------------------------------------------------------
+def test_trace_determinism_and_seed_sensitivity():
+    a = serve.generate(TRACE)
+    b = serve.generate(TRACE)
+    for f in ("arrival", "turns", "gap", "prompt", "decode", "deadline",
+              "cls"):
+        assert np.array_equal(getattr(a, f), getattr(b, f)), f
+    assert a.n == TRACE.sessions
+    assert np.array_equal(a.kv, (a.prompt + a.decode).astype(np.int64))
+    c = serve.generate(dataclasses.replace(TRACE, seed=TRACE.seed + 1))
+    assert not np.array_equal(a.arrival, c.arrival)
+    # drift ramps the chatty fraction across arrival phases
+    drifted = serve.generate(dataclasses.replace(
+        TRACE, sessions=3000, drift=serve.MixDrift(period=4, strength=0.8)))
+    phases = np.array_split(drifted.cls, 4)
+    assert phases[0].mean() < phases[-1].mean()
+
+
+def test_bursty_arrivals_are_modulated():
+    spec = dataclasses.replace(TRACE, arrival="bursty", sessions=2000,
+                               rate=2.0, burst_factor=6.0, burst_period=64)
+    t = serve.generate(spec)
+    assert np.all(np.diff(t.arrival) >= 0)
+    on = (t.arrival % 64) < 32
+    assert on.mean() > 0.75          # most arrivals land in the on-phase
+    assert np.array_equal(t.arrival, serve.generate(spec).arrival)
+
+
+def test_trace_spec_roundtrip():
+    assert serve.TraceSpec.from_dict(TRACE.spec_dict()) == TRACE
+    plain = dataclasses.replace(TRACE, drift=None)
+    assert serve.TraceSpec.from_dict(plain.spec_dict()) == plain
+    with pytest.raises(ValueError, match="arrival"):
+        serve.TraceSpec(arrival="nope")
+
+
+def test_profile_features_are_held_out():
+    t, g = serve.profile_features(TRACE, 64)
+    assert t.shape == (64,) and g.shape == (64,)
+    trace = serve.generate(dataclasses.replace(TRACE, sessions=64))
+    assert not np.array_equal(t, trace.turns.astype(np.float64))
+
+
+# ---------------------------------------------------------------------------
+# batched-vs-host parity (the tentpole contract)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("knobs,admission", [
+    ("kv-default", "urgency"),
+    (ONLINE, "urgency"),             # binding budget + online refits
+    (ONLINE, "fifo"),
+    ("keep-all", "fifo"),
+    ("evict-all", "urgency"),
+])
+def test_batched_matches_host_bitwise(knobs, admission):
+    spec = _tiny_spec(knobs=knobs, admission=admission)
+    resolved = spec.resolved_knobs()
+    trace = serve.generate(spec.trace)
+    sh = _build_scheduler(spec, resolved)
+    sb = _build_scheduler(spec, resolved)
+    host = replay(trace, sh, slots=spec.slots, max_steps=spec.max_steps,
+                  admission=admission, engine="host")
+    batched = replay(trace, sb, slots=spec.slots,
+                     max_steps=spec.max_steps, admission=admission,
+                     engine="batched")
+    assert _replay_equal(host, batched), (host.counters, batched.counters)
+    assert sh.stats() == sb.stats()
+    assert host.counters["completed"] > 0
+    if knobs is ONLINE:
+        assert sh.refits >= 1        # the refit path really ran
+    if knobs == "evict-all":
+        assert host.counters["reprefills"] > 0
+        assert host.counters["resident_tokens"] == 0
+
+
+def test_replay_validates_inputs():
+    trace = serve.generate(dataclasses.replace(TRACE, sessions=8))
+    sched = HydraKVScheduler(SchedulerKnobs())
+    with pytest.raises(ValueError, match="engine"):
+        replay(trace, sched, slots=4, max_steps=64, engine="nope")
+    with pytest.raises(ValueError, match="admission"):
+        replay(trace, sched, slots=4, max_steps=64, admission="nope")
+
+
+# ---------------------------------------------------------------------------
+# micro-trace accounting: hand-computed latency / wait / miss numbers
+# ---------------------------------------------------------------------------
+def _micro_trace(arrival, turns, gap, prompt, decode, deadline):
+    n = len(arrival)
+    return SessionTrace(
+        arrival=np.asarray(arrival, np.int64),
+        turns=np.asarray(turns, np.int32),
+        gap=np.asarray(gap, np.int32),
+        prompt=np.asarray(prompt, np.int32),
+        decode=np.asarray(decode, np.int32),
+        deadline=np.asarray(deadline, np.int32),
+        cls=np.zeros(n, np.int8))
+
+
+def _micro_sched():
+    return HydraKVScheduler(SchedulerKnobs(token_budget=64, epoch_tokens=8,
+                                           residency="keep-all"))
+
+
+@pytest.mark.parametrize("engine", ["host", "batched"])
+def test_micro_trace_latency_and_miss_accounting(engine):
+    """10 single-turn sessions, all admitted at t=0: latency is exactly
+    prompt+decode=5 steps; the 3 sessions with deadline 4 miss."""
+    t = _micro_trace(arrival=[0] * 10, turns=[1] * 10, gap=[1] * 10,
+                     prompt=[2] * 10, decode=[3] * 10,
+                     deadline=[5] * 7 + [4] * 3)
+    res = replay(t, _micro_sched(), slots=16, max_steps=64, engine=engine)
+    c = res.counters
+    assert c["completed"] == 10 and c["finished"] == 10
+    assert c["missed"] == 3 and c["admits"] == 10
+    assert c["wait_sum"] == 0 and c["lat_sum"] == 50
+    assert c["decoded"] == 50 and c["steps"] == 5
+    assert c["peak_concurrent"] == 10 and c["reprefills"] == 0
+    s = res.summary()
+    assert s["dmr"] == pytest.approx(0.3)
+    assert s["p99_wait_steps"] == 0.0
+    assert s["p99_latency_steps"] == 5.0
+    assert s["mean_latency_steps"] == pytest.approx(5.0)
+    assert s["throughput_tok_per_step"] == pytest.approx(10.0)
+
+
+@pytest.mark.parametrize("engine", ["host", "batched"])
+def test_micro_trace_slot_contention_wait(engine):
+    """One slot, two equal-slack sessions: the session-id tie-break
+    admits session 0 first; session 1 waits the full 5-step service
+    time, finishing at latency 10 and missing its 5-step deadline."""
+    t = _micro_trace(arrival=[0, 0], turns=[1, 1], gap=[1, 1],
+                     prompt=[2, 2], decode=[3, 3], deadline=[5, 5])
+    res = replay(t, _micro_sched(), slots=1, max_steps=64, engine=engine)
+    c = res.counters
+    assert c["completed"] == 2 and c["missed"] == 1
+    assert c["wait_sum"] == 5 and c["admits"] == 2
+    assert c["lat_sum"] == 15          # 5 + 10
+    s = res.summary()
+    assert s["p99_wait_steps"] == 5.0
+    assert s["p99_latency_steps"] == 10.0
+    assert s["mean_wait_steps"] == pytest.approx(2.5)
+    assert s["dmr"] == pytest.approx(0.5)
+
+
+def test_p99_is_integer_exact():
+    """The histogram percentile is the exact order statistic (ceil of
+    the 99% rank), not an interpolation."""
+    def p99(pairs):
+        hist = np.zeros(512, np.int64)
+        for b, n in pairs:
+            hist[b] = n
+        return ReplayResult(counters={}, wait_hist=hist, lat_hist=hist,
+                            engine="host")._hist_pct(hist)
+    assert p99([(1, 99), (7, 1)]) == 1.0     # rank 99 of 100 -> bin 1
+    assert p99([(1, 100), (7, 2)]) == 7.0    # rank 101 of 102 -> bin 7
+    assert p99([]) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# ServeSpec / SchedulerKnobs: the frozen public configuration surface
+# ---------------------------------------------------------------------------
+def test_old_kwarg_constructor_removed():
+    with pytest.raises(TypeError, match="SchedulerKnobs"):
+        HydraKVScheduler(token_budget=2048, deadline_tokens=128)
+    with pytest.raises(TypeError, match="SchedulerKnobs"):
+        HydraKVScheduler(2048)
+    # the migration target works
+    HydraKVScheduler(SchedulerKnobs(token_budget=2048))
+
+
+def test_serve_registry_protocol():
+    from repro.exp.registry import REGISTRIES
+    assert REGISTRIES["serve"] is exp.SERVE
+    assert {"kv-default", "kv-online", "keep-all",
+            "evict-all"} <= set(exp.SERVE.names())
+    assert exp.SERVE.get("kv-online").retrain_period == 8.0
+    assert "kv-default" in exp.SERVE
+    with pytest.raises(TypeError, match="SchedulerKnobs"):
+        exp.SERVE.register("junk", 42)
+    with pytest.raises(KeyError, match="unknown serve"):
+        exp.SERVE.get("nope")
+    # transform tuples mirror the policy-axis exp.online idiom
+    assert serve.resolve_knobs(("kv-default", serve.online())) \
+        == serve.resolve_knobs("kv-online")
+    assert serve.knobs_name(("kv-default", serve.online(4))) \
+        == "kv-default-ol4"
+    assert serve.knobs_name("evict-all") == "evict-all"
+    with pytest.raises(TypeError, match="knobs"):
+        serve.resolve_knobs(3.14)
+
+
+def test_serve_spec_validation_and_grid():
+    with pytest.raises(ValueError, match="admission"):
+        serve.ServeSpec(admission="nope")
+    with pytest.raises(ValueError, match="slots"):
+        serve.ServeSpec(slots=0)
+    with pytest.raises(KeyError, match="unknown serve"):
+        serve.ServeSpec(knobs="not-registered")
+    with pytest.raises(KeyError, match="unknown serve axis"):
+        serve.grid(rate=[1.0], bogus=[1])
+    specs = serve.grid(trace=TRACE, rate=[1.0, 2.0],
+                       knobs=["kv-default", "evict-all"], slots=8)
+    assert len(specs) == 4
+    assert [s.trace.rate for s in specs] == [1.0, 1.0, 2.0, 2.0]
+    assert all(s.slots == 8 for s in specs)
+    assert specs[0].trace == dataclasses.replace(TRACE, rate=1.0)
+    assert hash(specs[0]) == hash(serve.grid(
+        trace=TRACE, rate=1.0, knobs="kv-default", slots=8)[0])
+
+
+def test_serve_spec_roundtrip_preserves_equality():
+    for spec in (_tiny_spec(), _tiny_spec(knobs="kv-online"),
+                 _tiny_spec(knobs=("kv-default", serve.online(4)))):
+        back = serve.ServeSpec.from_dict(
+            json.loads(json.dumps(spec.spec_dict())))
+        assert back.resolved_knobs() == spec.resolved_knobs()
+        assert back.trace == spec.trace
+    # registered-name specs round-trip to full equality (name preserved)
+    named = _tiny_spec(knobs="kv-online")
+    assert serve.ServeSpec.from_dict(named.spec_dict()) == named
+
+
+# ---------------------------------------------------------------------------
+# serve.run: ExecPlan routing, cache/dedup, artifact round-trip
+# ---------------------------------------------------------------------------
+def test_serve_run_host_plan_matches_batched(tmp_path, monkeypatch):
+    monkeypatch.setattr(sim, "CACHE_DIR", str(tmp_path))
+    spec = _tiny_spec()
+    rb = serve.run(spec, plan=exp.ExecPlan(cache=False)).one()
+    rh = serve.run(spec, plan=exp.ExecPlan(engine="host",
+                                           cache=False)).one()
+    assert rb["engine"] == "batched" and rh["engine"] == "host"
+    assert _replay_equal(rb["result"], rh["result"])
+    for k in ("dmr", "p99_wait_steps", "sessions_per_kstep", "refits"):
+        assert rb[k] == rh[k], k
+
+
+def test_serve_run_cache_dedup_and_manifest(tmp_path, monkeypatch):
+    monkeypatch.setattr(sim, "CACHE_DIR", str(tmp_path))
+    manifest = str(tmp_path / "serve_manifest.json")
+    spec = _tiny_spec(knobs="evict-all")
+    # an identical cell twice in one run: second is served by the memo;
+    # both land on one report key, so the dedup source is what remains
+    rs = serve.run([spec, spec], manifest=manifest)
+    assert len(rs) == 2
+    assert [r["source"] for r in rs.run_report.points.values()] == [
+        "dedup"]
+    row0, row1 = rs.to_rows()
+    assert _replay_equal(row0["result"], row1["result"])
+    # a fresh run is served from the disk cache, bitwise
+    rs2 = serve.run(spec, manifest=manifest)
+    assert [r["source"] for r in rs2.run_report.points.values()] == [
+        "cache"]
+    assert _replay_equal(rs2.one()["result"], row0["result"])
+    with open(manifest) as f:
+        doc = json.load(f)
+    assert schema_mod.validate(doc) == []
+    assert all(k.startswith("serve/") for k in doc["completed"])
+
+
+def test_serve_doc_roundtrip_and_schema(tmp_path, monkeypatch):
+    monkeypatch.setattr(sim, "CACHE_DIR", str(tmp_path))
+    specs = serve.grid(trace=TRACE, knobs=[ONLINE, "evict-all"], slots=12,
+                       max_steps=512, profile_sessions=64)
+    rs = serve.run(specs)
+    doc = json.loads(json.dumps(serve.to_serve_doc(rs, preset="test")))
+    assert doc["schema"] == serve.SERVE_SCHEMA
+    assert schema_mod.validate(doc) == []
+    back = serve.from_serve_doc(doc)
+    assert len(back) == len(rs) and back.keys == rs.keys
+    for orig, rt in zip(rs.to_rows(), back.to_rows()):
+        assert rt["point"] == orig["point"]
+        assert rt["dmr"] == orig["dmr"]
+        assert rt["engine"] == orig["engine"]
+    # the evict-all baseline misses more deadlines than the hydra rule
+    by_knobs = {r["knobs"]: r for r in rs.to_rows()}
+    assert by_knobs["evict-all"]["dmr"] > by_knobs["custom"]["dmr"]
+    with pytest.raises(ValueError, match="schema"):
+        serve.from_serve_doc({"schema": "hydra-sweep/v3", "rows": []})
+
+
+# ---------------------------------------------------------------------------
+# serve fault sites + the batched->host degradation ladder
+# ---------------------------------------------------------------------------
+def test_serve_step_fault_degrades_to_host_bitwise(tmp_path, monkeypatch):
+    monkeypatch.setattr(sim, "CACHE_DIR", str(tmp_path))
+    spec = _tiny_spec()
+    clean = serve.run(spec, plan=exp.ExecPlan(cache=False)).one()
+    assert clean["engine"] == "batched"
+    plan = faults.FaultPlan.make(
+        [{"site": "serve_step", "kind": "resource"}]).to_json()
+    rs = serve.run(spec, plan=exp.ExecPlan(cache=False, faults=plan))
+    row = rs.one()
+    assert row["engine"] == "host"
+    assert _replay_equal(clean["result"], row["result"])
+    events = rs.run_report.events
+    assert any(e["kind"] == "fault" and e["site"] == "serve_step"
+               for e in events)
+    assert any(e["kind"] == "serve_degrade" for e in events)
+
+
+def test_serve_admission_fault_fires_on_host_path():
+    spec = _tiny_spec(knobs="evict-all")
+    trace = serve.generate(spec.trace)
+    sched = _build_scheduler(spec, spec.resolved_knobs())
+    plan = faults.FaultPlan.make(
+        [{"site": "serve_admission", "kind": "raise"}])
+    with faults.activate(plan):
+        with pytest.raises(faults.InjectedFault):
+            replay(trace, sched, slots=spec.slots,
+                   max_steps=spec.max_steps, engine="host")
+    evs = faults.drain_events()
+    assert any(e["kind"] == "fault" and e["site"] == "serve_admission"
+               for e in evs)
+
+
+def test_oracle_engine_admission_site_fires():
+    """The sequential ServeEngine (the pre-redesign oracle) carries the
+    same admission fault site as the replay engines — exercised through
+    the unbound ``_admit`` so no LM weights are needed."""
+    import types
+
+    from repro.serve import engine as engine_mod
+    eng = types.SimpleNamespace(slots=[engine_mod._Slot()], clock=0)
+    plan = faults.FaultPlan.make(
+        [{"site": "serve_admission", "kind": "raise"}])
+    with faults.activate(plan):
+        with pytest.raises(faults.InjectedFault):
+            engine_mod.ServeEngine._admit(eng, [object()])
+    evs = faults.drain_events()
+    assert any(e["kind"] == "fault" and e["site"] == "serve_admission"
+               for e in evs)
